@@ -1,0 +1,25 @@
+"""Paper Fig. 2 (suppl.): leave-one-out cross-validation — cold vs the two
+prior LOO seeders (AVG, TOP) vs the paper's MIR/SIR chain."""
+from __future__ import annotations
+
+from benchmarks.bench_lib import emit
+from repro.core.cv import run_loo
+from repro.data.svm_suite import make_dataset
+
+METHODS = ("cold", "avg", "top", "mir", "sir")
+
+
+def run(quick: bool = False):
+    rows = []
+    cases = [("heart", 270, 100)] if quick else \
+        [("heart", 270, 270), ("madelon", 600, 120)]
+    for name, n, rounds in cases:
+        ds = make_dataset(name, n_override=n)
+        for method in METHODS:
+            rows.append(run_loo(ds, method=method, rounds=rounds))
+    emit("fig2_loo", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Roofline summary: aggregates results/dryrun/*.json into the per-cell
+table used by EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.bench_lib import emit
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_records(mesh: str | None = "pod16x16"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        with open(path) as fh:
+            r = json.load(fh)
+        if mesh and r.get("mesh") != mesh and r.get("status") == "ok":
+            continue
+        recs.append(r)
+    return recs
+
+
+def run(quick: bool = False):
+    rows = []
+    for r in load_records():
+        if r.get("status") != "ok":
+            if r.get("status") == "skipped":
+                rows.append({"cell": r["cell"], "status": "skipped",
+                             "dominant": "-", "compute_s": "-", "memory_s": "-",
+                             "collective_s": "-", "roofline_fraction": "-",
+                             "hbm_gb": "-", "useful_ratio": "-"})
+            continue
+        rf = r["roofline"]
+        rows.append({
+            "cell": r["cell"], "status": "ok", "dominant": rf["dominant"],
+            "compute_s": f"{rf['compute_s']:.3e}",
+            "memory_s": f"{rf['memory_s']:.3e}",
+            "collective_s": f"{rf['collective_s']:.3e}",
+            "roofline_fraction": round(rf["roofline_fraction"], 4)
+            if rf["roofline_fraction"] else "-",
+            "hbm_gb": r.get("hbm_gb_per_device", "-"),
+            "useful_ratio": round(r["useful_flops_ratio"], 3)
+            if r.get("useful_flops_ratio") else "-",
+        })
+    emit("roofline", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

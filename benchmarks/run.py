@@ -1,0 +1,37 @@
+"""Benchmark driver — one section per paper table/figure plus the roofline
+report. ``python -m benchmarks.run [--quick]`` prints CSV per section and
+writes JSON under results/bench/."""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small datasets / fewer k values")
+    ap.add_argument("--only", default=None,
+                    help="table1|table3|fig2|roofline")
+    args = ap.parse_args()
+
+    from benchmarks import fig2_loo, roofline_report, table1_kfold, table3_vary_k
+    sections = {
+        "table1": lambda: table1_kfold.run(quick=args.quick),
+        "table3": lambda: table3_vary_k.run(quick=args.quick),
+        "fig2": lambda: fig2_loo.run(quick=args.quick),
+        "roofline": lambda: roofline_report.run(quick=args.quick),
+    }
+    for name, fn in sections.items():
+        if args.only and name != args.only:
+            continue
+        print(f"\n### {name} " + "#" * 50, flush=True)
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"SECTION FAILED {name}: {type(e).__name__}: {e}",
+                  file=sys.stderr)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,38 @@
+"""Paper Table 1: k=10 cross-validation efficiency — cold (the LibSVM
+baseline) vs ATO / MIR / SIR. Columns mirror the paper: init time, solve
+("the rest") time, total SMO iterations, accuracy.
+
+Datasets are the synthetic suite at CPU-budget cardinality (DESIGN.md §8);
+each (dataset, method) runs twice and reports the warm run so jit compile
+time doesn't pollute the init-time comparison (the paper's C++ has no JIT).
+"""
+from __future__ import annotations
+
+from benchmarks.bench_lib import emit
+from repro.core.cv import run_cv
+from repro.data.svm_suite import make_dataset
+
+SIZES = {"adult": 1000, "heart": 270, "madelon": 1200, "mnist": 1000,
+         "webdata": 1000}
+METHODS = ("cold", "ato", "mir", "sir")
+
+
+def run(k: int = 10, quick: bool = False):
+    rows = []
+    names = ("heart", "madelon") if quick else tuple(SIZES)
+    for name in names:
+        ds = make_dataset(name, n_override=SIZES[name])
+        for method in METHODS:
+            run_cv(ds, k=k, method=method)          # warm the jit caches
+            rep = run_cv(ds, k=k, method=method)    # measured run
+            row = rep.row()
+            row["us_per_iteration"] = round(
+                1e6 * (rep.total_solve_time)
+                / max(rep.total_iterations, 1), 2)
+            rows.append(row)
+    emit(f"table1_k{k}", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

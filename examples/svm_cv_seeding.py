@@ -1,0 +1,40 @@
+"""End-to-end driver for the paper's full experimental protocol on one
+dataset: all four methods, fold-level detail, fault-tolerant restart demo.
+
+    PYTHONPATH=src python examples/svm_cv_seeding.py [dataset]
+"""
+import shutil
+import sys
+import tempfile
+
+from repro.checkpoint import CheckpointManager
+from repro.core.cv import run_cv
+from repro.data.svm_suite import make_dataset
+
+name = sys.argv[1] if len(sys.argv) > 1 else "madelon"
+ds = make_dataset(name, n_override=600)
+
+print(f"== {ds.name}: n={ds.n}, C={ds.C}, gamma={ds.gamma}, k=10 ==")
+for method in ("cold", "ato", "mir", "sir"):
+    rep = run_cv(ds, k=10, method=method)
+    r = rep.row()
+    print(f"{method:>5}: iters={r['iterations']:>7} init={r['init_s']:>8}s "
+          f"solve={r['solve_s']:>8}s acc={r['accuracy']}")
+    if method == "sir":
+        per_fold = [(f.fold, f.seed_from, f.n_iter) for f in rep.folds]
+        print("       per-fold (fold, seeded_from, iters):", per_fold)
+
+# ---- fault tolerance: the alpha chain doubles as the restart seed ----
+tmp = tempfile.mkdtemp()
+try:
+    mgr = CheckpointManager(tmp)
+    run_cv(ds, k=10, method="sir", checkpoint_manager=mgr)
+    # simulate losing the node after fold 7: drop the last 2 checkpoints
+    for s in mgr.all_steps()[-2:]:
+        shutil.rmtree(mgr._step_dir(s))
+    resumed = run_cv(ds, k=10, method="sir",
+                     checkpoint_manager=CheckpointManager(tmp))
+    print(f"\nrestart after failure: recomputed folds "
+          f"{[f.fold for f in resumed.folds]} only (seeded from checkpoint)")
+finally:
+    shutil.rmtree(tmp, ignore_errors=True)

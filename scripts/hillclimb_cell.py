@@ -1,0 +1,46 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Run one dry-run cell with config overrides + tag (the hillclimb driver).
+
+    python scripts/hillclimb_cell.py <arch> <shape> <tag> key=val [key=val...]
+"""  # noqa: E402
+import sys
+import warnings
+
+warnings.filterwarnings("ignore")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import json  # noqa: E402
+
+from repro.launch.dryrun import RESULTS_DIR, run_cell  # noqa: E402
+
+
+def parse(v):
+    for cast in (int, float):
+        try:
+            return cast(v)
+        except ValueError:
+            pass
+    return v
+
+
+def main():
+    arch, shape, tag = sys.argv[1:4]
+    overrides = dict(kv.split("=", 1) for kv in sys.argv[4:])
+    overrides = {k: parse(v) for k, v in overrides.items()}
+    from repro.launch.dryrun import RULES_PRESETS
+    rules = RULES_PRESETS[overrides.pop("rules", "default")]
+    rec = run_cell(arch, shape, False, os.path.abspath(RESULTS_DIR),
+                   rules=rules, overrides=overrides or None, tag=tag)
+    if rec["status"] == "ok":
+        print(json.dumps({k: rec[k] for k in
+                          ("cell", "compile_s", "analysis_compile_s",
+                           "hbm_gb_per_device", "collective_bytes_per_device",
+                           "flops_per_device", "bytes_per_device",
+                           "useful_flops_ratio", "roofline")}, indent=1))
+    else:
+        print(rec["status"], rec.get("error", ""), rec.get("trace", "")[-800:])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Regenerate the data-driven tables of EXPERIMENTS.md from results/.
+
+Prints markdown to stdout; EXPERIMENTS.md embeds the output between
+generated-table markers. Usage:
+    PYTHONPATH=src python scripts/make_experiments_tables.py
+"""
+import glob
+import json
+import os
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+BENCH = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+ARCH_ORDER = ["deepseek-v2-236b", "deepseek-v3-671b", "yi-34b", "gemma3-4b",
+              "granite-8b", "gemma-7b", "jamba-v0.1-52b",
+              "seamless-m4t-large-v2", "xlstm-125m", "qwen2-vl-2b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def recs():
+    out = {}
+    for p in glob.glob(os.path.join(DRYRUN, "*.json")):
+        with open(p) as fh:
+            r = json.load(fh)
+        out[r["cell"]] = r
+    return out
+
+
+def fmt_e(x):
+    return f"{x:.2e}" if isinstance(x, (int, float)) else "-"
+
+
+def dryrun_table(r):
+    print("\n### Dry-run matrix (compile status, both meshes)\n")
+    print("| arch | shape | 16x16 | 2x16x16 | HBM/dev (GB) | compile (s) |")
+    print("|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r1 = r.get(f"{a}__{s}__pod16x16", {})
+            r2 = r.get(f"{a}__{s}__pod2x16x16", {})
+            s1, s2 = r1.get("status", "?"), r2.get("status", "?")
+            if s1 == "skipped":
+                print(f"| {a} | {s} | skip | skip | - | - |")
+                continue
+            hbm = r1.get("hbm_gb_per_device", "-")
+            cs = r1.get("compile_s", "-")
+            print(f"| {a} | {s} | {s1} | {s2} | {hbm} | {cs} |")
+
+
+def roofline_table(r):
+    print("\n### Roofline baseline (single-pod 16x16 = 256 chips)\n")
+    print("| arch | shape | compute (s) | memory (s) | collective (s) |"
+          " dominant | roofline frac | useful FLOP ratio |")
+    print("|---|---|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            rec = r.get(f"{a}__{s}__pod16x16")
+            if not rec or rec.get("status") != "ok":
+                continue
+            rf = rec["roofline"]
+            ur = rec.get("useful_flops_ratio")
+            print(f"| {a} | {s} | {fmt_e(rf['compute_s'])} | "
+                  f"{fmt_e(rf['memory_s'])} | {fmt_e(rf['collective_s'])} | "
+                  f"{rf['dominant']} | "
+                  f"{rf['roofline_fraction']:.3f} | "
+                  f"{ur:.3f} |" if ur else "")
+    svm = [v for k, v in r.items() if k.startswith("svm-smo")]
+    for rec in sorted(svm, key=lambda x: x["cell"]):
+        rf = rec["roofline"]
+        print(f"| svm-smo (n=4M,d=512) | {rec['cell'].split('__')[-1]} | "
+              f"{fmt_e(rf['compute_s'])} | {fmt_e(rf['memory_s'])} | "
+              f"{fmt_e(rf['collective_s'])} | {rf['dominant']} | "
+              f"{rf['roofline_fraction']:.3f} | - |")
+
+
+def bench_tables():
+    for name in sorted(glob.glob(os.path.join(BENCH, "*.json"))):
+        with open(name) as fh:
+            rows = json.load(fh)
+        if not rows:
+            continue
+        print(f"\n### bench: {os.path.basename(name)[:-5]}\n")
+        cols = list(rows[0])
+        print("| " + " | ".join(cols) + " |")
+        print("|" + "---|" * len(cols))
+        for row in rows:
+            print("| " + " | ".join(str(row[c]) for c in cols) + " |")
+
+
+if __name__ == "__main__":
+    r = recs()
+    dryrun_table(r)
+    roofline_table(r)
+    bench_tables()

@@ -1,0 +1,1 @@
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES, get_config, list_configs  # noqa: F401

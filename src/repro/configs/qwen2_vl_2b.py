@@ -1,0 +1,15 @@
+"""Qwen2-VL-2B [arXiv:2409.12191; hf]. 28L, d=1536, 12H, kv=2, ffn 8960,
+vocab 151936, M-RoPE (sections 16/24/24). The vision frontend is a STUB:
+input_specs() provides precomputed patch embeddings per the assignment."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-2b", family="vlm", n_layers=28, d_model=1536, n_heads=12,
+    n_kv_heads=2, d_ff=8960, vocab_size=151_936, head_dim=128,
+    rope_kind="mrope", mrope_sections=(16, 24, 24), tie_embeddings=True,
+    rope_theta=1_000_000.0, frontend="vision_patches",
+)
+
+SMOKE = CONFIG.replace(n_layers=3, d_model=64, n_heads=4, n_kv_heads=2,
+                       d_ff=128, vocab_size=512, head_dim=32,
+                       mrope_sections=(4, 6, 6))

@@ -1,0 +1,14 @@
+"""SeamlessM4T-large-v2 [arXiv:2308.11596; hf]. Enc-dec transformer backbone:
+24 encoder + 24 decoder layers, d=1024, 16H, ffn 8192, vocab 256206. The
+audio frontend is a STUB: input_specs() provides precomputed frame
+embeddings (B, frames, d) per the assignment."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2", family="audio", n_layers=24, d_model=1024,
+    n_heads=16, n_kv_heads=16, d_ff=8192, vocab_size=256_206, head_dim=64,
+    is_encoder_decoder=True, n_enc_layers=24, frontend="audio_frames",
+)
+
+SMOKE = CONFIG.replace(n_layers=3, n_enc_layers=3, d_model=64, n_heads=4,
+                       n_kv_heads=4, d_ff=128, vocab_size=512, head_dim=16)

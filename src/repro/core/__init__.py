@@ -1,0 +1,11 @@
+"""The paper's primary contribution: alpha-seeded SVM k-fold cross-validation.
+
+Wen et al., AAAI 2017 — three seeding algorithms (ATO, MIR, SIR) that reuse
+fold h's dual solution to warm-start fold h+1, plus the two prior
+leave-one-out baselines (AVG, TOP) and the cold-start reference.
+"""
+from repro.core.seeding import (  # noqa: F401
+    cold_seed, mir_seed, sir_seed, ato_seed, avg_seed_loo, top_seed_loo,
+    water_fill, repair_equality, SEEDERS,
+)
+from repro.core.cv import run_cv, run_loo, CVReport, FoldStat  # noqa: F401

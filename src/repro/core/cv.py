@@ -1,0 +1,241 @@
+"""k-fold cross-validation driver with alpha-seed chaining.
+
+Reproduces the paper's experimental protocol: fold 0 starts cold; fold h>0
+warm-starts from the most recent completed fold via the chosen seeder. The
+driver is also the fault-tolerance unit: each completed fold is checkpointed
+(fold index + alpha + f), so a restarted job re-seeds from the last
+completed fold — the paper's own mechanism doubles as the recovery path.
+
+Straggler policy: ``strict`` (paper semantics — always seed from fold h-1)
+or ``best_available`` (seed from the nearest *completed* fold; lets the
+scheduler keep going when a fold is slow/lost; still bit-compatible results
+because seeding never changes the fixed point).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import seeding
+from repro.data.svm_suite import SVMDataset, kfold_chunks
+from repro.svm import (accuracy, bias_from_solution, init_f, kernel_matrix,
+                       predict, smo_solve, dual_objective)
+
+
+@dataclasses.dataclass
+class FoldStat:
+    fold: int
+    seed_from: int          # which fold's solution seeded this one (-1 = cold)
+    n_iter: int
+    init_time: float        # seeding + f-recompute (the paper's "init.")
+    solve_time: float       # SMO time (the paper's "the rest": train part)
+    acc_correct: int
+    acc_total: int
+    objective: float
+    converged: bool
+
+
+@dataclasses.dataclass
+class CVReport:
+    dataset: str
+    method: str
+    k: int
+    n: int
+    kernel_time: float
+    folds: list[FoldStat]
+
+    @property
+    def total_iterations(self) -> int:
+        return int(sum(f.n_iter for f in self.folds))
+
+    @property
+    def total_init_time(self) -> float:
+        return float(sum(f.init_time for f in self.folds))
+
+    @property
+    def total_solve_time(self) -> float:
+        return float(sum(f.solve_time for f in self.folds))
+
+    @property
+    def accuracy(self) -> float:
+        c = sum(f.acc_correct for f in self.folds)
+        t = sum(f.acc_total for f in self.folds)
+        return c / max(t, 1)
+
+    def row(self) -> dict:
+        return {"dataset": self.dataset, "method": self.method, "k": self.k,
+                "iterations": self.total_iterations,
+                "init_s": round(self.total_init_time, 4),
+                "solve_s": round(self.total_solve_time, 4),
+                "total_s": round(self.total_init_time + self.total_solve_time
+                                 + self.kernel_time, 4),
+                "accuracy": round(self.accuracy, 4)}
+
+
+def _transition_idx(chunks: np.ndarray, g: int, h: int):
+    """Index sets for seeding fold h from fold g's solution.
+
+    Previous train set = all \\ chunk[g]; new train set = all \\ chunk[h]:
+    T (added) = chunk[g], R (removed) = chunk[h], S = the rest.
+    """
+    k = chunks.shape[0]
+    S = np.concatenate([chunks[j] for j in range(k) if j not in (g, h)])
+    return jnp.asarray(S), jnp.asarray(chunks[h]), jnp.asarray(chunks[g])
+
+
+def run_cv(ds: SVMDataset, k: int = 10, method: str = "sir",
+           tol: float = 1e-3, max_iter: int = 5_000_000, seed: int = 0,
+           checkpoint_manager=None, straggler_policy: str = "strict",
+           unavailable_folds: frozenset[int] = frozenset(),
+           kernel_backend: str = "jnp") -> CVReport:
+    """Run alpha-seeded k-fold CV. ``unavailable_folds`` simulates stragglers/
+    failures: those folds' results are not used as seeds (best_available
+    policy then falls back to the nearest earlier completed fold)."""
+    seeder = seeding.SEEDERS[method]
+    X = jnp.asarray(ds.X)
+    y = jnp.asarray(ds.y, jnp.float64)
+
+    t0 = time.perf_counter()
+    K = kernel_matrix(X, X, kind="rbf", gamma=ds.gamma,
+                      backend=kernel_backend)
+    K.block_until_ready()
+    kernel_time = time.perf_counter() - t0
+
+    chunks = kfold_chunks(ds.n, k, seed=seed)
+    n = chunks.size  # padded n (multiple of k)
+    K = K[:n][:, :n]
+    y = y[:n]
+
+    results: dict[int, object] = {}
+    folds: list[FoldStat] = []
+    start_fold = 0
+
+    if checkpoint_manager is not None and checkpoint_manager.latest_step() is not None:
+        step, tree, extra = checkpoint_manager.restore()
+        results[extra["fold"]] = _result_from_tree(tree)
+        start_fold = extra["fold"] + 1
+
+    for h in range(start_fold, k):
+        test_idx = jnp.asarray(chunks[h])
+        train_mask = jnp.ones(n, bool).at[test_idx].set(False)
+
+        # ---- choose the seed fold (straggler policy) ----
+        completed = [g for g in sorted(results) if g not in unavailable_folds]
+        if h == 0 or method == "cold" or not completed:
+            seed_from = -1
+        elif straggler_policy == "strict":
+            seed_from = h - 1 if (h - 1) in completed else -1
+        else:  # best_available: nearest completed fold
+            seed_from = min(completed, key=lambda g: abs(h - g))
+
+        # ---- init (the paper's "init." column) ----
+        t0 = time.perf_counter()
+        if seed_from < 0:
+            alpha0 = jnp.zeros(n, K.dtype)
+            f0 = -y
+        else:
+            S_idx, R_idx, T_idx = _transition_idx(chunks, seed_from, h)
+            alpha0 = seeder(K, y, ds.C, results[seed_from], S_idx, R_idx, T_idx)
+            f0 = init_f(K, y, alpha0)
+        jax.block_until_ready((alpha0, f0))
+        init_time = time.perf_counter() - t0
+
+        # ---- solve ----
+        t0 = time.perf_counter()
+        res = smo_solve(K, y, train_mask, ds.C, alpha0, f0, tol=tol,
+                        max_iter=max_iter)
+        jax.block_until_ready(res)
+        solve_time = time.perf_counter() - t0
+
+        b = bias_from_solution(res, y, train_mask, ds.C)
+        pred = predict(K[test_idx], y, res.alpha, b)
+        correct = int(jnp.sum(pred == y[test_idx]))
+        obj = float(dual_objective(K, y, res.alpha))
+
+        folds.append(FoldStat(
+            fold=h, seed_from=seed_from, n_iter=int(res.n_iter),
+            init_time=init_time, solve_time=solve_time,
+            acc_correct=correct, acc_total=int(test_idx.shape[0]),
+            objective=obj, converged=bool(res.converged)))
+        results[h] = res
+
+        if checkpoint_manager is not None:
+            checkpoint_manager.save(
+                h, {"alpha": res.alpha, "f": res.f, "n_iter": res.n_iter,
+                    "converged": res.converged, "b_up": res.b_up,
+                    "b_low": res.b_low},
+                extra_meta={"fold": h, "method": method, "k": k,
+                            "dataset": ds.name}, blocking=False)
+
+    if checkpoint_manager is not None:
+        checkpoint_manager.wait()
+    return CVReport(dataset=ds.name, method=method, k=k, n=n,
+                    kernel_time=kernel_time, folds=folds)
+
+
+def _result_from_tree(tree):
+    from repro.svm.smo import SMOResult
+    return SMOResult(alpha=jnp.asarray(tree["alpha"]), f=jnp.asarray(tree["f"]),
+                     n_iter=jnp.asarray(tree["n_iter"]),
+                     converged=jnp.asarray(tree["converged"]),
+                     b_up=jnp.asarray(tree["b_up"]),
+                     b_low=jnp.asarray(tree["b_low"]))
+
+
+def run_loo(ds: SVMDataset, method: str = "sir", rounds: int | None = None,
+            tol: float = 1e-3, max_iter: int = 2_000_000,
+            seed: int = 0) -> dict:
+    """Leave-one-out CV (paper suppl. Fig. 2). AVG/TOP seed every round from
+    the full-data SVM; ATO/MIR/SIR chain round h from round h-1 (T = the
+    instance returned, R = the instance removed); cold starts from zero."""
+    X = jnp.asarray(ds.X)
+    y = jnp.asarray(ds.y, jnp.float64)
+    n = ds.n
+    rounds = n if rounds is None else min(rounds, n)
+
+    t_start = time.perf_counter()
+    K = kernel_matrix(X, X, kind="rbf", gamma=ds.gamma)
+    # full-data SVM (shared by AVG/TOP; also round -1 for the chain methods)
+    full = smo_solve(K, y, jnp.ones(n, bool), ds.C, jnp.zeros(n, K.dtype),
+                     -y, tol=tol, max_iter=max_iter)
+    base_iters = int(full.n_iter)
+
+    total_iters, correct = 0, 0
+    prev = full
+    prev_t = None  # index held out in the previous round (chain methods)
+    order = np.arange(rounds)
+    for t in order:
+        t_j = jnp.asarray(t)
+        mask = jnp.ones(n, bool).at[t_j].set(False)
+        if method == "cold":
+            alpha0, f0 = jnp.zeros(n, K.dtype), -y
+        elif method in ("avg", "top"):
+            fn = seeding.avg_seed_loo if method == "avg" else seeding.top_seed_loo
+            alpha0 = fn(K, y, ds.C, full.alpha, t_j)
+            f0 = init_f(K, y, alpha0)
+        else:  # chain: ato / mir / sir
+            if prev_t is None:
+                # first round: remove t from the full SVM (AVG-style entry)
+                alpha0 = seeding.avg_seed_loo(K, y, ds.C, full.alpha, t_j)
+            else:
+                S = jnp.asarray(np.delete(np.arange(n), [prev_t, t]))
+                alpha0 = seeding.SEEDERS[method](
+                    K, y, ds.C, prev, S, jnp.asarray([t]),
+                    jnp.asarray([prev_t]))
+            f0 = init_f(K, y, alpha0)
+        res = smo_solve(K, y, mask, ds.C, alpha0, f0, tol=tol,
+                        max_iter=max_iter)
+        total_iters += int(res.n_iter)
+        b = bias_from_solution(res, y, mask, ds.C)
+        pred = predict(K[t_j][None, :], y, res.alpha, b)
+        correct += int(pred[0] == y[t_j])
+        prev, prev_t = res, t
+    elapsed = time.perf_counter() - t_start
+    return {"dataset": ds.name, "method": method, "rounds": rounds,
+            "base_iterations": base_iters, "iterations": total_iters,
+            "elapsed_s": round(elapsed, 4),
+            "accuracy": round(correct / rounds, 4)}

@@ -1,0 +1,348 @@
+"""Alpha-seeding algorithms (the paper's contribution).
+
+All seeders share one contract::
+
+    alpha0 = seeder(K, y, C, prev, S_idx, R_idx, T_idx, ...)
+
+where ``prev`` is the previous fold's ``SMOResult`` (its ``f`` is globally
+consistent with its ``alpha`` for ALL instances — the solver maintains f for
+masked rows too, see ``repro.svm.smo``), and the index arrays partition the
+instance axis for the fold transition h -> h+1:
+
+* ``S_idx`` — shared instances ((k-2) chunks),
+* ``R_idx`` — removed (were in fold h's train set, become fold h+1's test),
+* ``T_idx`` — added   (fold h's test set, join fold h+1's train set).
+
+Every seeder returns ``alpha0`` that satisfies the box constraint
+``0 <= alpha <= C`` and the equality constraint ``sum(y * alpha) = 0`` over
+the NEW training set (S + T) — SMO's pairwise updates preserve the equality
+constraint, so a violated start would never be repaired by the solver.
+
+The constraint repair (paper §3 "Adjusting alpha'_T") is ``water_fill``:
+uniformly shift beta = y*alpha by a scalar c, with box clipping, where c is
+found by bisection on the monotone function sum(clip(beta - c)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.svm.smo import SMOResult
+
+_INF = jnp.inf
+
+
+# --------------------------------------------------------------------------
+# constraint repair
+# --------------------------------------------------------------------------
+
+def water_fill(beta: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
+               target: jnp.ndarray, iters: int = 100) -> jnp.ndarray:
+    """Return clip(beta - c, lo, hi) with scalar c s.t. the sum == target.
+
+    ``sum(clip(beta - c, lo, hi))`` is monotone non-increasing in c, so c is
+    found by bisection. ``target`` is clamped to the feasible [sum(lo),
+    sum(hi)] first; callers handle any residual (see ``repair_equality``).
+    """
+    target = jnp.clip(target, jnp.sum(lo), jnp.sum(hi))
+    c_lo = jnp.min(beta - hi) - 1.0   # => all at hi: sum maximal
+    c_hi = jnp.max(beta - lo) + 1.0   # => all at lo: sum minimal
+
+    def body(_, carry):
+        c_lo, c_hi = carry
+        c = 0.5 * (c_lo + c_hi)
+        s = jnp.sum(jnp.clip(beta - c, lo, hi))
+        too_big = s > target
+        return jnp.where(too_big, c, c_lo), jnp.where(too_big, c_hi, c)
+
+    c_lo, c_hi = jax.lax.fori_loop(0, iters, body, (c_lo, c_hi))
+    c = 0.5 * (c_lo + c_hi)
+    out = jnp.clip(beta - c, lo, hi)
+    # final exact touch-up on the single freest coordinate to kill bisection
+    # residue (keeps sum(y*alpha)=0 at fp-exact level for the solver)
+    resid = target - jnp.sum(out)
+    room = jnp.where(resid >= 0, hi - out, out - lo)
+    j = jnp.argmax(room)
+    fix = jnp.sign(resid) * jnp.minimum(jnp.abs(resid), room[j])
+    return out.at[j].add(fix)
+
+
+def _box(y: jnp.ndarray, C) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Box for beta = y * alpha: y=+1 -> [0, C]; y=-1 -> [-C, 0]."""
+    lo = jnp.where(y > 0, 0.0, -C)
+    hi = jnp.where(y > 0, C, 0.0)
+    return lo, hi
+
+
+def repair_equality(alpha0: jnp.ndarray, y: jnp.ndarray, C,
+                    S_idx: jnp.ndarray, T_idx: jnp.ndarray) -> jnp.ndarray:
+    """Make sum(y*alpha) over S+T exactly 0, touching T first (paper), and
+    only spilling into S in the infeasible corner case (label-skewed folds).
+    Both stages are no-ops when already satisfied."""
+    beta = y * alpha0
+    s_S = jnp.sum(beta[S_idx])
+    lo_T, hi_T = _box(y[T_idx], C)
+    beta_T = water_fill(beta[T_idx], lo_T, hi_T, -s_S)
+    alpha0 = alpha0.at[T_idx].set(y[T_idx] * beta_T)
+    # residual (only nonzero if -s_S was outside T's box-feasible range)
+    resid = s_S + jnp.sum(beta_T)
+    lo_S, hi_S = _box(y[S_idx], C)
+    beta_S = water_fill(beta[S_idx], lo_S, hi_S, jnp.sum(beta[S_idx]) - resid)
+    alpha0 = alpha0.at[S_idx].set(y[S_idx] * beta_S)
+    return alpha0
+
+
+def _bias(prev: SMOResult, y: jnp.ndarray, train_mask: jnp.ndarray, C) -> jnp.ndarray:
+    """b with f_i = b on the free set (paper Constraint 5)."""
+    free = train_mask & (prev.alpha > 0) & (prev.alpha < C)
+    nf = jnp.sum(free)
+    mean_f = jnp.sum(jnp.where(free, prev.f, 0.0)) / jnp.maximum(nf, 1)
+    return jnp.where(nf > 0, mean_f, 0.5 * (prev.b_up + prev.b_low))
+
+
+# --------------------------------------------------------------------------
+# cold start (the LibSVM baseline)
+# --------------------------------------------------------------------------
+
+def cold_seed(K, y, C, prev, S_idx, R_idx, T_idx, **_):
+    return jnp.zeros_like(y, dtype=K.dtype)
+
+
+# --------------------------------------------------------------------------
+# MIR — Multiple Instance Replacement (paper Eq. 13-18, Algorithm 2)
+# --------------------------------------------------------------------------
+
+@jax.jit
+def mir_seed(K, y, C, prev: SMOResult, S_idx, R_idx, T_idx):
+    """Keep alpha_S; solve one least-squares system for alpha'_T.
+
+    Eq. 17, divided through by y_i (Q_ij = y_i y_j K_ij), in terms of
+    beta_t = y_t alpha'_t:   K[X,T] @ beta_T  =  df + K[X,R] @ beta_R
+    plus the equality row    1^T beta_T       =  1^T beta_R
+    with df_i = b - f_i on I_u + I_l and 0 on I_m (rows i over the previous
+    training set X = S + R). Solved by lstsq; the box/equality constraints
+    are then repaired per the paper's AdjustAlpha.
+    """
+    X_idx = jnp.concatenate([S_idx, R_idx])
+    alpha, f = prev.alpha, prev.f
+    mask_prev = jnp.zeros(y.shape, bool).at[X_idx].set(True)
+    b = _bias(prev, y, mask_prev, C)
+    free = (alpha > 0) & (alpha < C)
+    df = jnp.where(free, 0.0, b - f)[X_idx]
+
+    beta_R = (y * alpha)[R_idx]
+    rhs = df + K[X_idx][:, R_idx] @ beta_R
+    A = K[X_idx][:, T_idx]
+    # append the equality constraint as one more row of the LS system
+    A_full = jnp.concatenate([A, jnp.ones((1, T_idx.shape[0]), K.dtype)], 0)
+    rhs_full = jnp.concatenate([rhs, jnp.sum(beta_R)[None]], 0)
+    beta_T, *_ = jnp.linalg.lstsq(A_full, rhs_full)
+
+    lo, hi = _box(y[T_idx], C)
+    beta_T = water_fill(jnp.clip(beta_T, lo, hi), lo, hi, jnp.sum(beta_R))
+    alpha0 = jnp.zeros_like(alpha).at[S_idx].set(alpha[S_idx])
+    alpha0 = alpha0.at[T_idx].set(y[T_idx] * beta_T)
+    return repair_equality(alpha0, y, C, S_idx, T_idx)
+
+
+# --------------------------------------------------------------------------
+# SIR — Single Instance Replacement (paper Eq. 19-21, Algorithm 3)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("fallback",))
+def sir_seed(K, y, C, prev: SMOResult, S_idx, R_idx, T_idx,
+             rng_key: jax.Array | None = None, fallback: str = "random"):
+    """Greedy replacement: each removed x_r inherits its alpha to the most
+    similar (max kernel value) unused same-label x_t, followed by constraint
+    repair.
+
+    ``fallback`` controls the label-less case (no unused same-label x_t):
+
+    * ``"random"`` — the paper's rule: a random unused pick. A sign-flipped
+      beta lands on one coordinate; the repair then shifts every T beta.
+    * ``"skip"`` — beyond-paper: drop that alpha and let the (uniform,
+      diffuse) repair absorb the mass. Avoids poisoning single coordinates
+      with large wrong-sign alphas, which SMO then diffuses over the whole
+      free set (measured in EXPERIMENTS.md §Paper-validation).
+    """
+    if rng_key is None:
+        rng_key = jax.random.PRNGKey(0)
+    m = R_idx.shape[0]
+    K_RT = K[R_idx][:, T_idx]
+    same = (y[R_idx][:, None] == y[T_idx][None, :])
+    alpha_R = prev.alpha[R_idx]
+    priority = jax.random.uniform(rng_key, (T_idx.shape[0],), K.dtype)
+
+    def body(r, carry):
+        beta_T, used = carry
+        scores = jnp.where(same[r] & ~used, K_RT[r], -_INF)
+        t_best = jnp.argmax(scores)
+        found = scores[t_best] > -_INF
+        t_rand = jnp.argmax(jnp.where(~used, priority, -_INF))
+        t = jnp.where(found, t_best, t_rand)
+        any_free = jnp.any(~used)
+        if fallback == "skip":
+            write = any_free & found
+        else:
+            write = any_free
+        beta_T = jnp.where(write,
+                           beta_T.at[t].set(y[T_idx][t] * alpha_R[r]), beta_T)
+        used = jnp.where(write, used.at[t].set(True), used)
+        return beta_T, used
+
+    beta_T, _ = jax.lax.fori_loop(
+        0, m, body, (jnp.zeros(T_idx.shape[0], K.dtype),
+                     jnp.zeros(T_idx.shape[0], bool)))
+
+    lo, hi = _box(y[T_idx], C)
+    beta_T = water_fill(jnp.clip(beta_T, lo, hi), lo, hi,
+                        jnp.sum((y * prev.alpha)[R_idx]))
+    alpha0 = jnp.zeros_like(prev.alpha).at[S_idx].set(prev.alpha[S_idx])
+    alpha0 = alpha0.at[T_idx].set(y[T_idx] * beta_T)
+    return repair_equality(alpha0, y, C, S_idx, T_idx)
+
+
+# --------------------------------------------------------------------------
+# ATO — Adjusting Alpha Towards Optimum (paper Eq. 7-11, Algorithm 1)
+# --------------------------------------------------------------------------
+
+def ato_seed(K, y, C, prev: SMOResult, S_idx, R_idx, T_idx,
+             max_steps: int = 30, tol: float = 1e-3):
+    """Karasuyama/Takeuchi-style incremental-decremental ramp.
+
+    Host-side loop (the working sets change size every step; the dense
+    (1+|M|) x |M| pseudo-inverse dominates — exactly the cost profile the
+    paper reports for ATO). Eager jnp ops; terminates when R is drained or
+    after ``max_steps`` (then clamps alpha_R to 0, as the remaining mass is
+    small) and always ends with the exact constraint repair.
+    """
+    y = jnp.asarray(y, K.dtype)
+    alpha = prev.alpha.copy()
+    f = prev.f.copy()
+    n = y.shape[0]
+    in_T = jnp.zeros(n, bool).at[T_idx].set(True)
+    in_R = jnp.zeros(n, bool).at[R_idx].set(True)
+    in_S = jnp.zeros(n, bool).at[S_idx].set(True)
+    T_active = in_T
+    R_active = in_R & (alpha > 0)
+    alpha = jnp.where(in_T, 0.0, alpha)
+
+    for _ in range(max_steps):
+        if not bool(jnp.any(R_active)) and not bool(jnp.any(T_active)):
+            break
+        train_now = in_S | (in_T & ~T_active)
+        free = train_now & (alpha > 0) & (alpha < C)
+        b = (jnp.sum(jnp.where(free, f, 0.0)) / jnp.maximum(jnp.sum(free), 1)
+             if bool(jnp.any(free)) else 0.5 * (prev.b_up + prev.b_low))
+
+        M = jnp.where(free)[0]
+        Tc = jnp.where(T_active)[0]
+        Rc = jnp.where(R_active)[0]
+        vT = C - alpha[Tc]                     # per-unit ramp-up of alpha_T
+        vR = -alpha[Rc]                        # per-unit ramp-down of alpha_R
+        # Phi = pinv([y_M; Q_MM]) [y_T y_R; Q_MT Q_MR] [C1-a_T; -a_R] (Eq.10)
+        if M.size > 0:
+            yM = y[M]
+            Q_MM = (yM[:, None] * yM[None, :]) * K[M][:, M]
+            Q_MT = (yM[:, None] * y[Tc][None, :]) * K[M][:, Tc]
+            Q_MR = (yM[:, None] * y[Rc][None, :]) * K[M][:, Rc]
+            A1 = jnp.concatenate([yM[None, :], Q_MM], 0)
+            rhs = jnp.concatenate([(y[Tc] @ vT + y[Rc] @ vR)[None],
+                                   Q_MT @ vT + Q_MR @ vR], 0)
+            Phi = jnp.linalg.pinv(A1) @ rhs
+        else:
+            Phi = jnp.zeros((0,), K.dtype)
+        # per-unit df (Eq. 11 divided by y_i): g_i = -sum_M y_m Phi_m K_im
+        #   + sum_T y_t (C-a_t) K_it - sum_R y_r a_r K_ir
+        g = (K[:, Tc] @ (y[Tc] * vT) + K[:, Rc] @ (y[Rc] * vR))
+        if M.size > 0:
+            g = g - K[:, M] @ (y[M] * Phi)
+        # step size: smallest eta>0 putting some bound instance's f at b (Eq.5)
+        bound = train_now & ~free
+        safe_g = jnp.where(jnp.abs(g) > 1e-12, g, 1.0)
+        etas = jnp.where(bound & (jnp.abs(g) > 1e-12), (b - f) / safe_g, _INF)
+        etas = jnp.where(etas > 1e-12, etas, _INF)
+        eta = float(jnp.minimum(jnp.min(etas), 1.0)) if etas.size else 1.0
+        if not jnp.isfinite(eta):
+            eta = 1.0
+        # apply
+        if M.size > 0:
+            alpha = alpha.at[M].add(-eta * Phi)
+        alpha = alpha.at[Tc].add(eta * vT)
+        alpha = alpha.at[Rc].add(eta * vR)
+        alpha = jnp.clip(alpha, 0.0, C)
+        f = f + eta * g
+        # retire drained R instances; graduate T instances that meet Eq. 5
+        R_active = R_active & (alpha > 1e-12 * max(C, 1.0))
+        fT, aT = f[Tc], alpha[Tc]
+        ok_m = (aT > 0) & (aT < C) & (jnp.abs(fT - b) <= tol)
+        ok_u = ((y[Tc] > 0) & (aT <= 0) | ((y[Tc] < 0) & (aT >= C))) & (fT >= b - tol)
+        ok_l = ((y[Tc] > 0) & (aT >= C) | ((y[Tc] < 0) & (aT <= 0))) & (fT <= b + tol)
+        T_active = T_active.at[Tc].set(~(ok_m | ok_u | ok_l))
+        if eta >= 1.0:
+            break
+
+    alpha = jnp.where(in_R, 0.0, alpha)   # R must leave the training set
+    return repair_equality(alpha, y, C, S_idx, T_idx)
+
+
+# --------------------------------------------------------------------------
+# LOO baselines: AVG (DeCoste & Wagstaff 2000) and TOP (Lee et al. 2004)
+# --------------------------------------------------------------------------
+
+@jax.jit
+def avg_seed_loo(K, y, C, alpha, t: jnp.ndarray):
+    """Remove instance t; distribute beta_t = y_t alpha_t uniformly over the
+    free set, iterating the spill of box-clipped excess (paper suppl.)."""
+    beta = y * alpha
+    resid = beta[t]
+    beta = beta.at[t].set(0.0)
+    lo, hi = _box(y, C)
+    lo = lo.at[t].set(0.0)
+    hi = hi.at[t].set(0.0)
+    free0 = (alpha > 0) & (alpha < C)
+    free0 = free0.at[t].set(False)
+
+    def body(_, carry):
+        beta, resid = carry
+        room = jnp.where(resid >= 0, hi - beta, beta - lo)
+        can = free0 & (room > 1e-15)
+        d = jnp.maximum(jnp.sum(can), 1)
+        share = resid / d
+        add = jnp.clip(jnp.where(can, share, 0.0),
+                       -(beta - lo), hi - beta)
+        beta = beta + add
+        return beta, resid - jnp.sum(add)
+
+    beta, resid = jax.lax.fori_loop(0, 8, body, (beta, resid))
+    alpha0 = y * water_fill(beta, lo, hi, 0.0)
+    return alpha0
+
+
+@jax.jit
+def top_seed_loo(K, y, C, alpha, t: jnp.ndarray):
+    """Remove instance t; spill beta_t into instances by descending kernel
+    similarity K(x_j, x_t) until absorbed (paper suppl., TOP)."""
+    beta = y * alpha
+    resid = beta[t]
+    beta = beta.at[t].set(0.0)
+    lo, hi = _box(y, C)
+    lo = lo.at[t].set(0.0)
+    hi = hi.at[t].set(0.0)
+    sim = K[:, t].at[t].set(-_INF)
+    order = jnp.argsort(-sim)
+
+    def body(i, carry):
+        beta, resid = carry
+        j = order[i]
+        room = jnp.where(resid >= 0, hi[j] - beta[j], lo[j] - beta[j])
+        take = jnp.clip(resid, jnp.minimum(room, 0.0), jnp.maximum(room, 0.0))
+        return beta.at[j].add(take), resid - take
+
+    beta, resid = jax.lax.fori_loop(0, y.shape[0] - 1, body, (beta, resid))
+    return y * water_fill(beta, lo, hi, 0.0)
+
+
+SEEDERS = {"cold": cold_seed, "ato": ato_seed, "mir": mir_seed, "sir": sir_seed}

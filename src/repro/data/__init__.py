@@ -1,0 +1,2 @@
+from repro.data.svm_suite import SVMDataset, make_dataset, kfold_chunks, DATASETS  # noqa: F401
+from repro.data.tokens import synthetic_token_batch, token_stream  # noqa: F401

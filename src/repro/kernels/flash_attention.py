@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: causal / sliding-window flash attention (forward).
+
+Blockwise online-softmax: the grid is (batch*heads, Sq/BQ, Skv/BK) with the
+kv axis innermost; running max m, normalizer l, and the output accumulator
+live in VMEM scratch across kv steps. Causal and sliding-window masks are
+applied per tile, and fully-masked tiles are skipped by the index map domain
+(upper-triangular tiles never run for causal=True).
+
+This is the TPU fast path for every full-attention arch in the zoo; the XLA
+einsum path in repro.models.attention is the oracle it is tested against
+(interpret mode, shape/dtype sweep in tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale, bq, bk, n_kv_steps, causal, window, kv_len):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                  # (BQ, D)
+    k = k_ref[0]                                  # (BK, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < kv_len            # padded kv rows never contribute
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, _NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kv_steps - 1)
+    def _finalize():
+        o_ref[0, ...] = (acc_ref[...]
+                         / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None, bq=128, bk=128,
+                    interpret=True):
+    """q,k,v: (B, H, S, D) -> (B, H, S, D). GQA callers broadcast kv heads
+    before the call (or pass H=KV groups)."""
+    B, H, S, D = q.shape
+    T = k.shape[2]
+    pad_q = (-S) % bq
+    pad_k = (-T) % bk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    Sq, Sk = S + pad_q, T + pad_k
+    qp = qp.reshape(B * H, Sq, D)
+    kp = kp.reshape(B * H, Sk, D)
+    vp = vp.reshape(B * H, Sk, D)
+    n_kv = Sk // bk
+    scale = float(1.0 / math.sqrt(D))
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, bq=bq, bk=bk,
+                          n_kv_steps=n_kv, causal=causal, window=window,
+                          kv_len=T),
+        grid=(B * H, Sq // bq, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out.reshape(B, H, Sq, D)[:, :, :S]

@@ -1,0 +1,287 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and capture memory/cost/collective evidence.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only]
+
+Results are cached as JSON under results/dryrun/<cell>.json; the roofline
+report (launch/roofline.py, EXPERIMENTS.md) reads from there.
+"""  # noqa: E402
+import argparse
+import json
+import time
+import traceback
+import warnings
+
+warnings.filterwarnings("ignore")
+
+import jax                                    # noqa: E402
+import jax.numpy as jnp                       # noqa: E402
+
+from repro.configs import SHAPES, get_config  # noqa: E402
+from repro.configs.base import ARCH_IDS       # noqa: E402
+from repro.launch import inputs as inp        # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.roofline import (collective_bytes_from_hlo, roofline_terms,  # noqa: E402
+                                   scan_correction_flops)
+from repro.models import abstract_params, model_params_def  # noqa: E402
+from repro.models.transformer import active_params, cache_def, count_params  # noqa: E402
+from repro.serving.decode import build_serve_step, prefill_logits  # noqa: E402
+from repro.sharding import DEFAULT_RULES, logical_to_pspec  # noqa: E402
+from repro.models.params import param_specs  # noqa: E402
+from repro.training import build_train_step, get_optimizer  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+# ------------------------------------------------------------------------
+# cell policy
+# ------------------------------------------------------------------------
+
+SUBQUADRATIC = {"gemma3-4b", "jamba-v0.1-52b", "xlstm-125m"}
+
+# Named sharding-rule presets (hillclimb levers; scripts/hillclimb_cell.py
+# selects with rules=<name>).
+RULES_PRESETS = {
+    "default": DEFAULT_RULES,
+    # pure data parallelism over every mesh axis — the right layout for
+    # sub-1B models where TP all-reduces dwarf compute (xlstm hillclimb)
+    "dp_only": {**DEFAULT_RULES,
+                "batch": ("pod", "data", "model"),
+                "heads_act": None, "vocab_act": None, "exp_act": None,
+                "embed": None, "embed_tp": ("pod", "data"),
+                "heads": None, "kv_heads": None, "mlp": ("pod", "data"),
+                "vocab": ("pod", "data"), "experts": None},
+    # DP for the transformer body, vocab/logits stay model-sharded (the
+    # HC-3 iteration-2 layout: avoids both TP activation all-reduces AND
+    # replicated-logits blowup)
+    "dp_body": {**DEFAULT_RULES,
+                "heads_act": None, "exp_act": None,
+                "embed": None, "embed_tp": None,
+                "heads": None, "kv_heads": None, "mlp": None,
+                "experts": None},
+}
+
+# arch -> optimizer (HBM-fit choice, see DESIGN.md / EXPERIMENTS.md)
+OPTIMIZER = {
+    "deepseek-v2-236b": "adafactor",
+    "deepseek-v3-671b": "adafactor",
+    "jamba-v0.1-52b": "adafactor",
+    "yi-34b": "adafactor",
+}
+ACCUM_DTYPE = {"deepseek-v3-671b": jnp.bfloat16, "deepseek-v2-236b": jnp.bfloat16}
+
+
+def applicable(arch: str, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and arch not in SUBQUADRATIC:
+        return False, ("full-attention arch: 500k-token cell requires "
+                       "sub-quadratic attention (DESIGN.md SArch-applicability)")
+    return True, ""
+
+
+def runtime_choices(arch, shape, multi_pod):
+    data_shards = 32 if multi_pod else 16
+    per_shard = max(shape.global_batch // data_shards, 1)
+    n_micro = per_shard  # 1 sample per shard per microbatch
+    return {"optimizer": OPTIMIZER.get(arch, "adamw"),
+            "n_microbatches": n_micro,
+            "accum_dtype": ACCUM_DTYPE.get(arch, jnp.float32)}
+
+
+# ------------------------------------------------------------------------
+# lowering
+# ------------------------------------------------------------------------
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               rules=None, overrides=None, analysis: bool = False):
+    """Lower one cell. ``analysis=True`` unrolls every layer scan and uses
+    n_microbatches=1 so cost_analysis/collective counts are per-step exact
+    (XLA counts while bodies once); the default rolled lowering is the
+    runtime artifact whose memory_analysis/compile success is the deliverable."""
+    from repro.models import transformer as T
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    if shape_name == "long_500k":
+        cfg = cfg.replace(decode_kv_shard="seq")
+    shape = SHAPES[shape_name]
+    rules = rules or DEFAULT_RULES
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    T.ANALYSIS_UNROLL = analysis
+
+    try:
+        with jax.sharding.set_mesh(mesh):
+            params_abs = abstract_params(model_params_def(cfg),
+                                         jnp.bfloat16, mesh, rules)
+            if shape.kind == "train":
+                rc = runtime_choices(arch, shape, multi_pod)
+                opt = get_optimizer(rc["optimizer"])
+                opt_abs = jax.eval_shape(opt.init, params_abs)
+                axes = opt.state_axes(param_specs(model_params_def(cfg)))
+                opt_abs = jax.tree.map(
+                    lambda s, a: jax.ShapeDtypeStruct(
+                        s.shape, s.dtype,
+                        sharding=jax.sharding.NamedSharding(
+                            mesh, logical_to_pspec(a, rules, mesh,
+                                                   shape=s.shape))),
+                    opt_abs, axes,
+                    is_leaf=lambda x: isinstance(x, tuple) and not any(
+                        hasattr(e, "shape") for e in x))
+                batch = inp.batch_specs(cfg, shape, mesh, rules)
+                n_micro = 1 if analysis else rc["n_microbatches"]
+                step = build_train_step(cfg, rules, opt,
+                                        n_microbatches=n_micro,
+                                        accum_dtype=rc["accum_dtype"])
+                jitted = jax.jit(step, donate_argnums=(0, 1))
+                lowered = jitted.lower(params_abs, opt_abs, batch)
+            elif shape.kind == "prefill":
+                batch = inp.batch_specs(cfg, shape, mesh, rules)
+                jitted = jax.jit(lambda p, b: prefill_logits(p, b, cfg, rules))
+                lowered = jitted.lower(params_abs, batch)
+            else:  # decode
+                cache_abs = abstract_params(
+                    cache_def(cfg, shape.global_batch, shape.seq_len,
+                              enc_len=inp.ENC_LEN),
+                    jnp.bfloat16, mesh, rules)
+                batch = inp.decode_batch_specs(cfg, shape, mesh, rules)
+                step = build_serve_step(cfg, rules)
+                jitted = jax.jit(step, donate_argnums=(1,))
+                lowered = jitted.lower(params_abs, cache_abs, batch)
+    finally:
+        T.ANALYSIS_UNROLL = False
+    return cfg, shape, mesh, lowered
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             rules=None, overrides=None, tag="", skip_analysis=False) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    out_path = os.path.join(out_dir, cell_id + ".json")
+    ok, reason = applicable(arch, shape_name)
+    if not ok:
+        rec = {"cell": cell_id, "status": "skipped", "reason": reason}
+        _save(out_path, rec)
+        return rec
+
+    try:
+        # ---- runtime artifact: rolled scans, microbatched, donated ----
+        t0 = time.perf_counter()
+        cfg, shape, mesh, lowered = lower_cell(arch, shape_name, multi_pod,
+                                               rules, overrides)
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+        mem = compiled.memory_analysis()
+        mem_rec = {k: getattr(mem, k, None)
+                   for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                             "temp_size_in_bytes", "alias_size_in_bytes")}
+        hbm_gb = ((mem_rec.get("argument_size_in_bytes") or 0)
+                  + (mem_rec.get("temp_size_in_bytes") or 0)
+                  - (mem_rec.get("alias_size_in_bytes") or 0)
+                  + (mem_rec.get("output_size_in_bytes") or 0)) / 1e9
+        del compiled, lowered
+
+        # ---- analysis artifact: unrolled, exact per-step cost ----
+        n_dev = mesh.size
+        if skip_analysis:
+            cost, coll, t_acompile = {}, {"total_bytes": 0.0, "by_kind": {}}, None
+        else:
+            t0 = time.perf_counter()
+            _, _, _, alow = lower_cell(arch, shape_name, multi_pod, rules,
+                                       overrides, analysis=True)
+            acomp = alow.compile()
+            t_acompile = time.perf_counter() - t0
+            cost = acomp.cost_analysis() or {}
+            coll = collective_bytes_from_hlo(acomp.as_text())
+            del acomp, alow
+
+        flops_per_dev = float(cost.get("flops", 0.0))
+        flops_per_dev += scan_correction_flops(cfg, shape, n_dev)
+        bytes_per_dev = float(cost.get("bytes accessed", 0.0))
+        tokens = shape.global_batch * (shape.seq_len
+                                       if shape.kind in ("train", "prefill")
+                                       else 1)
+        n_active = active_params(cfg)
+        model_flops = (6.0 if shape.kind == "train" else 2.0) * n_active * tokens
+        rec = {
+            "cell": cell_id, "status": "ok", "arch": arch,
+            "shape": shape_name, "mesh": mesh_name, "n_devices": n_dev,
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "analysis_compile_s": round(t_acompile, 1) if t_acompile else None,
+            "params_total": count_params(cfg), "params_active": n_active,
+            "tokens_per_step": tokens,
+            "flops_per_device": flops_per_dev,
+            "flops_global": flops_per_dev * n_dev,
+            "bytes_per_device": bytes_per_dev,
+            "collective_bytes_per_device": coll["total_bytes"],
+            "collectives": coll["by_kind"],
+            "memory": mem_rec, "hbm_gb_per_device": round(hbm_gb, 3),
+            "model_flops": model_flops,
+            "useful_flops_ratio": (model_flops / (flops_per_dev * n_dev))
+            if flops_per_dev else None,
+            "roofline": roofline_terms(flops_per_dev, bytes_per_dev,
+                                       coll["total_bytes"]),
+        }
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec = {"cell": cell_id, "status": "error",
+               "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-2000:]}
+    _save(out_path, rec)
+    return rec
+
+
+def _save(path, rec):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as fh:
+        json.dump(rec, fh, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(RESULTS_DIR))
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--skip-analysis", action="store_true",
+                    help="runtime lowering only (compile + memory evidence); "
+                         "roofline terms come from depth-extrapolated runs")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                cell = f"{arch}__{shape}__{mesh_name}"
+                path = os.path.join(args.out, cell + ".json")
+                if os.path.exists(path) and not args.force:
+                    with open(path) as fh:
+                        rec = json.load(fh)
+                    if rec.get("status") in ("ok", "skipped"):
+                        print(f"[cached] {cell}: {rec['status']}")
+                        continue
+                rec = run_cell(arch, shape, mp, args.out,
+                               skip_analysis=args.skip_analysis)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f" dominant={r['dominant']}"
+                             f" compile={rec['compile_s']}s")
+                elif status == "error":
+                    extra = " " + rec["error"][:120]
+                print(f"[{status}] {cell}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

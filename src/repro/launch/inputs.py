@@ -1,0 +1,86 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) dry-run cell.
+
+Weak-type-correct, shardable, zero allocation. Modality frontends are stubs
+per the assignment: seamless gets precomputed audio-frame embeddings,
+qwen2-vl gets precomputed vision-patch embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.sharding import logical_to_pspec
+
+ENC_LEN = 4096       # stubbed audio-frame count (seamless)
+N_PATCHES = 256      # stubbed vision patches (qwen2-vl)
+
+
+def _sds(shape, dtype, axes, mesh, rules):
+    sharding = None
+    if mesh is not None:
+        sharding = NamedSharding(mesh, logical_to_pspec(axes, rules, mesh,
+                                                        shape=shape))
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh=None, rules=None,
+                dtype=jnp.bfloat16):
+    """Abstract batch for train/prefill (full sequence)."""
+    B, S = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": _sds((B, S), jnp.int32, ("batch", "seq"), mesh, rules),
+    }
+    if shape.kind == "train":
+        specs["targets"] = _sds((B, S), jnp.int32, ("batch", "seq"), mesh, rules)
+        specs["mask"] = _sds((B, S), jnp.float32, ("batch", "seq"), mesh, rules)
+    if cfg.is_encoder_decoder:
+        specs["frames"] = _sds((B, min(S, ENC_LEN), cfg.d_model), dtype,
+                               ("batch", "seq", "embed_act"), mesh, rules)
+    if cfg.frontend == "vision_patches":
+        specs["patch_embeds"] = _sds((B, N_PATCHES, cfg.d_model), dtype,
+                                     ("batch", None, "embed_act"), mesh, rules)
+    if cfg.rope_kind == "mrope":
+        specs["positions"] = _sds((B, 3, S), jnp.int32,
+                                  ("batch", None, "seq"), mesh, rules)
+    return specs
+
+
+def decode_batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh=None,
+                       rules=None, dtype=jnp.bfloat16):
+    """Abstract one-token decode batch: the KV cache holds shape.seq_len."""
+    B = shape.global_batch
+    specs = {
+        "tokens": _sds((B, 1), jnp.int32, ("batch", None), mesh, rules),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if cfg.is_encoder_decoder:
+        specs["enc_out"] = _sds((B, ENC_LEN, cfg.d_model), dtype,
+                                ("batch", None, "embed_act"), mesh, rules)
+    if cfg.rope_kind == "mrope":
+        specs["positions"] = _sds((B, 3, 1), jnp.int32,
+                                  ("batch", None, None), mesh, rules)
+    return specs
+
+
+def concrete_batch(cfg: ModelConfig, batch: int, seq: int, seed=0,
+                   dtype=jnp.float32):
+    """Small REAL batch for smoke tests / examples (reduced configs)."""
+    from repro.data.tokens import synthetic_token_batch
+    import numpy as np
+    b = synthetic_token_batch(cfg.vocab_size, batch, seq, seed=seed)
+    out = {k: jnp.asarray(v) for k, v in b.items()}
+    if cfg.is_encoder_decoder:
+        rng = np.random.default_rng(seed)
+        out["frames"] = jnp.asarray(
+            rng.normal(size=(batch, max(seq // 2, 4), cfg.d_model)) * 0.02, dtype)
+    if cfg.frontend == "vision_patches":
+        rng = np.random.default_rng(seed + 1)
+        n_p = min(8, seq // 2)
+        out["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(batch, n_p, cfg.d_model)) * 0.02, dtype)
+    if cfg.rope_kind == "mrope":
+        pos = jnp.broadcast_to(jnp.arange(seq)[None, None], (batch, 3, seq))
+        out["positions"] = pos.astype(jnp.int32)
+    return out

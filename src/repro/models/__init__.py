@@ -1,0 +1,4 @@
+from repro.models.params import ParamDef, init_params, abstract_params, param_specs  # noqa: F401
+from repro.models.transformer import (  # noqa: F401
+    build_model, model_params_def, init_cache, count_params, active_params,
+)

@@ -1,0 +1,285 @@
+"""Attention: GQA / MHA, sliding-window (chunked, sub-quadratic), MLA
+(DeepSeek multi-head latent attention with the absorbed decode path), and
+single-token decode against a KV cache (head- or sequence-sharded).
+
+The XLA einsum path here is the dry-run/roofline path; the Pallas flash
+kernel (repro.kernels.flash_attention) is the TPU fast path and is validated
+against this module's math in tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, rmsnorm, rmsnorm_def
+from repro.models.params import ParamDef
+from repro.sharding import constrain
+
+_NEG = -1e30
+
+
+def _softcap(x, cap):
+    return jnp.tanh(x / cap) * cap if cap else x
+
+
+# =========================================================== core maths ====
+
+def sdpa(q, k, v, *, causal=True, q_offset=0, window=None, softcap=None,
+         kv_len=None, rules=None):
+    """Grouped-query attention. q: (B,S,H,D); k, v: (B,T,KV,D).
+
+    ``q_offset``: absolute position of q[0] (decode: the current step).
+    ``kv_len``: number of valid cache rows (decode masking).
+    """
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, D)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(D).astype(jnp.float32)
+    scores = _softcap(scores, softcap)
+    T = k.shape[1]
+    qpos = jnp.arange(S)[:, None] + q_offset
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    if kv_len is not None:
+        mask &= kpos < kv_len
+    scores = jnp.where(mask[None, None, None], scores, _NEG)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    out = out.reshape(B, S, H, v.shape[-1])   # v head-dim may differ (MLA)
+    return constrain(out, ("batch", "seq", "heads_act", None), rules)
+
+
+def sdpa_q_chunked(q, k, v, *, causal=True, window=None, softcap=None,
+                   q_chunk=2048, rules=None):
+    """Flash-style memory bound on the XLA path: queries are processed in
+    chunks of ``q_chunk`` sequentially (lax.map), so only one chunk's
+    (B,KV,G,C,T) score block is ever live — prefill memory drops from
+    O(S^2) to O(S*C) per layer. FLOPs unchanged. The Pallas flash kernel is
+    the TPU fast path; this is its XLA twin for the dry-run/roofline."""
+    from repro.models import transformer as _T
+    B, S, H, D = q.shape
+    pad = (-S) % q_chunk
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = qp.shape[1] // q_chunk
+    qc = jnp.moveaxis(qp.reshape(B, nc, q_chunk, H, D), 1, 0)
+    offsets = jnp.arange(nc) * q_chunk
+
+    def one(args):
+        qi, off = args
+        return sdpa(qi, k, v, causal=causal, q_offset=off, window=window,
+                    softcap=softcap, kv_len=S, rules=rules)
+
+    if _T.ANALYSIS_UNROLL:   # exact per-step flops (see dryrun analysis mode)
+        outs = [one((qc[i], offsets[i])) for i in range(nc)]
+        out = jnp.stack(outs, 0)
+    else:
+        out = jax.lax.map(one, (qc, offsets))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, nc * q_chunk, H, -1)[:, :S]
+    return out
+
+
+def sdpa_local_chunked(q, k, v, *, window, softcap=None, rules=None):
+    """Sliding-window attention computed block-band-wise: each width-W chunk
+    of queries attends to its own and the previous chunk only — O(S*W)
+    compute instead of the O(S^2) naive masked form (honest roofline FLOPs
+    for gemma3's 5:1 local layers at 32k/500k context)."""
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    W = window
+    if S % W:
+        pad = W - S % W
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = q.shape[1]
+    nc = Sp // W
+    G = H // KV
+    qc = q.reshape(B, nc, W, KV, G, D)
+    kc = k.reshape(B, nc, W, KV, D)
+    vc = v.reshape(B, nc, W, KV, D)
+    zeros = jnp.zeros_like(kc[:, :1])
+    k2 = jnp.concatenate([jnp.concatenate([zeros, kc[:, :-1]], 1), kc], 2)
+    v2 = jnp.concatenate([jnp.concatenate([jnp.zeros_like(vc[:, :1]),
+                                           vc[:, :-1]], 1), vc], 2)
+    scores = jnp.einsum("bcskgd,bctkd->bckgst", qc, k2).astype(jnp.float32)
+    scores = _softcap(scores / jnp.sqrt(D).astype(jnp.float32), softcap)
+    qpos = jnp.arange(W)[:, None] + W            # within the 2W k-window
+    kpos = jnp.arange(2 * W)[None, :]
+    first = jnp.arange(nc) == 0                  # chunk 0 has no predecessor
+    mask = (kpos <= qpos) & (kpos > qpos - W)    # causal, width-W band
+    valid0 = kpos >= W
+    mask = jnp.where(first[:, None, None], mask & valid0, mask)  # (nc,W,2W)
+    scores = jnp.where(mask[None, :, None, None], scores, _NEG)
+    probs = jax.nn.softmax(scores, -1).astype(q.dtype)
+    out = jnp.einsum("bckgst,bctkd->bcskgd", probs, v2)
+    out = out.reshape(B, Sp, H, D)[:, :S]
+    return constrain(out, ("batch", "seq", "heads_act", None), rules)
+
+
+# ======================================================== GQA attention ====
+
+def gqa_def(cfg):
+    D, H, KV, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    return {
+        "wq": ParamDef((D, H, Dh), ("embed", "heads", None)),
+        "wk": ParamDef((D, KV, Dh), ("embed", "kv_heads", None)),
+        "wv": ParamDef((D, KV, Dh), ("embed", "kv_heads", None)),
+        "wo": ParamDef((H, Dh, D), ("heads", None, "embed_tp")),
+    }
+
+
+def gqa_apply(params, x, positions, cfg, *, window=None, rules=None,
+              cache=None, step=None, cross_kv=None, causal=True):
+    """Returns (out, new_cache). Modes:
+    * train/prefill: cache=None — full (or chunked-local) attention;
+    * decode: cache={'k','v'} (B,Smax,KV,Dh), step = current length;
+    * cross-attention: cross_kv = (k, v) precomputed from the encoder.
+    """
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    q = constrain(q, ("batch", "seq", "heads_act", None), rules)
+    if cross_kv is not None:
+        k, v = cross_kv
+        out = sdpa(q, k, v, causal=False, rules=rules)
+        return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), cache
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if positions is not None:
+        q = apply_rope(q, positions, cfg)
+        k = apply_rope(k, positions, cfg)
+    if cache is None:
+        if window is not None and S > 2 * window:
+            out = sdpa_local_chunked(q, k, v, window=window,
+                                     softcap=cfg.attn_logit_softcap,
+                                     rules=rules)
+        elif cfg.attn_q_chunk and S > 2 * cfg.attn_q_chunk:
+            out = sdpa_q_chunked(q, k, v, causal=causal, window=window,
+                                 softcap=cfg.attn_logit_softcap,
+                                 q_chunk=cfg.attn_q_chunk, rules=rules)
+        else:
+            out = sdpa(q, k, v, causal=causal, window=window,
+                       softcap=cfg.attn_logit_softcap, rules=rules)
+        new_cache = None
+    else:
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, step, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, step, axis=1)
+        kv_axes = ("batch", "seq_model" if cfg.decode_kv_shard == "seq"
+                   else "seq", "kv_heads", None)
+        kc = constrain(kc, kv_axes, rules)
+        vc = constrain(vc, kv_axes, rules)
+        out = sdpa(q, kc, vc, causal=True, q_offset=step, window=window,
+                   softcap=cfg.attn_logit_softcap, kv_len=step + S,
+                   rules=rules)
+        new_cache = {"k": kc, "v": vc}
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return constrain(y, ("batch", "seq", "embed_act"), rules), new_cache
+
+
+def gqa_cache_def(cfg, batch, max_len):
+    KV, Dh = cfg.n_kv_heads, cfg.head_dim_
+    kv_axes = ("batch", "seq_model" if cfg.decode_kv_shard == "seq" else "seq",
+               "kv_heads", None)
+    return {"k": ParamDef((batch, max_len, KV, Dh), kv_axes, init="zeros"),
+            "v": ParamDef((batch, max_len, KV, Dh), kv_axes, init="zeros")}
+
+
+# ======================================================== MLA attention ====
+
+def mla_def(cfg):
+    D, H = cfg.d_model, cfg.n_heads
+    nope, rope_d, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    p = {
+        "w_dkv": ParamDef((D, cfg.kv_lora_rank), ("embed", "kv_lora")),
+        "kv_norm": rmsnorm_def(cfg.kv_lora_rank),
+        "w_kr": ParamDef((D, rope_d), ("embed", None)),
+        "w_uk": ParamDef((cfg.kv_lora_rank, H, nope), ("kv_lora", "heads", None)),
+        "w_uv": ParamDef((cfg.kv_lora_rank, H, vd), ("kv_lora", "heads", None)),
+        "w_o": ParamDef((H, vd, D), ("heads", None, "embed_tp")),
+    }
+    if cfg.q_lora_rank:
+        p["w_dq"] = ParamDef((D, cfg.q_lora_rank), ("embed", "q_lora"))
+        p["q_norm"] = rmsnorm_def(cfg.q_lora_rank)
+        p["w_uq"] = ParamDef((cfg.q_lora_rank, H, nope + rope_d),
+                             ("q_lora", "heads", None))
+    else:
+        p["w_q"] = ParamDef((D, H, nope + rope_d), ("embed", "heads", None))
+    return p
+
+
+def _mla_q(params, x, positions, cfg, rules):
+    nope = cfg.qk_nope_dim
+    if cfg.q_lora_rank:
+        qa = rmsnorm(params["q_norm"], jnp.einsum("bsd,dr->bsr", x, params["w_dq"]),
+                     cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", qa, params["w_uq"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["w_q"])
+    q = constrain(q, ("batch", "seq", "heads_act", None), rules)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg)
+    return q_nope, q_rope
+
+
+def mla_apply(params, x, positions, cfg, *, rules=None, cache=None, step=None,
+              window=None, causal=True):
+    """MLA. Prefill caches/computes the full per-head K/V; decode runs the
+    ABSORBED path: only the rank-512 latent + rope-key are cached (the
+    paper-exact serving trick: 576 floats/token instead of 2*H*128),
+    and W_UK/W_UV are folded into the score/value einsums."""
+    B, S, _ = x.shape
+    nope = cfg.qk_nope_dim
+    q_nope, q_rope = _mla_q(params, x, positions, cfg, rules)
+    c = rmsnorm(params["kv_norm"], jnp.einsum("bsd,dr->bsr", x, params["w_dkv"]),
+                cfg.norm_eps)
+    kr = apply_rope(jnp.einsum("bsd,dr->bsr", x, params["w_kr"])[:, :, None, :],
+                    positions, cfg)[:, :, 0, :]
+    if cache is None:
+        k_nope = jnp.einsum("bsr,rhk->bshk", c, params["w_uk"])
+        v = jnp.einsum("bsr,rhv->bshv", c, params["w_uv"])
+        q = jnp.concatenate([q_nope, q_rope], -1)
+        k = jnp.concatenate([k_nope,
+                             jnp.broadcast_to(kr[:, :, None, :],
+                                              (*k_nope.shape[:3], kr.shape[-1]))],
+                            -1)
+        if cfg.attn_q_chunk and S > 2 * cfg.attn_q_chunk:
+            out = sdpa_q_chunked(q, k, v, causal=causal, window=window,
+                                 q_chunk=cfg.attn_q_chunk, rules=rules)
+        else:
+            out = sdpa(q, k, v, causal=causal, window=window, rules=rules)
+        y = jnp.einsum("bshv,hvd->bsd", out, params["w_o"])
+        return constrain(y, ("batch", "seq", "embed_act"), rules), None
+    # ---------------- absorbed decode ----------------
+    cc = jax.lax.dynamic_update_slice_in_dim(cache["c"], c, step, axis=1)
+    krc = jax.lax.dynamic_update_slice_in_dim(cache["kr"], kr, step, axis=1)
+    seq_ax = "seq_model" if cfg.decode_kv_shard == "seq" else "seq"
+    cc = constrain(cc, ("batch", seq_ax, "kv_lora"), rules)
+    krc = constrain(krc, ("batch", seq_ax, None), rules)
+    q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, params["w_uk"])
+    scores = (jnp.einsum("bshr,btr->bhst", q_abs, cc)
+              + jnp.einsum("bshk,btk->bhst", q_rope, krc)).astype(jnp.float32)
+    scores = scores / jnp.sqrt(nope + cfg.qk_rope_dim).astype(jnp.float32)
+    T = cc.shape[1]
+    kpos = jnp.arange(T)[None, :]
+    qpos = jnp.arange(S)[:, None] + step
+    mask = (kpos <= qpos) & (kpos < step + S)
+    scores = jnp.where(mask[None, None], scores, _NEG)
+    probs = jax.nn.softmax(scores, -1).astype(x.dtype)
+    ctx = jnp.einsum("bhst,btr->bshr", probs, cc)
+    out = jnp.einsum("bshr,rhv->bshv", ctx, params["w_uv"])
+    y = jnp.einsum("bshv,hvd->bsd", out, params["w_o"])
+    y = constrain(y, ("batch", "seq", "embed_act"), rules)
+    return y, {"c": cc, "kr": krc}
+
+
+def mla_cache_def(cfg, batch, max_len):
+    seq_ax = "seq_model" if cfg.decode_kv_shard == "seq" else "seq"
+    return {"c": ParamDef((batch, max_len, cfg.kv_lora_rank),
+                          ("batch", seq_ax, "kv_lora"), init="zeros"),
+            "kr": ParamDef((batch, max_len, cfg.qk_rope_dim),
+                           ("batch", seq_ax, None), init="zeros")}

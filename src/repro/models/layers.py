@@ -1,0 +1,103 @@
+"""Core layers: norms, embeddings, MLPs, rotary embeddings (incl. M-RoPE)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamDef
+from repro.sharding import constrain
+
+
+# ---------------------------------------------------------------- norms ----
+
+def rmsnorm_def(dim):
+    return {"scale": ParamDef((dim,), ("embed_act",), init="ones")}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ----------------------------------------------------------- embeddings ----
+
+def embedding_def(vocab, dim):
+    return {"table": ParamDef((vocab, dim), ("vocab", "embed"), scale=1.0)}
+
+
+def embed(params, tokens, rules=None):
+    out = jnp.take(params["table"], tokens, axis=0)
+    return constrain(out, ("batch", "seq", "embed_act"), rules)
+
+
+def unembed(params, x, rules=None):
+    """Logits, kept vocab-sharded — the loss is computed WITHOUT gathering
+    the full vocab axis (see training.loss.sharded_xent)."""
+    logits = jnp.einsum("bsd,vd->bsv", x, params["table"])
+    return constrain(logits, ("batch", "seq", "vocab_act"), rules)
+
+
+# ------------------------------------------------------------------ MLP ----
+
+def mlp_def(dim, hidden):
+    return {
+        "wi_gate": ParamDef((dim, hidden), ("embed", "mlp")),
+        "wi_up": ParamDef((dim, hidden), ("embed", "mlp")),
+        "wo": ParamDef((hidden, dim), ("mlp", "embed_tp")),
+    }
+
+
+def mlp(params, x, act="silu", rules=None):
+    a = jnp.einsum("bsd,df->bsf", x, params["wi_gate"])
+    b = jnp.einsum("bsd,df->bsf", x, params["wi_up"])
+    a = constrain(a, ("batch", "seq", "heads_act"), rules)
+    h = (jax.nn.silu(a) if act == "silu" else jax.nn.gelu(a)) * b
+    out = jnp.einsum("bsf,fd->bsd", h, params["wo"])
+    return constrain(out, ("batch", "seq", "embed_act"), rules)
+
+
+# ----------------------------------------------------------------- RoPE ----
+
+def _rot(x, cos, sin):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+
+
+def rope(x, positions, theta=10_000.0):
+    """x: (B, S, H, D); positions: (B, S) int."""
+    d = x.shape[-1]
+    half = d // 2
+    inv = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    freqs = positions.astype(jnp.float32)[..., None] * inv      # (B,S,half)
+    cos = jnp.cos(freqs)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(freqs)[:, :, None, :].astype(x.dtype)
+    return _rot(x, cos, sin)
+
+
+def mrope(x, positions, sections=(16, 24, 24), theta=10_000.0):
+    """Qwen2-VL multimodal RoPE. positions: (B, 3, S) for (t, h, w) axes;
+    the frequency bands are split across the three position streams."""
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    inv = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    freqs = positions.astype(jnp.float32)[..., None] * inv      # (B,3,S,half)
+    parts, start = [], 0
+    for i, sec in enumerate(sections):
+        parts.append(freqs[:, i, :, start:start + sec])
+        start += sec
+    freqs = jnp.concatenate(parts, -1)                          # (B,S,half)
+    cos = jnp.cos(freqs)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(freqs)[:, :, None, :].astype(x.dtype)
+    return _rot(x, cos, sin)
+
+
+def apply_rope(x, positions, cfg):
+    if cfg.rope_kind == "none" or positions is None:  # e.g. Jamba: NoPE attn
+        return x
+    if cfg.rope_kind == "mrope":
+        return mrope(x, positions, cfg.mrope_sections, cfg.rope_theta)
+    if positions.ndim == 3:       # mrope-shaped positions on a standard arch
+        positions = positions[:, 0]
+    return rope(x, positions, cfg.rope_theta)

@@ -1,0 +1,217 @@
+"""Mixture-of-Experts with expert parallelism.
+
+Dispatch is sort-based (TPU adaptation of the paper-era GShard einsum
+dispatch, whose (tokens, experts, capacity) one-hot would be ~1e11 elements
+at DeepSeek scale): token->expert assignments are argsorted, positions within
+each expert computed from the sorted stream, and tokens scattered into a
+dense (experts, capacity, d) buffer that feeds a batched expert GEMM. FLOPs
+are the true active-parameter FLOPs times the capacity factor.
+
+Experts are sharded over the "model" mesh axis (EP); the scatter/gather
+across the data->expert sharding boundary lowers to all-to-all-class
+collectives under SPMD (measured in the roofline; the shard_map variant with
+explicit jax.lax.all_to_all is the §Perf alternative, cfg.moe_impl).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamDef
+from repro.sharding import constrain
+
+
+def router_def(cfg):
+    return {"w": ParamDef((cfg.d_model, cfg.n_experts), ("embed", "experts"),
+                          scale=0.02)}
+
+
+def experts_def(cfg):
+    D, F, E = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    p = {
+        "router": router_def(cfg),
+        "wi_gate": ParamDef((E, D, F), ("experts", "embed", "exp_mlp")),
+        "wi_up": ParamDef((E, D, F), ("experts", "embed", "exp_mlp")),
+        "wo": ParamDef((E, F, D), ("experts", "exp_mlp", "embed")),
+    }
+    if cfg.n_shared_experts:
+        Fs = F * cfg.n_shared_experts
+        p["shared"] = {
+            "wi_gate": ParamDef((D, Fs), ("embed", "mlp")),
+            "wi_up": ParamDef((D, Fs), ("embed", "mlp")),
+            "wo": ParamDef((Fs, D), ("mlp", "embed_tp")),
+        }
+    return p
+
+
+def _route(params, x2, cfg):
+    """x2: (N, D) -> (weights (N,k), experts (N,k)). softmax (v2/jamba) or
+    sigmoid+renorm (v3-style) router, fp32 for stability."""
+    logits = jnp.einsum("nd,de->ne", x2, params["router"]["w"]).astype(jnp.float32)
+    if cfg.router_kind == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+        w, e = jax.lax.top_k(scores, cfg.top_k)
+        w = w / (jnp.sum(w, -1, keepdims=True) + 1e-9)
+    else:
+        probs = jax.nn.softmax(logits, -1)
+        w, e = jax.lax.top_k(probs, cfg.top_k)
+        w = w / (jnp.sum(w, -1, keepdims=True) + 1e-9)
+    return w, e, logits
+
+
+def _aux_loss(logits, experts, cfg):
+    """Switch-style load-balancing loss (fraction-dispatched x mean-prob)."""
+    probs = jax.nn.softmax(logits, -1)
+    me = jnp.mean(probs, 0)
+    ce = jnp.mean(jax.nn.one_hot(experts[:, 0], cfg.n_experts,
+                                 dtype=jnp.float32), 0)
+    return cfg.n_experts * jnp.sum(me * ce)
+
+
+def moe_apply(params, x, cfg, rules=None, act="silu"):
+    """x: (B,S,D) -> (y, aux_loss). Dispatches on cfg.moe_impl; shard_map
+    needs a mesh whose batch axes divide B (falls back to scatter)."""
+    if cfg.moe_impl == "shard_map":
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is not None and not mesh.empty:
+            batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+            n_b = 1
+            for a in batch_axes:
+                n_b *= dict(mesh.shape)[a]
+            if ("model" in mesh.axis_names and batch_axes
+                    and x.shape[0] % n_b == 0
+                    and cfg.n_experts % dict(mesh.shape)["model"] == 0):
+                return _moe_shard_map(params, x, cfg, mesh, batch_axes, act)
+    return _moe_scatter(params, x, cfg, rules, act)
+
+
+def _moe_scatter(params, x, cfg, rules=None, act="silu"):
+    """Baseline pjit implementation: sort-based capacity packing into a
+    model-sharded (E, C, D) buffer. XLA's SPMD partitioner reshards the
+    data-sharded tokens into the expert-sharded buffer with global
+    all-gathers — measured collective-bound at DeepSeek scale (see
+    EXPERIMENTS.md §Perf), which motivates the shard_map variant below."""
+    B, S, D = x.shape
+    N = B * S
+    E, k = cfg.n_experts, cfg.top_k
+    cap = int(cfg.capacity_factor * N * k / E + 1)
+    x2 = x.reshape(N, D)
+
+    w, e, logits = _route(params, x2, cfg)          # (N,k)
+    aux = _aux_loss(logits, e, cfg)
+
+    e_flat = e.reshape(-1)                           # (N*k,)
+    order = jnp.argsort(e_flat)
+    sorted_e = e_flat[order]
+    tok = order // k                                 # source token per slot
+    # position of each routed slot within its expert
+    start = jnp.searchsorted(sorted_e, jnp.arange(E))
+    pos = jnp.arange(N * k) - start[sorted_e]
+    keep = pos < cap
+    pos_c = jnp.where(keep, pos, cap)                # dropped -> OOB row
+
+    # dense (E, cap(+1 dump row), D) buffer for the batched expert GEMM
+    buf = jnp.zeros((E, cap + 1, D), x.dtype)
+    buf = buf.at[sorted_e, pos_c].set(x2[tok], mode="drop")
+    buf = constrain(buf, ("exp_act", None, None), rules)
+
+    h_g = jnp.einsum("ecd,edf->ecf", buf, params["wi_gate"])
+    h_u = jnp.einsum("ecd,edf->ecf", buf, params["wi_up"])
+    h = (jax.nn.silu(h_g) if act == "silu" else jax.nn.gelu(h_g)) * h_u
+    out = jnp.einsum("ecf,efd->ecd", h, params["wo"])
+    out = constrain(out, ("exp_act", None, None), rules)
+
+    gathered = out[sorted_e, pos_c]                  # (N*k, D)
+    w_flat = w.reshape(-1)[order].astype(x.dtype)
+    contrib = gathered * jnp.where(keep, w_flat, 0.0)[:, None]
+    y2 = jnp.zeros((N, D), x.dtype).at[tok].add(contrib)
+    y2 = constrain(y2.reshape(B, S, D), ("batch", "seq", "embed_act"), rules)
+
+    if cfg.n_shared_experts:
+        from repro.models.layers import mlp
+        y2 = y2 + mlp(params["shared"], x, act=act, rules=rules)
+    return y2, aux
+
+
+# ---------------------------------------------------------------------------
+# shard_map expert parallelism (beyond-paper optimization, cfg.moe_impl)
+# ---------------------------------------------------------------------------
+# Key observation: activations are replicated along the "model" mesh axis
+# (they are sharded over batch only), so every model-rank already HOLDS every
+# token of its batch shard. Expert parallelism therefore needs NO token
+# all-to-all at all: each model-rank routes identically (same tokens, same
+# router), selects the assignments owned by its E/model_size local experts,
+# runs the local grouped GEMM, and ONE psum over "model" combines the
+# per-rank partial outputs. Collective cost per MoE layer drops from
+# O(tokens*D * world) (SPMD scatter resharding) to one 2*N_loc*D all-reduce.
+
+def _moe_shard_map(params, x, cfg, mesh, batch_axes, act="silu"):
+    from jax.sharding import PartitionSpec as P
+    shard_map = jax.shard_map
+
+    E, k = cfg.n_experts, cfg.top_k
+    model_size = dict(mesh.shape)["model"]
+    E_loc = E // model_size
+    B, S, D = x.shape
+    n_b = 1
+    for a in batch_axes:
+        n_b *= dict(mesh.shape)[a]
+    n_loc = (B // n_b) * S
+    cap = int(cfg.capacity_factor * n_loc * k / E + 1)
+
+    def local_moe(xb, rw, wg, wu, wo):
+        x2 = xb.reshape(n_loc, D)
+        m_rank = jax.lax.axis_index("model")
+        logits = jnp.einsum("nd,de->ne", x2, rw).astype(jnp.float32)
+        if cfg.router_kind == "sigmoid":
+            scores = jax.nn.sigmoid(logits)
+            w, e = jax.lax.top_k(scores, k)
+        else:
+            w, e = jax.lax.top_k(jax.nn.softmax(logits, -1), k)
+        w = w / (jnp.sum(w, -1, keepdims=True) + 1e-9)
+        aux = _aux_loss(logits, e, cfg)
+        aux = jax.lax.pmean(aux, batch_axes if len(batch_axes) > 1
+                            else batch_axes[0])
+
+        e_loc = e - m_rank * E_loc
+        own = (e_loc >= 0) & (e_loc < E_loc)
+        e_flat = jnp.where(own.reshape(-1), e_loc.reshape(-1), E_loc)
+        order = jnp.argsort(e_flat)
+        sorted_e = e_flat[order]
+        tok = order // k
+        start = jnp.searchsorted(sorted_e, jnp.arange(E_loc))
+        pos = jnp.arange(n_loc * k) - start[sorted_e]
+        keep = (sorted_e < E_loc) & (pos < cap)
+        pos_c = jnp.where(keep, pos, cap)
+        e_c = jnp.where(keep, sorted_e, E_loc - 1)
+
+        buf = jnp.zeros((E_loc, cap + 1, D), x2.dtype)
+        buf = buf.at[e_c, pos_c].set(
+            jnp.where(keep[:, None], x2[tok], 0.0), mode="drop")
+        h_g = jnp.einsum("ecd,edf->ecf", buf, wg)
+        h_u = jnp.einsum("ecd,edf->ecf", buf, wu)
+        h = (jax.nn.silu(h_g) if act == "silu" else jax.nn.gelu(h_g)) * h_u
+        out = jnp.einsum("ecf,efd->ecd", h, wo)
+
+        gathered = out[e_c, pos_c]
+        w_flat = w.reshape(-1)[order].astype(x2.dtype)
+        contrib = gathered * jnp.where(keep, w_flat, 0.0)[:, None]
+        y = jnp.zeros((n_loc, D), x2.dtype).at[tok].add(contrib)
+        y = jax.lax.psum(y, "model")
+        return y.reshape(xb.shape), aux
+
+    bspec = tuple(batch_axes) if len(batch_axes) > 1 else batch_axes[0]
+    y, aux = shard_map(
+        local_moe, mesh=mesh,
+        in_specs=(P(bspec, None, None), P(None, None),
+                  P("model", None, None), P("model", None, None),
+                  P("model", None, None)),
+        out_specs=(P(bspec, None, None), P()),
+        check_vma=False,
+    )(x, params["router"]["w"], params["wi_gate"], params["wi_up"],
+      params["wo"])
+
+    if cfg.n_shared_experts:
+        from repro.models.layers import mlp
+        y = y + mlp(params["shared"], x, act=act, rules=None)
+    return y, aux

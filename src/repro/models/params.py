@@ -1,0 +1,77 @@
+"""Single-source-of-truth parameter definitions.
+
+A model is declared as a pytree of ``ParamDef`` (shape + logical axes +
+initializer). From that one tree we derive:
+
+* ``init_params``      — real arrays (smoke tests, examples)
+* ``abstract_params``  — ShapeDtypeStructs (the dry-run lowers 671B-param
+                         models without allocating a byte)
+* ``param_specs``      — logical-axes tree -> PartitionSpecs via the rules
+                         table (sharding is never hand-written per tensor)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding import logical_to_pspec
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    axes: tuple              # logical axis names, len == len(shape)
+    init: str = "normal"     # normal | zeros | ones
+    scale: float | None = None  # stddev; default fan-in scaling
+    dtype: str | None = None    # per-leaf override (e.g. f32 SSM states)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_def(x):
+    return isinstance(x, ParamDef)
+
+
+def init_params(defs, key, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, max(len(leaves), 2))
+    out = []
+    for k, d in zip(keys, leaves):
+        dt = jnp.dtype(d.dtype) if d.dtype else dtype
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dt))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dt))
+        else:
+            scale = d.scale
+            if scale is None:
+                fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+                scale = 1.0 / np.sqrt(max(fan_in, 1))
+            out.append((jax.random.normal(k, d.shape) * scale).astype(dt))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(defs, dtype=jnp.bfloat16, mesh=None, rules=None):
+    """ShapeDtypeStructs (optionally with NamedShardings) for .lower()."""
+    def mk(d: ParamDef):
+        sharding = None
+        if mesh is not None and rules is not None:
+            sharding = jax.sharding.NamedSharding(
+                mesh, logical_to_pspec(d.axes, rules, mesh, shape=d.shape))
+        dt = jnp.dtype(d.dtype) if d.dtype else dtype
+        return jax.ShapeDtypeStruct(d.shape, dt, sharding=sharding)
+    return jax.tree.map(mk, defs, is_leaf=_is_def)
+
+
+def param_specs(defs):
+    """Pytree of logical-axes tuples (feed to sharding.spec_tree_to_pspecs)."""
+    return jax.tree.map(lambda d: d.axes, defs, is_leaf=_is_def)
+
+
+def count_from_defs(defs) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=_is_def)
+    return int(sum(int(np.prod(d.shape)) for d in leaves))

@@ -1,0 +1,124 @@
+"""Mamba-1 selective SSM block (Jamba's mixer).
+
+Training/prefill runs the selective scan as a chunked linear recurrence:
+within a chunk the recurrence h_t = a_t * h_{t-1} + b_t is composed with an
+associative scan (log-depth, TPU-friendly); chunks are chained with a
+lax.scan carry — O(S) work, O(S/chunk) sequential depth, and the hidden
+(d_inner x d_state) state tensor is only materialized per chunk (VMEM-sized,
+the same blocking a Pallas scan kernel would use).
+
+Decode is the O(1) recurrent step on a (conv_state, ssm_state) cache —
+this is why Jamba runs the long_500k cell that full-attention archs skip.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamDef
+from repro.sharding import constrain
+
+_CHUNK = 256
+
+
+def mamba_def(cfg):
+    D = cfg.d_model
+    Din = cfg.mamba_expand * D
+    St, Cv = cfg.mamba_d_state, cfg.mamba_d_conv
+    dt_rank = max(D // 16, 1)
+    return {
+        "in_proj": ParamDef((D, 2 * Din), ("embed", "mlp")),
+        "conv_w": ParamDef((Cv, Din), ("conv", "heads_act"), scale=0.5),
+        "conv_b": ParamDef((Din,), ("heads_act",), init="zeros"),
+        "x_db": ParamDef((Din, dt_rank + 2 * St), ("mlp", None)),
+        "dt_proj_w": ParamDef((dt_rank, Din), (None, "mlp"), scale=0.1),
+        "dt_proj_b": ParamDef((Din,), ("heads_act",), init="ones", ),
+        "A_log": ParamDef((Din, St), ("heads_act", "state"), init="ones"),
+        "D": ParamDef((Din,), ("heads_act",), init="ones"),
+        "out_proj": ParamDef((Din, D), ("mlp", "embed_tp")),
+    }
+
+
+def _ssm_chunk(carry, xs):
+    """Compose the linear recurrence h_t = a_t h_{t-1} + b_t over one chunk
+    via associative scan, seeded with the carried state."""
+    h0 = carry
+    a, b = xs                       # (T, B, Din, St)
+
+    def comb(l, r):
+        return (l[0] * r[0], r[0] * l[1] + r[1])
+
+    a_c, b_c = jax.lax.associative_scan(comb, (a, b), axis=0)
+    h = a_c * h0[None] + b_c        # (T, B, Din, St)
+    return h[-1], h
+
+
+def mamba_apply(params, x, cfg, *, rules=None, cache=None):
+    """x: (B,S,D) -> (y, new_cache). cache = {conv: (B,Cv-1,Din),
+    ssm: (B,Din,St)} for decode (S==1)."""
+    B, S, D = x.shape
+    Din = cfg.mamba_expand * D
+    St, Cv = cfg.mamba_d_state, cfg.mamba_d_conv
+    dt_rank = max(D // 16, 1)
+
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = constrain(xin, ("batch", "seq", "heads_act"), rules)
+
+    # -- causal depthwise conv (width Cv) --
+    if cache is None:
+        pad = jnp.zeros((B, Cv - 1, Din), x.dtype)
+        xpad = jnp.concatenate([pad, xin], 1)
+        new_conv = None
+    else:
+        xpad = jnp.concatenate([cache["conv"], xin], 1)
+        new_conv = xpad[:, -(Cv - 1):]
+    xc = sum(xpad[:, i:i + S] * params["conv_w"][i] for i in range(Cv))
+    xc = jax.nn.silu(xc + params["conv_b"])
+
+    # -- selective parameters --
+    dbc = jnp.einsum("bse,ef->bsf", xc, params["x_db"])
+    dt = dbc[..., :dt_rank]
+    Bp = dbc[..., dt_rank:dt_rank + St]              # (B,S,St)
+    Cp = dbc[..., dt_rank + St:]
+    dt = jax.nn.softplus(jnp.einsum("bsr,re->bse", dt, params["dt_proj_w"])
+                         + params["dt_proj_b"])      # (B,S,Din)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))  # (Din,St)
+    dA = jnp.exp(dt.astype(jnp.float32)[..., None] * A)          # (B,S,Din,St)
+    dBx = (dt * xc).astype(jnp.float32)[..., None] * Bp.astype(jnp.float32)[:, :, None, :]
+
+    if cache is None:
+        # chunked scan over sequence
+        Sp = S
+        if S % _CHUNK:
+            padlen = _CHUNK - S % _CHUNK
+            dA = jnp.pad(dA, ((0, 0), (0, padlen), (0, 0), (0, 0)),
+                         constant_values=1.0)
+            dBx = jnp.pad(dBx, ((0, 0), (0, padlen), (0, 0), (0, 0)))
+            Sp = S + padlen
+        nch = Sp // _CHUNK
+        dA_c = dA.reshape(B, nch, _CHUNK, Din, St).transpose(1, 2, 0, 3, 4)
+        dBx_c = dBx.reshape(B, nch, _CHUNK, Din, St).transpose(1, 2, 0, 3, 4)
+        h0 = jnp.zeros((B, Din, St), jnp.float32)
+        hlast, hs = jax.lax.scan(_ssm_chunk, h0, (dA_c, dBx_c))
+        h = hs.transpose(2, 0, 1, 3, 4).reshape(B, Sp, Din, St)[:, :S]
+        new_ssm = hlast if cache is not None else None
+    else:
+        h = cache["ssm"][:, None].astype(jnp.float32) * dA + dBx  # (B,1,Din,St)
+        new_ssm = h[:, 0]
+    y = jnp.einsum("bsen,bsn->bse", h, Cp.astype(jnp.float32)).astype(x.dtype)
+    y = y + xc * params["D"]
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    out = constrain(out, ("batch", "seq", "embed_act"), rules)
+    new_cache = None if cache is None else {"conv": new_conv, "ssm": new_ssm}
+    return out, new_cache
+
+
+def mamba_cache_def(cfg, batch):
+    Din = cfg.mamba_expand * cfg.d_model
+    return {"conv": ParamDef((batch, cfg.mamba_d_conv - 1, Din),
+                             ("batch", None, "heads_act"), init="zeros"),
+            "ssm": ParamDef((batch, Din, cfg.mamba_d_state),
+                            ("batch", "heads_act", "state"), init="zeros",
+                            dtype="float32")}

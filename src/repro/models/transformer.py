@@ -1,0 +1,443 @@
+"""Model assembly: pattern-aware decoder LMs and encoder-decoder models.
+
+A config is compiled to a LAYER PLAN: a list of stages, each stage a
+(pattern, repeat) pair where ``pattern`` is a short tuple of heterogeneous
+layer specs and ``repeat`` stacks it. Stages with repeat>1 run as a
+``lax.scan`` over stacked parameters — essential for compile time at 60+
+layers (the HLO contains each distinct layer body once).
+
+The planner reproduces each assigned arch's published structure:
+  deepseek-v2/v3   [dense]*k then [MLA+MoE]*(L-k)
+  gemma3           ([local]*5 + [global])*5 + [local]*4   (5:1, window 1024)
+  jamba            ([mamba+dense, mamba+moe]*2, attn@4, ...) period-8 blocks
+  xlstm            [mlstm, slstm]*6
+  llama-family     [GQA+dense]*L
+  seamless         encoder [bidir attn]*24 + decoder [self+cross]*24
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import (embed, embedding_def, mlp, mlp_def, rmsnorm,
+                                 rmsnorm_def, unembed)
+from repro.models.params import ParamDef, count_from_defs
+from repro.sharding import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str                # attn | mla | mamba | mlstm | slstm
+    mlp: str                  # dense | moe | none
+    window: int | None = None
+    cross: bool = False       # enc-dec decoder layers
+
+
+# ------------------------------------------------------------- planning ----
+
+def _layer_specs(cfg) -> list[LayerSpec]:
+    specs = []
+    for i in range(cfg.n_layers):
+        if cfg.block_kinds is not None:
+            mixer = cfg.block_kinds[i % len(cfg.block_kinds)]
+        elif cfg.attn_every > 1:
+            mixer = ("mla" if cfg.attn_kind == "mla" else "attn") \
+                if i % cfg.attn_every == cfg.attn_offset else "mamba"
+        else:
+            mixer = "mla" if cfg.attn_kind == "mla" else "attn"
+        if cfg.d_ff == 0 and cfg.n_experts == 0:
+            m = "none"
+        elif cfg.n_experts and i >= cfg.first_dense_layers \
+                and i % cfg.moe_every == cfg.moe_offset:
+            m = "moe"
+        else:
+            m = "dense"
+        w = None
+        if cfg.window_pattern is not None:
+            w = cfg.window_pattern[i % len(cfg.window_pattern)]
+        specs.append(LayerSpec(mixer=mixer, mlp=m, window=w,
+                               cross=cfg.is_encoder_decoder))
+    return specs
+
+
+def layer_plan(cfg) -> list[tuple[tuple[LayerSpec, ...], int]]:
+    specs = _layer_specs(cfg)
+    L = len(specs)
+    stages, i = [], 0
+    while i < L:
+        best = (1, 1)
+        for p in (1, 2, 3, 4, 6, 8):
+            if i + p > L:
+                break
+            pat = specs[i:i + p]
+            r = 1
+            while i + (r + 1) * p <= L and specs[i + r * p: i + (r + 1) * p] == pat:
+                r += 1
+            # a longer pattern only wins if it actually REPEATS (r >= 2);
+            # otherwise prefer homogeneous runs (smaller scanned HLO)
+            if (p == 1 or r >= 2) and p * r > best[0] * best[1]:
+                best = (p, r)
+        p, r = best
+        stages.append((tuple(specs[i:i + p]), r))
+        i += p * r
+    return stages
+
+
+# ---------------------------------------------------------- param trees ----
+
+def _mixer_def(spec: LayerSpec, cfg):
+    if spec.mixer == "attn":
+        return attn_mod.gqa_def(cfg)
+    if spec.mixer == "mla":
+        return attn_mod.mla_def(cfg)
+    if spec.mixer == "mamba":
+        return ssm_mod.mamba_def(cfg)
+    if spec.mixer == "mlstm":
+        return xlstm_mod.mlstm_def(cfg)
+    if spec.mixer == "slstm":
+        return xlstm_mod.slstm_def(cfg)
+    raise ValueError(spec.mixer)
+
+
+def _layer_def(spec: LayerSpec, cfg):
+    d = {"ln1": rmsnorm_def(cfg.d_model), "mixer": _mixer_def(spec, cfg)}
+    if spec.cross:
+        d["ln_x"] = rmsnorm_def(cfg.d_model)
+        d["xattn"] = attn_mod.gqa_def(cfg)
+    if spec.mlp == "dense":
+        d["ln2"] = rmsnorm_def(cfg.d_model)
+        d["mlp"] = mlp_def(cfg.d_model, cfg.d_ff)
+    elif spec.mlp == "moe":
+        d["ln2"] = rmsnorm_def(cfg.d_model)
+        d["moe"] = moe_mod.experts_def(cfg)
+    return d
+
+
+def _stack_defs(tree, repeat):
+    return jax.tree.map(
+        lambda d: ParamDef((repeat, *d.shape), ("stack", *d.axes),
+                           init=d.init, scale=d.scale, dtype=d.dtype),
+        tree, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def _stage_def(pattern, repeat, cfg):
+    tree = [_layer_def(s, cfg) for s in pattern]
+    return _stack_defs(tree, repeat) if repeat > 1 else tree
+
+
+def model_params_def(cfg):
+    plan = layer_plan(cfg)
+    defs = {
+        "embed": embedding_def(cfg.vocab_size, cfg.d_model),
+        "final_norm": rmsnorm_def(cfg.d_model),
+        "stages": [_stage_def(p, r, cfg) for p, r in plan],
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = {"table": ParamDef((cfg.vocab_size, cfg.d_model),
+                                             ("vocab", "embed"), scale=0.02)}
+    if cfg.is_encoder_decoder:
+        enc_cfg = cfg.replace(is_encoder_decoder=False, n_layers=cfg.n_enc_layers,
+                              n_experts=0, attn_every=1, block_kinds=None)
+        enc_plan = layer_plan(enc_cfg)
+        defs["enc_in"] = {"w": ParamDef((cfg.d_model, cfg.d_model),
+                                        ("embed", "embed_tp"))}
+        defs["enc_stages"] = [_stage_def(p, r, enc_cfg) for p, r in enc_plan]
+        defs["enc_norm"] = rmsnorm_def(cfg.d_model)
+    if cfg.mtp_depth:
+        mcfg = cfg.replace(n_experts=0)
+        defs["mtp"] = {
+            "proj": ParamDef((2 * cfg.d_model, cfg.d_model), ("embed", "embed_tp")),
+            "block": _layer_def(LayerSpec("mla" if cfg.attn_kind == "mla"
+                                          else "attn", "dense"), mcfg),
+            "norm": rmsnorm_def(cfg.d_model),
+        }
+    if cfg.frontend == "vision_patches":
+        defs["patch_proj"] = {"w": ParamDef((cfg.d_model, cfg.d_model),
+                                            ("embed", "embed_tp"))}
+    return defs
+
+
+# ------------------------------------------------------------ cache defs ---
+
+def _layer_cache_def(spec: LayerSpec, cfg, batch, max_len, enc_len=0):
+    if spec.mixer in ("attn", "mla"):
+        win = spec.window
+        eff = max_len if win is None else min(max_len, int(win))
+        if spec.mixer == "attn":
+            d = attn_mod.gqa_cache_def(cfg, batch, max_len)
+        else:
+            d = attn_mod.mla_cache_def(cfg, batch, max_len)
+        del eff  # windowed layers still cache full length (simple + correct)
+    elif spec.mixer == "mamba":
+        d = ssm_mod.mamba_cache_def(cfg, batch)
+    elif spec.mixer == "mlstm":
+        d = xlstm_mod.mlstm_cache_def(cfg, batch)
+    else:
+        d = xlstm_mod.slstm_cache_def(cfg, batch)
+    if spec.cross:
+        KV, Dh = cfg.n_kv_heads, cfg.head_dim_
+        d["xk"] = ParamDef((batch, enc_len, KV, Dh),
+                           ("batch", None, "kv_heads", None), init="zeros")
+        d["xv"] = ParamDef((batch, enc_len, KV, Dh),
+                           ("batch", None, "kv_heads", None), init="zeros")
+    return d
+
+
+def cache_def(cfg, batch, max_len, enc_len=0):
+    plan = layer_plan(cfg)
+    stages = []
+    for pattern, repeat in plan:
+        tree = [_layer_cache_def(s, cfg, batch, max_len, enc_len)
+                for s in pattern]
+        stages.append(_stack_defs(tree, repeat) if repeat > 1 else tree)
+    return {"stages": stages}
+
+
+def init_cache(cfg, batch, max_len, dtype=jnp.bfloat16, enc_len=0):
+    from repro.models.params import init_params
+    return init_params(cache_def(cfg, batch, max_len, enc_len),
+                       jax.random.PRNGKey(0), dtype)
+
+
+# -------------------------------------------------------------- forward ----
+
+def _apply_layer(spec: LayerSpec, params, x, ctx, cache=None):
+    cfg, rules = ctx["cfg"], ctx["rules"]
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+    if spec.mixer == "attn":
+        mix, new_kv = attn_mod.gqa_apply(
+            params["mixer"], h, ctx["positions"], cfg, window=spec.window,
+            rules=rules, cache=cache, step=ctx.get("step"),
+            causal=ctx.get("causal", True))
+    elif spec.mixer == "mla":
+        mix, new_kv = attn_mod.mla_apply(
+            params["mixer"], h, ctx["positions"], cfg, rules=rules,
+            cache=cache, step=ctx.get("step"), window=spec.window,
+            causal=ctx.get("causal", True))
+    elif spec.mixer == "mamba":
+        mix, new_kv = ssm_mod.mamba_apply(params["mixer"], h, cfg, rules=rules,
+                                          cache=cache)
+    elif spec.mixer == "mlstm":
+        mix, new_kv = xlstm_mod.mlstm_apply(params["mixer"], h, cfg,
+                                            rules=rules, cache=cache)
+    else:
+        mix, new_kv = xlstm_mod.slstm_apply(params["mixer"], h, cfg,
+                                            rules=rules, cache=cache)
+    x = x + mix
+    if spec.cross:
+        h = rmsnorm(params["ln_x"], x, cfg.norm_eps)
+        if ctx.get("enc_out") is not None:   # fresh encoder output available
+            e = ctx["enc_out"]
+            ck = jnp.einsum("bsd,dhk->bshk", e, params["xattn"]["wk"])
+            cv = jnp.einsum("bsd,dhk->bshk", e, params["xattn"]["wv"])
+        else:                                # decode from the primed cache
+            ck, cv = cache["xk"], cache["xv"]
+        xo, _ = attn_mod.gqa_apply(params["xattn"], h, None, cfg, rules=rules,
+                                   cross_kv=(ck, cv))
+        x = x + xo
+        if new_kv is not None:
+            new_kv = {**new_kv, "xk": ck, "xv": cv}
+    if spec.mlp == "dense":
+        h = rmsnorm(params["ln2"], x, cfg.norm_eps)
+        x = x + mlp(params["mlp"], h, act=cfg.act, rules=rules)
+    elif spec.mlp == "moe":
+        h = rmsnorm(params["ln2"], x, cfg.norm_eps)
+        y, aux_l = moe_mod.moe_apply(params["moe"], h, cfg, rules=rules,
+                                     act=cfg.act)
+        x = x + y
+        aux = aux + aux_l
+    return x, aux, new_kv
+
+
+def _remat(fn, cfg):
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(fn)
+
+
+# Analysis mode: XLA's HloCostAnalysis counts while-loop bodies ONCE, not
+# x trip-count, so the roofline dry-run lowers a second, UNROLLED variant of
+# each cell to read true per-step flops/bytes/collectives. Runtime lowerings
+# keep the scans (compile time, remat). See launch/dryrun.py.
+ANALYSIS_UNROLL = False
+
+
+def _apply_stage(pattern, repeat, params, x, ctx, cache=None, use_remat=True):
+    """Returns (x, aux, new_cache)."""
+    cfg = ctx["cfg"]
+
+    def run_pattern(params_list, x, cache_list):
+        aux = jnp.zeros((), jnp.float32)
+        new_caches = []
+        for spec, p, c in zip(pattern, params_list,
+                              cache_list if cache_list is not None
+                              else [None] * len(pattern)):
+            x, a, nc = _apply_layer(spec, p, x, ctx, cache=c)
+            aux += a
+            new_caches.append(nc)
+        return x, aux, new_caches
+
+    if repeat == 1:
+        return run_pattern(params, x, cache)
+
+    if ANALYSIS_UNROLL:
+        aux = jnp.zeros((), jnp.float32)
+        new_layers = []
+        for i in range(repeat):
+            pl = jax.tree.map(lambda p: p[i], params)
+            cl = jax.tree.map(lambda c: c[i], cache) if cache is not None else None
+            x, a, nc = run_pattern(pl, x, cl)
+            aux += a
+            new_layers.append(nc)
+        if cache is None:
+            return x, aux, None
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *new_layers)
+        return x, aux, stacked
+
+    if cache is None:
+        def body(carry, layer_params):
+            x, aux = carry
+            x, a, _ = run_pattern(layer_params, x, None)
+            return (x, aux + a), None
+        body_fn = _remat(body, cfg) if use_remat else body
+        (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                                   params)
+        return x, aux, None
+
+    def body(carry, xs):
+        x, aux = carry
+        layer_params, layer_cache = xs
+        x, a, ncs = run_pattern(layer_params, x, layer_cache)
+        return (x, aux + a), ncs
+
+    (x, aux), new_cache = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                       (params, cache))
+    return x, aux, new_cache
+
+
+def _encode(params, frames, cfg, rules):
+    enc_cfg = cfg.replace(is_encoder_decoder=False, n_layers=cfg.n_enc_layers,
+                          n_experts=0, attn_every=1, block_kinds=None)
+    x = jnp.einsum("bsd,de->bse", frames, params["enc_in"]["w"])
+    x = constrain(x, ("batch", "seq", "embed_act"), rules)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    ctx = {"cfg": enc_cfg, "rules": rules, "positions": positions,
+           "causal": False}
+    for (pattern, repeat), sp in zip(layer_plan(enc_cfg), params["enc_stages"]):
+        x, _, _ = _apply_stage(pattern, repeat, sp, x, ctx)
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def forward(params, batch, cfg, rules=None, mode="train"):
+    """batch: tokens (B,S) [+ positions, frames, patch_embeds].
+    Returns (logits, aux)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed(params["embed"], tokens, rules)
+    if cfg.frontend == "vision_patches" and "patch_embeds" in batch:
+        pe = jnp.einsum("bsd,de->bse", batch["patch_embeds"],
+                        params["patch_proj"]["w"]).astype(x.dtype)
+        n_p = pe.shape[1]
+        x = jnp.concatenate([pe, x[:, n_p:]], axis=1)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _encode(params, batch["frames"], cfg, rules)
+    ctx = {"cfg": cfg, "rules": rules, "positions": positions,
+           "enc_out": enc_out, "causal": True}
+    aux = jnp.zeros((), jnp.float32)
+    for (pattern, repeat), sp in zip(layer_plan(cfg), params["stages"]):
+        x, a, _ = _apply_stage(pattern, repeat, sp, x, ctx,
+                               use_remat=(mode == "train"))
+        aux += a
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if mode == "prefill":      # serving prefill: last-position logits only
+        h = h[:, -1:]
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(table, h, rules)
+    extras = {"aux_loss": aux}
+    if cfg.mtp_depth and mode == "train":
+        emb_next = embed(params["embed"], batch["mtp_tokens"], rules) \
+            if "mtp_tokens" in batch else jnp.roll(x, -1, axis=1)
+        hm = jnp.concatenate([rmsnorm(params["mtp"]["norm"], x, cfg.norm_eps),
+                              emb_next.astype(x.dtype)], -1)
+        hm = jnp.einsum("bse,ed->bsd", hm, params["mtp"]["proj"])
+        mcfg = cfg.replace(n_experts=0)
+        mctx = {"cfg": mcfg, "rules": rules, "positions": positions,
+                "causal": True}
+        hm, _, _ = _apply_layer(LayerSpec("mla" if cfg.attn_kind == "mla"
+                                          else "attn", "dense"),
+                                params["mtp"]["block"], hm, mctx)
+        extras["mtp_logits"] = unembed(table, rmsnorm(params["final_norm"], hm,
+                                                      cfg.norm_eps), rules)
+    return logits, extras
+
+
+def decode_step(params, cache, batch, cfg, rules=None):
+    """One-token decode. batch: tokens (B,1), step scalar int32,
+    [positions (B,[3,]1), enc_out for enc-dec]. Returns (logits, new_cache)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    step = batch["step"]
+    x = embed(params["embed"], tokens, rules)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(step[None, None] if step.ndim == 0
+                                     else step[:, None], (B, S)).astype(jnp.int32)
+    ctx = {"cfg": cfg, "rules": rules, "positions": positions, "step": step,
+           "enc_out": batch.get("enc_out"), "causal": True}
+    new_stages = []
+    for (pattern, repeat), sp, sc in zip(layer_plan(cfg), params["stages"],
+                                         cache["stages"]):
+        x, _, nc = _apply_stage(pattern, repeat, sp, x, ctx, cache=sc,
+                                use_remat=False)
+        new_stages.append(nc)
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(table, h, rules)
+    return logits, {"stages": new_stages}
+
+
+# ------------------------------------------------------------- counting ----
+
+def count_params(cfg) -> int:
+    return count_from_defs(model_params_def(cfg))
+
+
+def active_params(cfg) -> int:
+    """Active parameters per token (MoE: top_k + shared experts only) —
+    the N in MODEL_FLOPS = 6*N*D."""
+    total = count_params(cfg)
+    if not cfg.n_experts:
+        return total
+    D, F, E = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    specs = _layer_specs(cfg)
+    n_moe = sum(1 for s in specs if s.mlp == "moe")
+    per_expert = 3 * D * F
+    total -= n_moe * E * per_expert              # remove all routed experts
+    total += n_moe * cfg.top_k * per_expert      # add back the active ones
+    return total
+
+
+def build_model(cfg):
+    return {
+        "cfg": cfg,
+        "params_def": model_params_def(cfg),
+        "forward": partial(forward, cfg=cfg),
+        "decode_step": partial(decode_step, cfg=cfg),
+    }

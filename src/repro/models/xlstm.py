@@ -1,0 +1,159 @@
+"""xLSTM blocks: mLSTM (matrix memory, exp gating) and sLSTM (scalar memory).
+
+mLSTM trains with the parallel (attention-like, stabilized) formulation and
+decodes with the O(1) recurrent (C, n, m) state update — the property that
+qualifies xlstm-125m for the long_500k cell. sLSTM has a true hidden-to-
+hidden recurrence, so it always runs as a lax.scan.
+
+Per the assignment (d_ff=0) blocks are mixer-only residual blocks; mLSTM
+carries its own 2x up-projection as in the xLSTM paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamDef
+from repro.sharding import constrain
+
+
+# ------------------------------------------------------------- mLSTM -------
+
+def mlstm_def(cfg):
+    D, H = cfg.d_model, cfg.n_heads
+    Din = 2 * D
+    dh = Din // H
+    return {
+        "up": ParamDef((D, 2 * Din), ("embed", "mlp")),
+        "wq": ParamDef((Din, H, dh), ("mlp", "heads", None)),
+        "wk": ParamDef((Din, H, dh), ("mlp", "heads", None)),
+        "wv": ParamDef((Din, H, dh), ("mlp", "heads", None)),
+        "wi": ParamDef((Din, H), ("mlp", "heads"), scale=0.02),
+        "wf": ParamDef((Din, H), ("mlp", "heads"), scale=0.02),
+        "bf": ParamDef((H,), ("heads",), init="ones"),
+        "bi": ParamDef((H,), ("heads",), init="zeros"),
+        "down": ParamDef((Din, D), ("mlp", "embed_tp")),
+    }
+
+
+def mlstm_apply(params, x, cfg, *, rules=None, cache=None):
+    B, S, D = x.shape
+    H = cfg.n_heads
+    up = jnp.einsum("bsd,de->bse", x, params["up"])
+    xin, z = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bse,ehk->bshk", xin, params["wq"])
+    k = jnp.einsum("bse,ehk->bshk", xin, params["wk"])
+    v = jnp.einsum("bse,ehk->bshk", xin, params["wv"])
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(dh)
+    logi = (jnp.einsum("bse,eh->bsh", xin, params["wi"]) + params["bi"]).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(
+        (jnp.einsum("bse,eh->bsh", xin, params["wf"]) + params["bf"]).astype(jnp.float32))
+
+    if cache is None:
+        # parallel stabilized form: D_ij = F_i - F_j + i_j (j <= i)
+        F = jnp.cumsum(logf, axis=1)                       # (B,S,H)
+        Dm = F[:, :, None, :] - F[:, None, :, :] + logi[:, None, :, :]
+        causal = jnp.tril(jnp.ones((S, S), bool))
+        Dm = jnp.where(causal[None, :, :, None], Dm, -jnp.inf)
+        m = jnp.max(Dm, axis=2, keepdims=True)             # (B,S,1,H)
+        w = jnp.exp(Dm - m)                                # (B,S,S,H)
+        scores = jnp.einsum("bshk,bthk->bsth", q, k) * scale
+        sw = scores.astype(jnp.float32) * w
+        num = jnp.einsum("bsth,bthk->bshk", sw.astype(x.dtype), v)
+        den = jnp.abs(jnp.sum(sw, axis=2))                 # (B,S,H)
+        den = jnp.maximum(den, jnp.exp(-m[:, :, 0, :]))
+        h = num / den[..., None].astype(x.dtype)
+        new_cache = None
+    else:
+        # recurrent update (S == 1)
+        C, n, m0 = cache["C"], cache["n"], cache["m"]      # (B,H,dk,dv),(B,H,dk),(B,H)
+        li, lf = logi[:, 0], logf[:, 0]                    # (B,H)
+        m1 = jnp.maximum(lf + m0, li)
+        a = jnp.exp(lf + m0 - m1)[..., None, None]
+        b = jnp.exp(li - m1)[..., None, None]
+        kv = jnp.einsum("bhk,bhv->bhkv", k[:, 0].astype(jnp.float32),
+                        v[:, 0].astype(jnp.float32))
+        C1 = a * C + b * kv
+        n1 = a[..., 0] * n + b[..., 0] * k[:, 0].astype(jnp.float32)
+        qs = q[:, 0].astype(jnp.float32) * scale
+        num = jnp.einsum("bhkv,bhk->bhv", C1, qs)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n1, qs)),
+                          jnp.exp(-m1))
+        h = (num / den[..., None]).astype(x.dtype)[:, None]  # (B,1,H,dv)
+        new_cache = {"C": C1, "n": n1, "m": m1}
+    h = h.reshape(B, S, -1) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", h, params["down"])
+    return constrain(out, ("batch", "seq", "embed_act"), rules), new_cache
+
+
+def mlstm_cache_def(cfg, batch):
+    H = cfg.n_heads
+    dh = 2 * cfg.d_model // H
+    return {"C": ParamDef((batch, H, dh, dh), ("batch", "heads", None, None),
+                          init="zeros", dtype="float32"),
+            "n": ParamDef((batch, H, dh), ("batch", "heads", None),
+                          init="zeros", dtype="float32"),
+            "m": ParamDef((batch, H), ("batch", "heads"), init="zeros",
+                          dtype="float32")}
+
+
+# ------------------------------------------------------------- sLSTM -------
+
+def slstm_def(cfg):
+    D = cfg.d_model
+    return {
+        "wz": ParamDef((D, D), ("embed", "mlp")),
+        "wi": ParamDef((D, D), ("embed", "mlp"), scale=0.02),
+        "wf": ParamDef((D, D), ("embed", "mlp"), scale=0.02),
+        "wo": ParamDef((D, D), ("embed", "mlp")),
+        "rz": ParamDef((D, D), ("mlp", "mlp"), scale=0.02),
+        "bf": ParamDef((D,), ("heads_act",), init="ones"),
+        "out": ParamDef((D, D), ("mlp", "embed_tp")),
+    }
+
+
+def _slstm_step(params, carry, xt):
+    """One sLSTM step. carry = (c, n, h, m) each (B, D)."""
+    c, n, h, m = carry
+    zt = jnp.tanh(xt @ params["wz"] + h @ params["rz"])
+    it = (xt @ params["wi"]).astype(jnp.float32)
+    ft = jax.nn.log_sigmoid((xt @ params["wf"]).astype(jnp.float32)
+                            + params["bf"])
+    ot = jax.nn.sigmoid(xt @ params["wo"])
+    m1 = jnp.maximum(ft + m, it)
+    ip = jnp.exp(it - m1)
+    fp = jnp.exp(ft + m - m1)
+    c1 = fp * c + ip * zt.astype(jnp.float32)
+    n1 = fp * n + ip
+    h1 = (ot * (c1 / jnp.maximum(n1, 1e-6)).astype(xt.dtype))
+    return (c1, n1, h1, m1), h1
+
+
+def slstm_apply(params, x, cfg, *, rules=None, cache=None):
+    B, S, D = x.shape
+    if cache is None:
+        carry = tuple(jnp.zeros((B, D), jnp.float32) for _ in range(2)) + (
+            jnp.zeros((B, D), x.dtype), jnp.zeros((B, D), jnp.float32))
+        carry, hs = jax.lax.scan(lambda c, xt: _slstm_step(params, c, xt),
+                                 carry, x.transpose(1, 0, 2))
+        h = hs.transpose(1, 0, 2)
+        new_cache = None
+    else:
+        carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+        carry, h1 = _slstm_step(params, carry, x[:, 0])
+        h = h1[:, None]
+        new_cache = {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}
+    out = jnp.einsum("bsd,de->bse", h, params["out"])
+    return constrain(out, ("batch", "seq", "embed_act"), rules), new_cache
+
+
+def slstm_cache_def(cfg, batch):
+    D = cfg.d_model
+    return {"c": ParamDef((batch, D), ("batch", "mlp"), init="zeros",
+                          dtype="float32"),
+            "n": ParamDef((batch, D), ("batch", "mlp"), init="zeros",
+                          dtype="float32"),
+            "h": ParamDef((batch, D), ("batch", "mlp"), init="zeros"),
+            "m": ParamDef((batch, D), ("batch", "mlp"), init="zeros",
+                          dtype="float32")}

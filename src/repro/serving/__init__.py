@@ -1,0 +1,1 @@
+from repro.serving.decode import build_serve_step, prefill_logits  # noqa: F401

@@ -1,0 +1,36 @@
+"""Serving runtime: batched one-token decode against sharded caches.
+
+serve_step = embed -> stacked-layer scan (each layer updates its cache
+in-place via dynamic_update_slice) -> logits -> greedy/temperature sample.
+Cache sharding is a config lever: "heads" (TP over kv heads) or "seq"
+(sequence-sharded cache — flash-decode style; the partial softmax reductions
+over the sharded seq axis lower to all-reduces; required for long_500k)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import decode_step, forward
+
+
+def build_serve_step(cfg, rules=None, sample: str = "greedy"):
+    def serve_step(params, cache, batch):
+        logits, new_cache = decode_step(params, cache, batch, cfg, rules=rules)
+        last = logits[:, -1].astype(jnp.float32)
+        if sample == "greedy":
+            nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        else:
+            key = jax.random.PRNGKey(0)
+            key = jax.random.fold_in(key, batch["step"])
+            nxt = jax.random.categorical(key, last).astype(jnp.int32)
+        return nxt, new_cache
+    return serve_step
+
+
+def prefill_logits(params, batch, cfg, rules=None):
+    """Inference prefill: full-context forward, logits for the LAST position
+    only (vLLM semantics — the prompt's logits are never materialized)."""
+    logits, _ = forward(params, batch, cfg, rules=rules, mode="prefill")
+    return logits

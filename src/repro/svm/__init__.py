@@ -1,0 +1,13 @@
+"""SVM substrate: SMO solver, kernel functions, classifier API.
+
+The SVM stack runs in float64 (LibSVM parity — the paper's "identical
+results" claim depends on a well-converged dual). We enable x64 here;
+the LM model zoo is dtype-explicit everywhere, so it is unaffected.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.svm.kernels import rbf_kernel, linear_kernel, kernel_matrix  # noqa: E402,F401
+from repro.svm.smo import SMOResult, smo_solve, init_f, dual_objective  # noqa: E402,F401
+from repro.svm.svc import decision_function, predict, accuracy, bias_from_solution  # noqa: E402,F401

@@ -1,0 +1,35 @@
+"""Classifier-facing helpers: bias recovery, decision function, accuracy."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.svm.smo import SMOResult
+
+
+def bias_from_solution(res: SMOResult, y: jnp.ndarray, train_mask: jnp.ndarray,
+                       C: float) -> jnp.ndarray:
+    """b such that decision(x) = sum_i alpha_i y_i K(x_i, x) + b.
+
+    KKT: for 0 < alpha_i < C, f_i = w.x_i - y_i = -b, so b = -mean(f | I_m);
+    if the free set is empty fall back to -(b_up + b_low)/2 (LibSVM rule).
+    """
+    free = train_mask & (res.alpha > 0) & (res.alpha < C)
+    n_free = jnp.sum(free)
+    mean_f = jnp.sum(jnp.where(free, res.f, 0.0)) / jnp.maximum(n_free, 1)
+    fallback = (res.b_up + res.b_low) / 2.0
+    return -jnp.where(n_free > 0, mean_f, fallback)
+
+
+@jax.jit
+def decision_function(K_test_train: jnp.ndarray, y_train: jnp.ndarray,
+                      alpha: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return K_test_train @ (alpha * y_train) + b
+
+
+def predict(K_test_train, y_train, alpha, b):
+    return jnp.where(decision_function(K_test_train, y_train, alpha, b) >= 0, 1, -1)
+
+
+def accuracy(pred: jnp.ndarray, y_true: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean((pred == y_true).astype(jnp.float64))

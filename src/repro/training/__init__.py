@@ -1,0 +1,3 @@
+from repro.training.optimizer import adamw, adafactor, adam8bit, get_optimizer  # noqa: F401
+from repro.training.loss import sharded_xent  # noqa: F401
+from repro.training.train_step import build_train_step, TrainState  # noqa: F401

@@ -1,0 +1,20 @@
+"""Losses. The cross-entropy keeps logits vocab-sharded: the logsumexp and
+the target-logit gather reduce over the sharded vocab axis (an all-reduce of
+(B,S) scalars under SPMD), never materializing a replicated (B,S,V) tensor —
+at gemma3's 262k vocab that is the difference between fitting and not."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sharded_xent(logits, targets, mask=None):
+    """logits (B,S,V) [sharded over V], targets (B,S) int, mask (B,S)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - tgt
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,174 @@
+"""Optimizers (no optax dependency): AdamW, Adafactor, 8-bit-state Adam.
+
+All are pure pytree transforms; optimizer state inherits each parameter's
+sharding (states are elementwise/factored images of the param tree), so FSDP
+shards the optimizer exactly as it shards the weights.
+
+Memory per param (the §Roofline memory-term lever, chosen per arch config):
+  adamw       bf16 param + fp32 m + fp32 v            = 10 B
+  adam8bit    bf16 param + int8 m + int8 v + scales   = ~4 B
+  adafactor   bf16 param + factored row/col stats     = ~2 B
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable
+    update: Callable     # (grads, state, params, lr) -> (new_params, new_state)
+    state_axes: Callable = None  # param-logical-axes tree -> state axes tree
+
+
+def _tmap(f, *trees, **kw):
+    return jax.tree.map(f, *trees, **kw)
+
+
+# ------------------------------------------------------------------ AdamW --
+
+def adamw(b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.01) -> Optimizer:
+    def init(params):
+        return {"m": _tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                "v": _tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        step = state["step"] + 1
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+        m = _tmap(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                  state["m"], grads)
+        v = _tmap(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                  state["v"], grads)
+
+        def upd(p, m, v):
+            u = (m / c1) / (jnp.sqrt(v / c2) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        return _tmap(upd, params, m, v), {"m": m, "v": v, "step": step}
+
+    def state_axes(param_axes):
+        t = lambda: jax.tree.map(lambda a: a, param_axes,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+        return {"m": t(), "v": t(), "step": ()}
+
+    return Optimizer("adamw", init, update, state_axes)
+
+
+# -------------------------------------------------------------- Adafactor --
+
+def adafactor(eps=1e-30, clip_threshold=1.0, decay=0.8) -> Optimizer:
+    """Factored second moments over the last two axes for ndim>=2 params —
+    the HBM-fit choice for the 236B/671B MoE configs."""
+    def init(params):
+        def mk(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"v": _tmap(mk, params,), "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        step = state["step"] + 1
+        beta = 1.0 - step.astype(jnp.float32) ** -decay
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.sqrt(vr[..., None] * vc[..., None, :]
+                                 / (jnp.mean(vr, axis=-1, keepdims=True)[..., None] + eps))
+                u = g / (denom + eps)
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g / (jnp.sqrt(v) + eps)
+                ns = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), ns
+
+        flat = _tmap(lambda p, g, s: upd(p, g, s), params, grads, state["v"],)
+        new_params = _tmap(lambda x: x[0], flat,
+                           is_leaf=lambda x: isinstance(x, tuple))
+        new_v = _tmap(lambda x: x[1], flat,
+                      is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"v": new_v, "step": step}
+
+    def state_axes(param_axes):
+        def mk(a):
+            if len(a) >= 2:
+                return {"vr": a[:-1], "vc": a[:-2] + a[-1:]}
+            return {"v": a}
+        return {"v": jax.tree.map(mk, param_axes,
+                                  is_leaf=lambda x: isinstance(x, tuple)),
+                "step": ()}
+
+    return Optimizer("adafactor", init, update, state_axes)
+
+
+# --------------------------------------------------------- 8-bit-state Adam
+
+def _q8(x):
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    return jnp.round(x / scale).astype(jnp.int8), scale
+
+
+def _dq8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def adam8bit(b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.01) -> Optimizer:
+    """Adam with int8-quantized moments (per-tensor absmax scaling) — a
+    distributed-optimization memory trick: 4 B/param of optimizer state
+    instead of 8 B, sharded like the params."""
+    def init(params):
+        def mk(p):
+            return {"mq": jnp.zeros(p.shape, jnp.int8),
+                    "ms": jnp.ones((), jnp.float32),
+                    "vq": jnp.zeros(p.shape, jnp.int8),
+                    "vs": jnp.ones((), jnp.float32)}
+        return {"s": _tmap(mk, params), "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        step = state["step"] + 1
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            m = b1 * _dq8(s["mq"], s["ms"]) + (1 - b1) * g
+            v = b2 * _dq8(s["vq"], s["vs"]) + (1 - b2) * jnp.square(g)
+            u = (m / c1) / (jnp.sqrt(v / c2) + eps) + weight_decay * p.astype(jnp.float32)
+            mq, ms = _q8(m)
+            vq, vs = _q8(v)
+            return ((p.astype(jnp.float32) - lr * u).astype(p.dtype),
+                    {"mq": mq, "ms": ms, "vq": vq, "vs": vs})
+
+        flat = _tmap(upd, params, grads, state["s"])
+        new_params = _tmap(lambda x: x[0], flat,
+                           is_leaf=lambda x: isinstance(x, tuple))
+        new_s = _tmap(lambda x: x[1], flat,
+                      is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"s": new_s, "step": step}
+
+    def state_axes(param_axes):
+        def mk(a):
+            return {"mq": a, "ms": (), "vq": a, "vs": ()}
+        return {"s": jax.tree.map(mk, param_axes,
+                                  is_leaf=lambda x: isinstance(x, tuple)),
+                "step": ()}
+
+    return Optimizer("adam8bit", init, update, state_axes)
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    return {"adamw": adamw, "adafactor": adafactor, "adam8bit": adam8bit}[name](**kw)

@@ -1,0 +1,5 @@
+import warnings
+
+warnings.filterwarnings("ignore")
+
+import repro.svm  # noqa: F401,E402  (enables x64 deterministically for all tests)

@@ -1,0 +1,48 @@
+"""XLA attention variants agree with the reference einsum path."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import sdpa, sdpa_local_chunked, sdpa_q_chunked
+
+RNG = np.random.default_rng(3)
+
+
+def _qkv(B=2, S=96, H=4, KV=2, D=16):
+    q = jnp.asarray(RNG.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, S, KV, D)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, S, KV, D)), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("q_chunk", [16, 32, 48])
+def test_q_chunked_matches_sdpa(causal, q_chunk):
+    q, k, v = _qkv()
+    ref = sdpa(q, k, v, causal=causal)
+    out = sdpa_q_chunked(q, k, v, causal=causal, q_chunk=q_chunk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_q_chunked_with_window():
+    q, k, v = _qkv()
+    ref = sdpa(q, k, v, causal=True, window=24)
+    out = sdpa_q_chunked(q, k, v, causal=True, window=24, q_chunk=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_local_chunked_matches_masked_sdpa():
+    W = 16
+    q, k, v = _qkv(S=80)
+    ref = sdpa(q, k, v, causal=True, window=W)
+    out = sdpa_local_chunked(q, k, v, window=W)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_gqa_grouping():
+    """GQA (kv<h) must equal MHA with kv heads explicitly repeated."""
+    q, k, v = _qkv(H=8, KV=2)
+    ref = sdpa(q, jnp.repeat(k, 4, axis=2), jnp.repeat(v, 4, axis=2),
+               causal=True)
+    out = sdpa(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)

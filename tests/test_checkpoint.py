@@ -1,0 +1,128 @@
+"""Checkpointing: roundtrip, crash consistency, retention, async, CV resume,
+and elastic (mesh-changing) restore in a multi-device subprocess."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+
+
+def _tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "nested": {"b": jnp.ones((5,), jnp.int32),
+                       "c": jnp.asarray(3.5)}}
+
+
+def test_roundtrip(tmp_path):
+    path = str(tmp_path / "ck")
+    save_pytree(path, _tree(), {"step": 7})
+    restored, extra = load_pytree(path, target=_tree())
+    assert extra["step"] == 7
+    for a, b in zip(jax.tree.leaves(_tree()), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_uncommitted_checkpoint_ignored(tmp_path):
+    """A writer killed mid-save must never corrupt the latest checkpoint."""
+    mgr = CheckpointManager(str(tmp_path), max_to_keep=5)
+    mgr.save(1, _tree(), {"ok": True})
+    # simulate a partial write: directory without COMMIT marker
+    bad = os.path.join(str(tmp_path), "step_0000000002")
+    os.makedirs(bad)
+    with open(os.path.join(bad, "meta.json"), "w") as fh:
+        json.dump({}, fh)
+    assert mgr.latest_step() == 1
+    step, tree, extra = mgr.restore()
+    assert step == 1 and extra["ok"]
+
+
+def test_retention_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), max_to_keep=2)
+    for s in range(5):
+        mgr.save(s, _tree())
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, _tree(), blocking=False)
+    mgr.wait()
+    assert mgr.latest_step() == 3
+
+
+def test_cv_resume_matches_uninterrupted(tmp_path):
+    """Kill the CV driver after fold 2; the restarted run must produce the
+    same per-fold results (the alpha chain doubles as the restart seed)."""
+    from repro.core.cv import run_cv
+    from repro.data.svm_suite import make_dataset
+    ds = make_dataset("heart", n_override=100)
+    full = run_cv(ds, k=5, method="sir")
+
+    mgr = CheckpointManager(str(tmp_path / "cv"))
+    # run folds 0-2 then 'crash' (we emulate by a k-limited driver call that
+    # checkpoints each fold)
+    partial = run_cv(ds, k=5, method="sir", checkpoint_manager=mgr)
+    # wipe in-memory state; resume from checkpoint: folds 0-4 cached ->
+    # restart sees fold 4 as latest, nothing to do; emulate mid-run crash by
+    # removing the last two fold checkpoints
+    for s in mgr.all_steps()[-2:]:
+        import shutil
+        shutil.rmtree(mgr._step_dir(s))
+    mgr2 = CheckpointManager(str(tmp_path / "cv"))
+    resumed = run_cv(ds, k=5, method="sir", checkpoint_manager=mgr2)
+    # resumed run recomputes folds 3-4 only, seeded from checkpointed fold 2
+    assert [f.fold for f in resumed.folds] == [3, 4]
+    for f_full, f_res in zip(full.folds[3:], resumed.folds):
+        assert f_full.acc_correct == f_res.acc_correct
+        assert f_full.n_iter == f_res.n_iter
+
+
+ELASTIC_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import warnings; warnings.filterwarnings("ignore")
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+    from repro.checkpoint import CheckpointManager
+
+    d = os.environ["CKPT_DIR"]
+    mgr = CheckpointManager(d)
+    mesh = jax.make_mesh((MESHA, MESHB), ("data", "model"),
+                         axis_types=(AxisType.Auto,)*2)
+    x = jax.device_put(jnp.arange(64.0).reshape(8, 8),
+                       NamedSharding(mesh, P("data", "model")))
+    tree = {"w": x}
+    if os.environ["MODE"] == "save":
+        mgr.save(1, tree, {"mesh": [MESHA, MESHB]})
+    else:
+        step, restored, extra = mgr.restore(target=tree)
+        assert extra["mesh"] != [MESHA, MESHB]
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.asarray(jnp.arange(64.0).reshape(8, 8)))
+        assert restored["w"].sharding.mesh.shape["data"] == MESHA
+    print("OK")
+""")
+
+
+@pytest.mark.parametrize("save_mesh,restore_mesh", [((4, 2), (2, 4)),
+                                                    ((8, 1), (2, 4))])
+def test_elastic_restore_across_meshes(tmp_path, save_mesh, restore_mesh):
+    """Save on one mesh, restore onto a different one (elastic scaling)."""
+    env = dict(os.environ, CKPT_DIR=str(tmp_path / "el"),
+               PYTHONPATH="src")
+    for mode, mesh in (("save", save_mesh), ("restore", restore_mesh)):
+        script = ELASTIC_SCRIPT.replace("MESHA", str(mesh[0])) \
+                               .replace("MESHB", str(mesh[1]))
+        env["MODE"] = mode
+        out = subprocess.run([sys.executable, "-c", script], env=env,
+                             capture_output=True, text=True, cwd=os.getcwd(),
+                             timeout=300)
+        assert out.returncode == 0, out.stderr[-2000:]
+        assert "OK" in out.stdout

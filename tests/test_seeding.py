@@ -1,0 +1,151 @@
+"""Paper-claim validation + property tests for the seeding algorithms."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import seeding
+from repro.core.cv import run_cv, _transition_idx
+from repro.data.svm_suite import make_dataset, kfold_chunks
+from repro.svm import init_f, kernel_matrix, smo_solve
+
+C_TEST = 4.0
+
+
+def _fold_setup(name="madelon", n=400, k=5):
+    ds = make_dataset(name, n_override=n)
+    X = jnp.asarray(ds.X)
+    y = jnp.asarray(ds.y, jnp.float64)
+    K = kernel_matrix(X, X, gamma=ds.gamma)
+    chunks = kfold_chunks(n, k, seed=0)
+    nn = chunks.size
+    K, y = K[:nn][:, :nn], y[:nn]
+    mask0 = jnp.ones(nn, bool).at[jnp.asarray(chunks[0])].set(False)
+    res0 = smo_solve(K, y, mask0, ds.C, jnp.zeros(nn), -y)
+    S, R, T = _transition_idx(chunks, 0, 1)
+    return ds, K, y, chunks, res0, (S, R, T)
+
+
+@pytest.mark.parametrize("method", ["mir", "sir", "ato"])
+def test_seed_satisfies_constraints(method):
+    ds, K, y, chunks, res0, (S, R, T) = _fold_setup()
+    alpha0 = seeding.SEEDERS[method](K, y, ds.C, res0, S, R, T)
+    eps = 1e-8 * max(ds.C, 1.0)
+    assert bool(jnp.all((alpha0 >= -eps) & (alpha0 <= ds.C + eps)))
+    # equality over the NEW training set; removed chunk must be zeroed
+    assert float(jnp.abs(jnp.sum(alpha0 * y))) < 1e-6 * max(ds.C, 1.0)
+    assert float(jnp.abs(alpha0[R]).max()) == 0.0
+
+
+@pytest.mark.parametrize("method", ["mir", "sir", "ato"])
+def test_identical_results_claim(method):
+    """Paper Table 1: seeding changes the starting point, not the result.
+    Predictions may only differ where the decision value is within solver
+    tolerance of zero (degenerate margins)."""
+    ds, K, y, chunks, res0, (S, R, T) = _fold_setup()
+    nn = chunks.size
+    mask1 = jnp.ones(nn, bool).at[jnp.asarray(chunks[1])].set(False)
+    cold = smo_solve(K, y, mask1, ds.C, jnp.zeros(nn), -y)
+    alpha0 = seeding.SEEDERS[method](K, y, ds.C, res0, S, R, T)
+    warm = smo_solve(K, y, mask1, ds.C, alpha0, init_f(K, y, alpha0))
+    from repro.svm import bias_from_solution, decision_function
+    bc = bias_from_solution(cold, y, mask1, ds.C)
+    bw = bias_from_solution(warm, y, mask1, ds.C)
+    t_idx = jnp.asarray(chunks[1])
+    dc = decision_function(K[t_idx], y, cold.alpha, bc)
+    dw = decision_function(K[t_idx], y, warm.alpha, bw)
+    differs = (dc >= 0) != (dw >= 0)
+    near_zero = (jnp.abs(dc) < 2e-3) | (jnp.abs(dw) < 2e-3)
+    assert bool(jnp.all(~differs | near_zero))
+
+
+def test_seeding_reduces_iterations():
+    """Paper Tables 1/3: warm-started folds need fewer SMO iterations.
+
+    Uses the adult-like set (mixed bounded/free SVs): on the chance-level
+    degenerate sets a SINGLE fold transition's count is seed-order sensitive
+    (±20%, see EXPERIMENTS.md §Paper-validation caveat) — full-CV totals for
+    those are covered by tests/test_system.py::test_claim2_fewer_iterations."""
+    ds, K, y, chunks, res0, (S, R, T) = _fold_setup("adult", n=600, k=6)
+    nn = chunks.size
+    mask1 = jnp.ones(nn, bool).at[jnp.asarray(chunks[1])].set(False)
+    cold = smo_solve(K, y, mask1, ds.C, jnp.zeros(nn), -y)
+    alpha0 = seeding.sir_seed(K, y, ds.C, res0, S, R, T)
+    warm = smo_solve(K, y, mask1, ds.C, alpha0, init_f(K, y, alpha0))
+    assert int(warm.n_iter) < int(cold.n_iter)
+
+
+def test_full_cv_accuracy_identical():
+    ds = make_dataset("madelon", n_override=300)
+    rep_cold = run_cv(ds, k=5, method="cold")
+    for method in ("sir", "mir"):
+        rep = run_cv(ds, k=5, method=method)
+        assert rep.accuracy == pytest.approx(rep_cold.accuracy, abs=0.02)
+
+
+def test_straggler_policy_best_available():
+    ds = make_dataset("heart", n_override=150)
+    rep = run_cv(ds, k=5, method="sir", straggler_policy="best_available",
+                 unavailable_folds=frozenset({1}))
+    # fold 2 cannot seed from fold 1 (simulated straggler) -> seeds from 0
+    assert rep.folds[2].seed_from == 0
+    rep_cold = run_cv(ds, k=5, method="cold")
+    assert rep.accuracy == pytest.approx(rep_cold.accuracy, abs=0.02)
+
+
+# ------------------------------------------------------------- LOO seeds ---
+
+@pytest.mark.parametrize("fn", [seeding.avg_seed_loo, seeding.top_seed_loo])
+def test_loo_seed_constraints(fn):
+    ds = make_dataset("heart", n_override=100)
+    X = jnp.asarray(ds.X)
+    y = jnp.asarray(ds.y, jnp.float64)
+    K = kernel_matrix(X, X, gamma=ds.gamma)
+    n = 100
+    full = smo_solve(K, y, jnp.ones(n, bool), ds.C, jnp.zeros(n), -y)
+    for t in [0, 13, 99]:
+        a0 = fn(K, y, ds.C, full.alpha, jnp.asarray(t))
+        assert float(a0[t]) == 0.0
+        assert float(jnp.abs(jnp.sum(a0 * y))) < 1e-6 * ds.C
+        assert bool(jnp.all((a0 >= 0) & (a0 <= ds.C)))
+
+
+# ------------------------------------------------------ property tests -----
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.floats(0.5, 100.0))
+def test_water_fill_property(seed, C):
+    """water_fill returns values in the box whose sum hits any feasible
+    target (the paper's AdjustAlpha invariant)."""
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(3, 40))
+    y = jnp.asarray(np.where(rng.random(m) < 0.5, 1.0, -1.0))
+    beta = jnp.asarray(rng.uniform(-C, C, m)) * (y > 0) \
+        + jnp.asarray(rng.uniform(-C, 0, m)) * (y < 0)
+    lo = jnp.where(y > 0, 0.0, -C)
+    hi = jnp.where(y > 0, C, 0.0)
+    target = float(rng.uniform(float(jnp.sum(lo)), float(jnp.sum(hi))))
+    out = seeding.water_fill(jnp.clip(beta, lo, hi), lo, hi,
+                             jnp.asarray(target))
+    assert bool(jnp.all((out >= lo - 1e-9) & (out <= hi + 1e-9)))
+    assert float(jnp.sum(out)) == pytest.approx(target, abs=1e-6 * max(C, 1))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_smo_invariants_random_problems(seed):
+    """Random tiny SVMs: the solver always returns a feasible, converged
+    dual within the iteration budget."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(10, 60))
+    d = int(rng.integers(2, 8))
+    X = jnp.asarray(rng.normal(size=(n, d)))
+    y = jnp.asarray(np.where(rng.random(n) < 0.5, 1.0, -1.0))
+    if float(jnp.abs(y).sum()) == float(jnp.abs(y.sum())):
+        return  # single-class sample: SVM undefined
+    K = kernel_matrix(X, X, gamma=0.5)
+    res = smo_solve(K, y, jnp.ones(n, bool), C_TEST, jnp.zeros(n), -y,
+                    max_iter=200_000)
+    assert bool(res.converged)
+    assert float(jnp.abs(jnp.sum(res.alpha * y))) < 1e-8
+    assert bool(jnp.all((res.alpha >= 0) & (res.alpha <= C_TEST)))

@@ -1,0 +1,49 @@
+"""End-to-end behaviour tests for the paper's system: the full alpha-seeded
+k-fold CV protocol reproduces the paper's claims on the synthetic suite."""
+import pytest
+
+from repro.core.cv import run_cv
+from repro.data.svm_suite import make_dataset
+
+
+@pytest.fixture(scope="module")
+def reports():
+    ds = make_dataset("madelon", n_override=500)
+    return {m: run_cv(ds, k=10, method=m) for m in ("cold", "sir", "mir")}
+
+
+def test_claim1_same_accuracy(reports):
+    """Paper Table 1 (last cols): seeded CV returns the same accuracy.
+
+    madelon-like is chance-level (the paper's own Madelon scores 50.0%):
+    its dual optimum is degenerate and |decision|<tol margins flip freely,
+    so equality is asserted up to the observed degenerate-flip band (~3%).
+    The margin-aware exact check is test_seeding.test_identical_results_claim."""
+    cold = reports["cold"].accuracy
+    for m in ("sir", "mir"):
+        assert reports[m].accuracy == pytest.approx(cold, abs=0.03)
+
+
+def test_claim2_fewer_iterations(reports):
+    """Paper Table 1 (iteration cols): warm-started CV needs fewer total
+    SMO iterations than cold start."""
+    cold = reports["cold"].total_iterations
+    assert reports["sir"].total_iterations < cold
+    assert reports["mir"].total_iterations < cold
+
+
+def test_claim3_all_folds_converge(reports):
+    for rep in reports.values():
+        assert all(f.converged for f in rep.folds)
+
+
+def test_claim4_seed_chain_structure(reports):
+    """Fold h seeds from fold h-1 (paper protocol); fold 0 is cold."""
+    sir = reports["sir"]
+    assert sir.folds[0].seed_from == -1
+    assert [f.seed_from for f in sir.folds[1:]] == list(range(9))
+
+
+def test_solve_time_reduced(reports):
+    """The seeded folds' SMO ('the rest') time is below cold start's."""
+    assert reports["sir"].total_solve_time < reports["cold"].total_solve_time
