@@ -1,10 +1,36 @@
 """Benchmark driver — one section per paper table/figure plus the roofline
 report. ``python -m benchmarks.run [--quick]`` prints CSV per section and
-writes JSON under results/bench/."""
+writes JSON under results/bench/.
+
+The table1 section additionally writes ``BENCH_table1.json`` at the repo
+root (cold vs cold_batched vs seeded methods) so the perf trajectory is
+tracked across PRs — CI runs ``--quick --only table1`` and uploads it.
+"""
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import platform
 import sys
+
+_REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _write_bench_table1(rows: list[dict], quick: bool) -> None:
+    import jax
+    payload = {
+        "bench": "table1_kfold",
+        "quick": quick,
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "python": platform.python_version(),
+        "rows": rows,
+    }
+    out = os.path.join(_REPO_ROOT, "BENCH_table1.json")
+    with open(out, "w") as fh:
+        json.dump(payload, fh, indent=1)
+    print(f"wrote {out}", flush=True)
 
 
 def main() -> None:
@@ -22,15 +48,23 @@ def main() -> None:
         "fig2": lambda: fig2_loo.run(quick=args.quick),
         "roofline": lambda: roofline_report.run(quick=args.quick),
     }
+    failed = []
     for name, fn in sections.items():
         if args.only and name != args.only:
             continue
         print(f"\n### {name} " + "#" * 50, flush=True)
         try:
-            fn()
+            rows = fn()
+            if name == "table1" and rows:
+                _write_bench_table1(rows, args.quick)
         except Exception as e:  # noqa: BLE001
             print(f"SECTION FAILED {name}: {type(e).__name__}: {e}",
                   file=sys.stderr)
+            failed.append(name)
+    if failed:
+        # a green exit on failure would let CI publish the stale checked-in
+        # BENCH_table1.json as this commit's perf numbers
+        sys.exit(f"benchmark sections failed: {', '.join(failed)}")
 
 
 if __name__ == '__main__':

@@ -24,6 +24,25 @@ for method in ("cold", "ato", "mir", "sir"):
         per_fold = [(f.fold, f.seed_from, f.n_iter) for f in rep.folds]
         print("       per-fold (fold, seeded_from, iters):", per_fold)
 
+# ---- batched fold execution: independent cold folds as one vmap batch ----
+from repro.core.cv import run_cv_batched  # noqa: E402
+
+rep_cold = run_cv(ds, k=10, method="cold")
+rep_bat = run_cv_batched(ds, k=10)
+print(f"\ncold sequential: {rep_cold.row()['total_s']}s; "
+      f"cold batched: {rep_bat.row()['total_s']}s "
+      f"(same per-fold fixed points, one concurrent solve)")
+
+# ---- hyper-parameter grid: kernel reuse + C-adjacent alpha seeding ----
+from repro.core.grid import run_grid  # noqa: E402
+
+grid = run_grid(ds, Cs=[ds.C / 4, ds.C, ds.C * 4], gammas=[ds.gamma],
+                k=5, method="sir", seed_across_C=True)
+best = grid.best()
+print(f"grid best cell: C={best.C} gamma={best.gamma} "
+      f"acc={best.accuracy:.4f} ({grid.total_iterations} total iters, "
+      f"kernel computed once per gamma)")
+
 # ---- fault tolerance: the alpha chain doubles as the restart seed ----
 tmp = tempfile.mkdtemp()
 try:

@@ -2,14 +2,26 @@
 
 Reproduces the paper's experimental protocol: fold 0 starts cold; fold h>0
 warm-starts from the most recent completed fold via the chosen seeder. The
-driver is also the fault-tolerance unit: each completed fold is checkpointed
-(fold index + alpha + f), so a restarted job re-seeds from the last
-completed fold — the paper's own mechanism doubles as the recovery path.
+driver is also the fault-tolerance unit, at two granularities:
+
+* fold-level (always on with a checkpoint manager): each completed fold is
+  checkpointed (fold index + alpha + f), so a restarted job re-seeds from
+  the last completed fold — the paper's own mechanism doubles as the
+  recovery path;
+* chunk-level (opt-in via ``chunk_iters``): the engine's chunked dispatch
+  snapshots (alpha, f, n_iter) every ``checkpoint_every`` chunks *inside* a
+  fold, so recovery no longer loses an in-flight fold — the restarted solve
+  resumes the exact iterate sequence (bit-identical fixed point).
 
 Straggler policy: ``strict`` (paper semantics — always seed from fold h-1)
 or ``best_available`` (seed from the nearest *completed* fold; lets the
 scheduler keep going when a fold is slow/lost; still bit-compatible results
 because seeding never changes the fixed point).
+
+``run_cv_batched`` executes independent (cold) folds concurrently through
+the engine's batched solver — one vmapped chunk advances every unconverged
+fold, so k folds cost ~max(n_iter_h) iterations of device time instead of
+sum(n_iter_h) dispatches.
 """
 from __future__ import annotations
 
@@ -23,7 +35,13 @@ import numpy as np
 from repro.core import seeding
 from repro.data.svm_suite import SVMDataset, kfold_chunks
 from repro.svm import (accuracy, bias_from_solution, init_f, kernel_matrix,
-                       predict, smo_solve, dual_objective)
+                       predict, smo_solve, smo_solve_batched, dual_objective)
+
+# step numbering inside a checkpoint directory: fold h's mid-fold chunk
+# snapshots live at h*_FOLD_STRIDE + 1 + chunk, its completion record at
+# (h+1)*_FOLD_STRIDE — monotone in (fold, chunk), so ``latest_step`` always
+# points at the furthest progress.
+_FOLD_STRIDE = 1_000_000
 
 
 @dataclasses.dataclass
@@ -87,14 +105,29 @@ def _transition_idx(chunks: np.ndarray, g: int, h: int):
     return jnp.asarray(S), jnp.asarray(chunks[h]), jnp.asarray(chunks[g])
 
 
+def _fold_masks(chunks: np.ndarray) -> np.ndarray:
+    """(k, n) boolean train masks; row h is True off fold h's test chunk."""
+    k, n = chunks.shape[0], chunks.size
+    masks = np.ones((k, n), bool)
+    for h in range(k):
+        masks[h, chunks[h]] = False
+    return masks
+
+
 def run_cv(ds: SVMDataset, k: int = 10, method: str = "sir",
            tol: float = 1e-3, max_iter: int = 5_000_000, seed: int = 0,
            checkpoint_manager=None, straggler_policy: str = "strict",
            unavailable_folds: frozenset[int] = frozenset(),
-           kernel_backend: str = "jnp") -> CVReport:
+           kernel_backend: str = "jnp", chunk_iters: int | None = None,
+           checkpoint_every: int = 1) -> CVReport:
     """Run alpha-seeded k-fold CV. ``unavailable_folds`` simulates stragglers/
     failures: those folds' results are not used as seeds (best_available
-    policy then falls back to the nearest earlier completed fold)."""
+    policy then falls back to the nearest earlier completed fold).
+
+    ``chunk_iters`` switches the solver to chunked dispatch; with a
+    checkpoint manager attached, every ``checkpoint_every``-th chunk is
+    snapshotted so a crash mid-fold resumes inside the fold instead of
+    replaying it from its seed."""
     seeder = seeding.SEEDERS[method]
     X = jnp.asarray(ds.X)
     y = jnp.asarray(ds.y, jnp.float64)
@@ -113,11 +146,42 @@ def run_cv(ds: SVMDataset, k: int = 10, method: str = "sir",
     results: dict[int, object] = {}
     folds: list[FoldStat] = []
     start_fold = 0
+    resume = None   # (alpha, f, n_iter, seed_from) of an in-flight fold
 
     if checkpoint_manager is not None and checkpoint_manager.latest_step() is not None:
         step, tree, extra = checkpoint_manager.restore()
-        results[extra["fold"]] = _result_from_tree(tree)
-        start_fold = extra["fold"] + 1
+        # a checkpoint is only resumable into the SAME run: a different
+        # partition (k/dataset/seed) misaligns the fold masks, and resuming
+        # a mid-fold snapshot under a different method/partition would
+        # silently converge to a wrong but "converged" fixed point. A done
+        # record tolerates a method change (seeding never moves the fixed
+        # point); a mid snapshot IS the method's trajectory, so it doesn't.
+        want = {"k": k, "dataset": ds.name, "seed": seed}
+        if extra.get("phase") == "mid":
+            want["method"] = method
+        got = {key: extra.get(key) for key in want}
+        if got != want:
+            raise ValueError(
+                f"checkpoint at step {step} belongs to run {got}, cannot "
+                f"resume it as {want}; point the manager at a fresh "
+                "directory or delete the stale checkpoints")
+        if extra.get("phase") == "mid":
+            start_fold = extra["fold"]
+            resume = (jnp.asarray(tree["alpha"]), jnp.asarray(tree["f"]),
+                      int(tree["n_iter"]), extra["seed_from"])
+            prev = extra.get("prev_step")
+            if prev is not None:
+                try:  # may have been retention-GC'd; only seeds later folds
+                    _, ptree, pextra = checkpoint_manager.restore(step=prev)
+                    results[pextra["fold"]] = _result_from_tree(ptree)
+                except FileNotFoundError:
+                    pass
+        else:
+            results[extra["fold"]] = _result_from_tree(tree)
+            start_fold = extra["fold"] + 1
+
+    last_done_step = max(
+        ((h + 1) * _FOLD_STRIDE for h in results), default=None)
 
     for h in range(start_fold, k):
         test_idx = jnp.asarray(chunks[h])
@@ -125,7 +189,9 @@ def run_cv(ds: SVMDataset, k: int = 10, method: str = "sir",
 
         # ---- choose the seed fold (straggler policy) ----
         completed = [g for g in sorted(results) if g not in unavailable_folds]
-        if h == 0 or method == "cold" or not completed:
+        if resume is not None:
+            seed_from = resume[3]
+        elif h == 0 or method == "cold" or not completed:
             seed_from = -1
         elif straggler_policy == "strict":
             seed_from = h - 1 if (h - 1) in completed else -1
@@ -134,7 +200,11 @@ def run_cv(ds: SVMDataset, k: int = 10, method: str = "sir",
 
         # ---- init (the paper's "init." column) ----
         t0 = time.perf_counter()
-        if seed_from < 0:
+        n_iter0 = 0
+        if resume is not None:
+            alpha0, f0, n_iter0, _ = resume
+            resume = None
+        elif seed_from < 0:
             alpha0 = jnp.zeros(n, K.dtype)
             f0 = -y
         else:
@@ -144,10 +214,34 @@ def run_cv(ds: SVMDataset, k: int = 10, method: str = "sir",
         jax.block_until_ready((alpha0, f0))
         init_time = time.perf_counter() - t0
 
-        # ---- solve ----
+        # ---- solve (chunked dispatch doubles as the mid-fold snapshotter) ----
+        on_chunk = None
+        if checkpoint_manager is not None and chunk_iters is not None:
+            # seed the chunk counter from the restored n_iter so step numbers
+            # reflect ABSOLUTE fold progress: a resumed run's snapshots must
+            # outnumber the pre-crash ones, or latest_step()/retention-GC
+            # would keep resurrecting the stale pre-crash snapshot forever
+            counter = {"c": n_iter0 // chunk_iters}
+
+            def on_chunk(state, h=h, seed_from=seed_from, counter=counter,
+                         prev_step=last_done_step):
+                counter["c"] += 1
+                if counter["c"] % checkpoint_every:
+                    return
+                step = h * _FOLD_STRIDE + min(counter["c"], _FOLD_STRIDE - 2) + 1
+                checkpoint_manager.save(
+                    step, {"alpha": state.alpha, "f": state.f,
+                           "n_iter": state.n_iter},
+                    extra_meta={"phase": "mid", "fold": h,
+                                "seed_from": seed_from, "prev_step": prev_step,
+                                "method": method, "k": k, "dataset": ds.name,
+                                "seed": seed},
+                    blocking=False)
+
         t0 = time.perf_counter()
         res = smo_solve(K, y, train_mask, ds.C, alpha0, f0, tol=tol,
-                        max_iter=max_iter)
+                        max_iter=max_iter, chunk_iters=chunk_iters,
+                        on_chunk=on_chunk, n_iter0=n_iter0)
         jax.block_until_ready(res)
         solve_time = time.perf_counter() - t0
 
@@ -164,16 +258,70 @@ def run_cv(ds: SVMDataset, k: int = 10, method: str = "sir",
         results[h] = res
 
         if checkpoint_manager is not None:
+            last_done_step = (h + 1) * _FOLD_STRIDE if chunk_iters is not None \
+                else h
             checkpoint_manager.save(
-                h, {"alpha": res.alpha, "f": res.f, "n_iter": res.n_iter,
-                    "converged": res.converged, "b_up": res.b_up,
-                    "b_low": res.b_low},
-                extra_meta={"fold": h, "method": method, "k": k,
-                            "dataset": ds.name}, blocking=False)
+                last_done_step,
+                {"alpha": res.alpha, "f": res.f, "n_iter": res.n_iter,
+                 "converged": res.converged, "b_up": res.b_up,
+                 "b_low": res.b_low},
+                extra_meta={"phase": "done", "fold": h, "method": method,
+                            "k": k, "dataset": ds.name, "seed": seed},
+                blocking=False)
 
     if checkpoint_manager is not None:
         checkpoint_manager.wait()
     return CVReport(dataset=ds.name, method=method, k=k, n=n,
+                    kernel_time=kernel_time, folds=folds)
+
+
+def run_cv_batched(ds: SVMDataset, k: int = 10, tol: float = 1e-3,
+                   max_iter: int = 5_000_000, seed: int = 0,
+                   kernel_backend: str = "jnp",
+                   chunk_iters: int = 4096) -> CVReport:
+    """Cold k-fold CV with all folds solved concurrently (method
+    "cold_batched"): independent solves are a batch, not a loop.
+
+    Produces the same per-fold fixed points as ``run_cv(method="cold")``
+    (bit-identical alphas — the engine body is shared); only the schedule
+    differs. Seeded chains stay sequential by nature — their concurrency
+    axis is the hyper-parameter grid (see ``repro.core.grid``)."""
+    X = jnp.asarray(ds.X)
+    y = jnp.asarray(ds.y, jnp.float64)
+
+    t0 = time.perf_counter()
+    K = kernel_matrix(X, X, kind="rbf", gamma=ds.gamma,
+                      backend=kernel_backend)
+    K.block_until_ready()
+    kernel_time = time.perf_counter() - t0
+
+    chunks = kfold_chunks(ds.n, k, seed=seed)
+    n = chunks.size
+    K = K[:n][:, :n]
+    y = y[:n]
+    masks = jnp.asarray(_fold_masks(chunks))
+
+    t0 = time.perf_counter()
+    res = smo_solve_batched(K, y, masks, ds.C, jnp.zeros((k, n), K.dtype),
+                            jnp.tile(-y, (k, 1)), tol=tol, max_iter=max_iter,
+                            chunk_iters=chunk_iters)
+    jax.block_until_ready(res)
+    solve_time = time.perf_counter() - t0
+
+    folds = []
+    for h in range(k):
+        fold_res = jax.tree.map(lambda a: a[h], res)
+        test_idx = jnp.asarray(chunks[h])
+        b = bias_from_solution(fold_res, y, masks[h], ds.C)
+        pred = predict(K[test_idx], y, fold_res.alpha, b)
+        folds.append(FoldStat(
+            fold=h, seed_from=-1, n_iter=int(fold_res.n_iter),
+            init_time=0.0, solve_time=solve_time / k,
+            acc_correct=int(jnp.sum(pred == y[test_idx])),
+            acc_total=int(test_idx.shape[0]),
+            objective=float(dual_objective(K, y, fold_res.alpha)),
+            converged=bool(fold_res.converged)))
+    return CVReport(dataset=ds.name, method="cold_batched", k=k, n=n,
                     kernel_time=kernel_time, folds=folds)
 
 

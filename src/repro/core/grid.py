@@ -1,0 +1,221 @@
+"""(C, gamma) hyper-parameter grid search over alpha-seeded k-fold CV.
+
+The paper warm-starts fold h+1 from fold h. A hyper-parameter grid has two
+more warm-start axes, and one big reuse axis, which this driver exploits on
+top of the unified engine:
+
+* **kernel reuse** — the RBF kernel matrix depends on gamma only, so every
+  C cell (and every fold) of a gamma row shares one ``kernel_matrix`` call;
+* **C-adjacent seeding** (``seed_across_C=True``) — fold 0 of cell
+  (C_m, gamma) warm-starts from fold 0 of (C_{m-1}, gamma) via
+  ``seeding.scale_seed_C`` (bounded-SV alphas scale ~linearly with C);
+* **batched concurrency** — solves with no seed dependency run as ONE
+  batched engine call instead of a python loop: fold 0 of every cell in a
+  gamma row (when not C-chaining), every fold h>0 across cells (each cell
+  seeds from its own fold h-1, so cells are mutually independent), and the
+  entire row for ``method="cold"`` (k * n_C independent lanes).
+
+The fold chain inside a cell stays sequential — that is the paper's
+algorithm — but the grid turns its breadth axes into vmap lanes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import seeding
+from repro.core.cv import _fold_masks, _transition_idx
+from repro.data.svm_suite import SVMDataset, kfold_chunks
+from repro.svm import (bias_from_solution, init_f, kernel_matrix, predict,
+                       smo_solve_batched)
+
+
+@dataclasses.dataclass
+class GridCell:
+    C: float
+    gamma: float
+    iterations: int
+    acc_correct: int
+    acc_total: int
+    converged: bool
+
+    @property
+    def accuracy(self) -> float:
+        return self.acc_correct / max(self.acc_total, 1)
+
+
+@dataclasses.dataclass
+class GridReport:
+    dataset: str
+    method: str
+    k: int
+    n: int
+    kernel_time: float
+    seed_time: float
+    solve_time: float
+    cells: list[GridCell]
+
+    @property
+    def total_iterations(self) -> int:
+        return int(sum(c.iterations for c in self.cells))
+
+    def best(self) -> GridCell:
+        return max(self.cells, key=lambda c: c.accuracy)
+
+    def rows(self) -> list[dict]:
+        return [{"dataset": self.dataset, "method": self.method,
+                 "C": c.C, "gamma": c.gamma, "k": self.k,
+                 "iterations": c.iterations,
+                 "accuracy": round(c.accuracy, 4),
+                 "converged": c.converged} for c in self.cells]
+
+
+def _lane(tree, idx):
+    return jax.tree.map(lambda a: a[idx], tree)
+
+
+def run_grid(ds: SVMDataset, Cs, gammas, k: int = 10, method: str = "sir",
+             tol: float = 1e-3, max_iter: int = 5_000_000, seed: int = 0,
+             seed_across_C: bool = False, chunk_iters: int = 4096,
+             kernel_backend: str = "jnp") -> GridReport:
+    """Cross-validate every (C, gamma) cell; returns per-cell accuracy and
+    iteration counts (``GridReport.best()`` picks the winner).
+
+    ``method`` is the fold-chain seeder inside each cell ("cold" disables
+    chaining and batches the whole gamma row at once). ``seed_across_C``
+    additionally chains fold 0 along ascending C within a gamma row —
+    trades fold-0 concurrency for warm starts, which wins when C values
+    are dense (adjacent cells share most of their support vectors).
+    """
+    Cs = sorted(float(c) for c in Cs)
+    gammas = [float(g) for g in gammas]
+    m = len(Cs)
+    y_all = jnp.asarray(ds.y, jnp.float64)
+    X = jnp.asarray(ds.X)
+
+    chunks = kfold_chunks(ds.n, k, seed=seed)
+    n = chunks.size
+    y = y_all[:n]
+    masks = jnp.asarray(_fold_masks(chunks))          # (k, n)
+    C_vec = jnp.asarray(Cs, jnp.float64)              # (m,)
+
+    kernel_time = seed_time = solve_time = 0.0
+    cells: list[GridCell] = []
+
+    for gamma in gammas:
+        t0 = time.perf_counter()
+        K = kernel_matrix(X, X, kind="rbf", gamma=gamma,
+                          backend=kernel_backend)[:n][:, :n]
+        K.block_until_ready()
+        kernel_time += time.perf_counter() - t0
+
+        iters = np.zeros(m, np.int64)
+        correct = np.zeros(m, np.int64)
+        total = np.zeros(m, np.int64)
+        conv = np.ones(m, bool)
+
+        def eval_fold(res_lane, h, ci, C):
+            test_idx = jnp.asarray(chunks[h])
+            b = bias_from_solution(res_lane, y, masks[h], C)
+            pred = predict(K[test_idx], y, res_lane.alpha, b)
+            correct[ci] += int(jnp.sum(pred == y[test_idx]))
+            total[ci] += int(test_idx.shape[0])
+            iters[ci] += int(res_lane.n_iter)
+            conv[ci] &= bool(res_lane.converged)
+
+        if method == "cold":
+            # every (cell, fold) is independent: one batch of m*k lanes
+            t0 = time.perf_counter()
+            bmasks = jnp.tile(masks, (m, 1))                      # (m*k, n)
+            bC = jnp.repeat(C_vec, k)
+            res = smo_solve_batched(K, y, bmasks, bC,
+                                    jnp.zeros((m * k, n), K.dtype),
+                                    jnp.tile(-y, (m * k, 1)), tol=tol,
+                                    max_iter=max_iter,
+                                    chunk_iters=chunk_iters)
+            jax.block_until_ready(res)
+            solve_time += time.perf_counter() - t0
+            for ci in range(m):
+                for h in range(k):
+                    eval_fold(_lane(res, ci * k + h), h, ci, Cs[ci])
+        else:
+            seeder = seeding.SEEDERS[method]
+            # ---- fold 0 across the C row ----
+            if seed_across_C and m > 1:
+                # chain along ascending C (scale_seed_C), sequential
+                lanes = []
+                prev_alpha = None
+                for ci, C in enumerate(Cs):
+                    t0 = time.perf_counter()
+                    if prev_alpha is None:
+                        alpha0 = jnp.zeros(n, K.dtype)
+                        f0 = -y
+                    else:
+                        alpha0 = seeding.scale_seed_C(
+                            prev_alpha, y, Cs[ci - 1], C, masks[0])
+                        f0 = init_f(K, y, alpha0)
+                    jax.block_until_ready((alpha0, f0))
+                    seed_time += time.perf_counter() - t0
+                    t0 = time.perf_counter()
+                    r = smo_solve_batched(K, y, masks[0][None], C,
+                                          alpha0[None], f0[None], tol=tol,
+                                          max_iter=max_iter,
+                                          chunk_iters=chunk_iters)
+                    jax.block_until_ready(r)
+                    solve_time += time.perf_counter() - t0
+                    lanes.append(r)
+                    prev_alpha = r.alpha[0]
+                prev = jax.tree.map(
+                    lambda *xs: jnp.concatenate(xs, 0), *lanes)
+            else:
+                # fold 0 of every cell is cold/independent: one batch
+                t0 = time.perf_counter()
+                prev = smo_solve_batched(K, y,
+                                         jnp.tile(masks[0][None], (m, 1)),
+                                         C_vec, jnp.zeros((m, n), K.dtype),
+                                         jnp.tile(-y, (m, 1)), tol=tol,
+                                         max_iter=max_iter,
+                                         chunk_iters=chunk_iters)
+                jax.block_until_ready(prev)
+                solve_time += time.perf_counter() - t0
+            for ci in range(m):
+                eval_fold(_lane(prev, ci), 0, ci, Cs[ci])
+
+            # ---- folds 1..k-1: cells are independent given their own
+            # fold h-1 result -> seed per cell, solve the row as a batch ----
+            for h in range(1, k):
+                S_idx, R_idx, T_idx = _transition_idx(chunks, h - 1, h)
+                t0 = time.perf_counter()
+                alpha0s = jnp.stack([
+                    seeder(K, y, Cs[ci], _lane(prev, ci), S_idx, R_idx, T_idx)
+                    for ci in range(m)])
+                # per-cell init_f (not one batched GEMM): same reduction
+                # order as run_cv, so grid cells match it bit-exactly
+                f0s = jnp.stack([init_f(K, y, alpha0s[ci]) for ci in range(m)])
+                jax.block_until_ready((alpha0s, f0s))
+                seed_time += time.perf_counter() - t0
+                t0 = time.perf_counter()
+                prev = smo_solve_batched(K, y,
+                                         jnp.tile(masks[h][None], (m, 1)),
+                                         C_vec, alpha0s, f0s, tol=tol,
+                                         max_iter=max_iter,
+                                         chunk_iters=chunk_iters)
+                jax.block_until_ready(prev)
+                solve_time += time.perf_counter() - t0
+                for ci in range(m):
+                    eval_fold(_lane(prev, ci), h, ci, Cs[ci])
+
+        for ci in range(m):
+            cells.append(GridCell(C=Cs[ci], gamma=gamma,
+                                  iterations=int(iters[ci]),
+                                  acc_correct=int(correct[ci]),
+                                  acc_total=int(total[ci]),
+                                  converged=bool(conv[ci])))
+
+    return GridReport(dataset=ds.name, method=method, k=k, n=n,
+                      kernel_time=kernel_time, seed_time=seed_time,
+                      solve_time=solve_time, cells=cells)

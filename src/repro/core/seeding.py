@@ -103,6 +103,34 @@ def _bias(prev: SMOResult, y: jnp.ndarray, train_mask: jnp.ndarray, C) -> jnp.nd
 
 
 # --------------------------------------------------------------------------
+# grid transitions: seed across adjacent C cells (same fold, same gamma)
+# --------------------------------------------------------------------------
+
+@jax.jit
+def scale_seed_C(alpha: jnp.ndarray, y: jnp.ndarray, C_old, C_new,
+                 train_mask: jnp.ndarray) -> jnp.ndarray:
+    """Warm-start the (C_new, gamma) grid cell from the (C_old, gamma)
+    solution of the SAME fold.
+
+    Bounded SVs sit at alpha = C, and the bound scales linearly with C, so
+    ``alpha * C_new / C_old`` is a strong predictor of the neighbour cell's
+    solution (free SVs move less; SMO polishes them). Scaling preserves
+    ``sum(y * alpha) = 0`` up to fp error; the water-fill repair makes it
+    exact again after box clipping. Rows outside ``train_mask`` stay 0.
+
+    This generalizes the paper's fold-chain warm start to the C axis of a
+    hyper-parameter grid (see ``repro.core.grid``).
+    """
+    s = jnp.asarray(C_new, alpha.dtype) / jnp.asarray(C_old, alpha.dtype)
+    beta = y * alpha * s
+    lo, hi = _box(y, C_new)
+    lo = jnp.where(train_mask, lo, 0.0)
+    hi = jnp.where(train_mask, hi, 0.0)
+    beta = water_fill(jnp.clip(beta, lo, hi), lo, hi, jnp.zeros((), alpha.dtype))
+    return y * beta
+
+
+# --------------------------------------------------------------------------
 # cold start (the LibSVM baseline)
 # --------------------------------------------------------------------------
 
@@ -165,7 +193,8 @@ def sir_seed(K, y, C, prev: SMOResult, S_idx, R_idx, T_idx,
     * ``"skip"`` — beyond-paper: drop that alpha and let the (uniform,
       diffuse) repair absorb the mass. Avoids poisoning single coordinates
       with large wrong-sign alphas, which SMO then diffuses over the whole
-      free set (measured in EXPERIMENTS.md §Paper-validation).
+      free set (iteration counts for both variants come from
+      ``benchmarks.table1_kfold``; see DESIGN.md §Benchmarks).
     """
     if rng_key is None:
         rng_key = jax.random.PRNGKey(0)

@@ -4,7 +4,7 @@ The container is offline, so Adult/Heart/Madelon/MNIST/Webdata cannot be
 downloaded. We generate binary tasks with the paper's dimensionalities and
 hyper-parameters (Table 2); the three large sets are cardinality-scaled to a
 CPU budget (paper claims are about iteration counts / identical fixed points,
-which are scale-invariant — see DESIGN.md §8).
+which are scale-invariant — see DESIGN.md §Synthetic datasets).
 
 Generator: two anisotropic Gaussian clusters over ``n_informative`` dims,
 remaining dims pure noise (Madelon-style), plus label noise ``flip``.
@@ -14,6 +14,7 @@ Deterministic per (name, seed) so any worker can regenerate any shard
 from __future__ import annotations
 
 import dataclasses
+import zlib
 
 import numpy as np
 
@@ -56,7 +57,10 @@ def make_dataset(name: str, *, seed: int = 0, n_override: int | None = None) -> 
     n, d, C, gamma, n_inf, sep, flip, balanced = SPECS[name]
     if n_override is not None:
         n = n_override
-    rng = np.random.default_rng(abs(hash((name, seed))) % (2**32))
+    # crc32, NOT hash(): str hashing is salted per process (PYTHONHASHSEED),
+    # which silently broke the "any worker can regenerate any shard" property
+    # and made cross-process results (tests, benchmarks) non-reproducible
+    rng = np.random.default_rng(zlib.crc32(f"{name}:{seed}".encode()))
     if balanced:
         y = np.repeat([1, -1], [n - n // 2, n // 2])
         y = y[rng.permutation(n)]
@@ -83,8 +87,13 @@ def kfold_chunks(n: int, k: int, *, seed: int = 0) -> np.ndarray:
 
     Instances beyond k*(n//k) are dropped (static shapes: one compiled solver
     serves all folds). Chunk h is fold h's test set.
+
+    Indices are a permutation of range(k*(n//k)) — the same range callers
+    slice their arrays to. (Permuting range(n) and truncating, as this used
+    to do, leaves indices >= k*(n//k) in the chunks whenever k does not
+    divide n; jax's clamping scatter then silently corrupted that fold's
+    train mask. For k | n the draw is unchanged.)
     """
     rng = np.random.default_rng(seed)
-    perm = rng.permutation(n)
     m = n // k
-    return perm[: k * m].reshape(k, m)
+    return rng.permutation(k * m).reshape(k, m)

@@ -72,8 +72,9 @@ def moe_apply(params, x, cfg, rules=None, act="silu"):
     """x: (B,S,D) -> (y, aux_loss). Dispatches on cfg.moe_impl; shard_map
     needs a mesh whose batch axes divide B (falls back to scatter)."""
     if cfg.moe_impl == "shard_map":
-        mesh = jax.sharding.get_abstract_mesh()
-        if mesh is not None and not mesh.empty:
+        from repro.sharding import current_abstract_mesh
+        mesh = current_abstract_mesh()
+        if mesh is not None:
             batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
             n_b = 1
             for a in batch_axes:

@@ -1,4 +1,4 @@
 from repro.sharding.rules import (  # noqa: F401
     LogicalAxisRules, DEFAULT_RULES, logical_to_pspec, spec_tree_to_pspecs,
-    constrain, named_sharding,
+    constrain, current_abstract_mesh, named_sharding,
 )

@@ -94,14 +94,30 @@ def named_sharding(mesh: Mesh, axes: tuple, rules: LogicalAxisRules):
     return NamedSharding(mesh, logical_to_pspec(axes, rules, mesh))
 
 
+def current_abstract_mesh():
+    """The ambient abstract mesh, or ``None``.
+
+    ``jax.sharding.get_abstract_mesh`` / ``set_mesh`` only exist on newer jax;
+    on older versions there is no ambient-mesh scope, so constraints degrade
+    to no-ops (the caller's code still runs, unsharded)."""
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is None:
+        return None
+    mesh = get()
+    if mesh is None or mesh.empty:
+        return None
+    return mesh
+
+
 def constrain(x, axes: tuple, rules: LogicalAxisRules | None = None):
     """with_sharding_constraint by logical axes. No-op outside a mesh scope
-    (``jax.sharding.set_mesh``), so the same model code runs in single-device
-    smoke tests and in the 512-device dry-run unchanged."""
+    (``jax.sharding.set_mesh``) and on jax versions without ambient-mesh
+    support, so the same model code runs in single-device smoke tests and in
+    the 512-device dry-run unchanged."""
     if rules is None:
         return x
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty:
+    mesh = current_abstract_mesh()
+    if mesh is None:
         return x
     spec = logical_to_pspec(axes, rules, mesh, shape=x.shape)
     return jax.lax.with_sharding_constraint(x, spec)

@@ -1,4 +1,5 @@
-"""Distributed SMO: the paper's solver on the production mesh.
+"""Distributed SMO: the paper's solver on the production mesh — a thin
+wrapper over the unified engine's ``ShardedRBF`` kernel source.
 
 Scale-out layout for n instances (millions) across (pod, data, model):
   * X (n, d)   — instances sharded over ("pod","data"), features over "model"
@@ -11,7 +12,8 @@ sharded f (all-reduce), two kernel-row matvecs (feature-axis psum), and a
 rank-2 f update (purely local). ``smo_iterations`` runs a chunk of
 iterations inside one jit — the chunk is the dispatch unit a cluster
 scheduler retries on failure (alpha, f checkpoint between chunks, exactly
-like the CV fold chain).
+like the CV fold chain). The iteration core itself lives in
+``repro.svm.engine`` — one body serves this path and the dense solver.
 
 This module is the SVM-side multi-pod dry-run artifact: lower+compile on
 the 512-chip mesh is exercised by scripts/dryrun_svm.py.
@@ -23,16 +25,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.sharding import constrain
-
-_INF = jnp.inf
-_TAU = 1e-12
-
-RULES = {
-    "inst": ("pod", "data"),    # instance axis
-    "feat": "model",            # feature axis
-    None: None,
-}
+from repro.svm.engine import (EngineState, RULES, ShardedRBF,  # noqa: F401
+                              optimality, smo_chunk)
 
 
 def rbf_row(X, i, gamma, sq_norms, *, impl: str = "gather"):
@@ -40,100 +34,35 @@ def rbf_row(X, i, gamma, sq_norms, *, impl: str = "gather"):
 
     impl="gather": xi = X[i] — a dynamic-slice on the 2D-sharded X, which
     the SPMD partitioner lowers to large all-gathers (measured: ~6 MB/iter,
-    collective-dominant — EXPERIMENTS.md §Perf svm-smo baseline).
+    collective-dominant — DESIGN.md §Distributed SMO, results/dryrun/).
 
     impl="onehot": xi = onehot(i) @ X — a skinny matvec that reduces over
     the *sharded instance axis* with a (d,)-sized psum instead of gathering
     rows; scalar reads (f[i], alpha updates) use the same trick. Collective
-    bytes per iteration drop ~1000x (the §Perf iteration).
+    bytes per iteration drop ~1000x (DESIGN.md §Distributed SMO).
     """
-    if impl == "onehot":
-        oh = (jnp.arange(X.shape[0]) == i).astype(X.dtype)
-        xi = oh @ X                                 # (d,) psum over inst
-    else:
-        xi = X[i]                                   # (d,) gathered row
-    cross = X @ xi                                  # (n,) feature-axis psum
-    d2 = jnp.maximum(sq_norms + jnp.sum(xi * xi) - 2.0 * cross, 0.0)
-    return jnp.exp(-gamma * d2)
+    return ShardedRBF(X, gamma, sq_norms, impl=impl).row(i)
 
 
 @functools.partial(jax.jit, static_argnames=("n_iters", "gamma", "impl"))
 def smo_iterations(X, y, train_mask, alpha, f, sq_norms, C,
                    gamma: float = 0.5, n_iters: int = 100, tol: float = 1e-3,
                    impl: str = "gather"):
-    """Run ``n_iters`` SMO iterations with on-demand kernel rows.
+    """Run up to ``n_iters`` SMO iterations with on-demand kernel rows.
 
     All state tensors are instance-sharded; working-set selection reduces
-    globally. Returns (alpha, f, iterations_done, gap).
+    globally. Returns (alpha, f, iterations_done, gap). ``impl`` picks the
+    kernel-row strategy: "gather", "onehot", or "onehot_fused" (WSS-1 with
+    both rows in one pass over X — see ``engine.OnDemandRBF``).
+
+    This is exactly one engine chunk: an already-converged input returns
+    unchanged with iterations_done = 0.
     """
-    C = jnp.asarray(C, X.dtype)
-
-    def read(v, i):
-        if impl.startswith("onehot"):
-            return jnp.sum(jnp.where(jnp.arange(v.shape[0]) == i, v, 0))
-        return v[i]
-
-    def sets(alpha):
-        pos, neg = y > 0, y < 0
-        at_lo, at_hi = alpha <= 0.0, alpha >= C
-        i_up = train_mask & ~((pos & at_hi) | (neg & at_lo))
-        i_low = train_mask & ~((pos & at_lo) | (neg & at_hi))
-        return i_up, i_low
-
-    def body(state):
-        alpha, f, it, _ = state
-        i_up, i_low = sets(alpha)
-        i = jnp.argmin(jnp.where(i_up, f, _INF))
-        f_i = read(f, i)
-        if impl == "onehot_fused":
-            # WSS-1: j from f alone -> both kernel rows in ONE pass over X
-            # (halves the dominant per-iteration HBM stream; WSS-1 needs
-            # ~10-30% more iterations than WSS-2 — net win when memory-bound)
-            j = jnp.argmax(jnp.where(i_low, f, -_INF))
-            oh2 = jnp.stack([(jnp.arange(X.shape[0]) == i).astype(X.dtype),
-                             (jnp.arange(X.shape[0]) == j).astype(X.dtype)])
-            xij = oh2 @ X                            # (2, d) psum over inst
-            cross = X @ xij.T                        # (n, 2): one X stream
-            d2 = jnp.maximum(sq_norms[:, None] + jnp.sum(xij * xij, 1)[None]
-                             - 2.0 * cross, 0.0)
-            K2 = jnp.exp(-gamma * d2)
-            K_i = constrain(K2[:, 0], ("inst",), RULES)
-            K_j = constrain(K2[:, 1], ("inst",), RULES)
-        else:
-            K_i = rbf_row(X, i, gamma, sq_norms, impl=impl)
-            K_i = constrain(K_i, ("inst",), RULES)
-            diff = f - f_i
-            eta = jnp.maximum(2.0 - 2.0 * K_i, _TAU)  # K_ii = 1 for RBF
-            gain = jnp.where(i_low & (diff > 0), diff * diff / eta, -_INF)
-            j = jnp.argmax(gain)
-            K_j = rbf_row(X, j, gamma, sq_norms, impl=impl)
-            K_j = constrain(K_j, ("inst",), RULES)
-        f_j, a_i, a_j = read(f, j), read(alpha, i), read(alpha, j)
-        y_i, y_j = read(y, i), read(y, j)
-        eta_ij = jnp.maximum(2.0 - 2.0 * read(K_i, j), _TAU)
-        delta = (f_j - f_i) / eta_ij
-        hi_i = jnp.where(y_i > 0, C - a_i, a_i)
-        hi_j = jnp.where(y_j > 0, a_j, C - a_j)
-        delta = jnp.maximum(jnp.minimum(jnp.minimum(delta, hi_i), hi_j), 0.0)
-        if impl.startswith("onehot"):
-            idx = jnp.arange(alpha.shape[0])
-            alpha = alpha + jnp.where(idx == i, y_i * delta, 0.0) \
-                - jnp.where(idx == j, y_j * delta, 0.0)
-        else:
-            alpha = alpha.at[i].add(y_i * delta)
-            alpha = alpha.at[j].add(-y_j * delta)
-        alpha = jnp.clip(alpha, 0.0, C)
-        f = f + delta * (K_i - K_j)
-        f = constrain(f, ("inst",), RULES)
-        i_up, i_low = sets(alpha)
-        gap = jnp.max(jnp.where(i_low, f, -_INF)) - \
-            jnp.min(jnp.where(i_up, f, _INF))
-        return alpha, f, it + 1, gap
-
-    def cond(state):
-        _, _, it, gap = state
-        return (it < n_iters) & (gap > tol)
-
-    state = (alpha, f, jnp.zeros((), jnp.int32), jnp.asarray(_INF, X.dtype))
-    alpha, f, it, gap = jax.lax.while_loop(cond, body, state)
-    return alpha, f, it, gap
+    source = ShardedRBF(X, gamma, sq_norms, impl=impl)
+    state = EngineState(alpha, f, jnp.zeros((), jnp.int32),
+                        jnp.zeros((), bool))
+    state = smo_chunk(source, y, train_mask, C, state, n_iters=n_iters,
+                      wss="1" if source.fused else "2", tol=tol)
+    _, _, gap = optimality(state.alpha, state.f, y, train_mask,
+                           jnp.asarray(C, X.dtype))
+    return state.alpha, state.f, state.n_iter, gap

@@ -1,0 +1,488 @@
+"""The one SMO engine: a single iteration core behind pluggable kernel-row
+providers, chunked resumable dispatch, and batched fold execution.
+
+Why one engine
+--------------
+The repo used to carry two divergent copies of the SMO iteration: the dense
+LibSVM-parity solver (``smo.py``) and the sharded on-demand-kernel solver
+(``distributed.py``). Every working-set-selection or update fix had to land
+twice, and the CV driver could only use the dense copy, strictly one fold at
+a time. This module hosts the WSS-1/WSS-2 selection, the box-clipped rank-2
+update, and the duality-gap logic exactly once; ``smo.smo_solve`` and
+``distributed.smo_iterations`` are thin wrappers over it (see DESIGN.md).
+
+KernelSource protocol
+---------------------
+A kernel source answers "give me kernel row i" for the engine, plus the
+scalar read / scatter-update idioms that match how the row is produced:
+
+* ``DenseKernel``  — precomputed K; direct indexing (the LibSVM-parity path).
+* ``OnDemandRBF``  — recompute K[:, i] from X each iteration
+  (``impl="gather"`` dynamic-slices x_i; ``impl="onehot"`` reads x_i and all
+  scalars via one-hot contractions so the instance axis can stay sharded).
+* ``FusedRBF``     — WSS-1 pair selection from f alone, then BOTH kernel
+  rows in one pass over X (halves the dominant HBM stream).
+* ``ShardedRBF``   — OnDemandRBF/FusedRBF plus logical-axis sharding
+  constraints for the production mesh (the old ``distributed.py`` path).
+
+All sources are jax pytrees: array state (K or X) is traced, configuration
+(gamma, impl) is static, so jit caches one executable per source kind.
+
+Chunked dispatch
+----------------
+Instead of one monolithic ``lax.while_loop`` running to convergence, the
+host dispatches jit'd chunks of ``chunk_iters`` iterations and inspects the
+``done`` flag between chunks. The chunk is:
+
+* the mid-fold checkpoint unit — ``solve(..., on_chunk=...)`` lets the CV
+  driver snapshot (alpha, f, n_iter) between chunks, so recovery no longer
+  loses an entire in-flight fold;
+* the retry unit the distributed scheduler assumes (``smo_iterations`` is
+  exactly one chunk).
+
+Convergence is detected *inside* the chunk body (a converged state passes
+through untouched), which makes the same body ``vmap``-safe for batched
+execution: converged folds freeze while the rest keep iterating.
+
+Bit-parity contract
+-------------------
+For a given source the engine replays the seed solvers' floating-point ops
+in the same order, so ``smo_solve`` (DenseKernel) and ``smo_iterations``
+(ShardedRBF) produce bit-identical alpha/f to the pre-engine implementations
+(covered by tests/test_engine.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constrain
+
+_INF = jnp.inf
+_TAU = 1e-12
+
+#: logical-axis rules for the sharded sources (instances over pod x data,
+#: features over model) — re-exported by ``repro.svm.distributed``.
+RULES = {
+    "inst": ("pod", "data"),
+    "feat": "model",
+    None: None,
+}
+
+
+class SMOResult(NamedTuple):
+    alpha: jnp.ndarray      # (n,) dual variables (0 outside train_mask)
+    f: jnp.ndarray          # (n,) optimality indicators, globally consistent
+    n_iter: jnp.ndarray     # () int64 — SMO iterations executed
+    converged: jnp.ndarray  # () bool
+    b_up: jnp.ndarray       # () min f over I_up at exit
+    b_low: jnp.ndarray      # () max f over I_low at exit
+
+
+class EngineState(NamedTuple):
+    """Resumable solver state — the unit chunks pass between themselves,
+    checkpoints serialize, and the batched driver stacks along axis 0."""
+    alpha: jnp.ndarray
+    f: jnp.ndarray
+    n_iter: jnp.ndarray   # () int — updates applied so far
+    done: jnp.ndarray     # () bool — converged or iteration-capped
+
+
+def _sets(alpha, y, mask, C):
+    """I_up / I_low membership (paper Eq. 4): I_up = I_u + I_m, I_low = I_l + I_m."""
+    pos, neg = y > 0, y < 0
+    at_lo, at_hi = alpha <= 0.0, alpha >= C
+    i_up = mask & ~((pos & at_hi) | (neg & at_lo))
+    i_low = mask & ~((pos & at_lo) | (neg & at_hi))
+    return i_up, i_low
+
+
+def _argmin(v):
+    """First index of the minimum. Same selection (and tie-breaking: first
+    occurrence) as ``jnp.argmin``, but built from plain min reduces — XLA's
+    variadic argmin reduce is an order of magnitude slower on CPU, and
+    catastrophically so when vmapped over a fold batch."""
+    m = jnp.min(v)
+    idx = jnp.arange(v.shape[0])
+    return jnp.min(jnp.where(v == m, idx, v.shape[0]))
+
+
+def _argmax(v):
+    m = jnp.max(v)
+    idx = jnp.arange(v.shape[0])
+    return jnp.min(jnp.where(v == m, idx, v.shape[0]))
+
+
+def optimality(alpha, f, y, train_mask, C):
+    """(b_up, b_low, gap) of a state; gap = -inf when a working pair cannot
+    be formed (empty I_up or I_low)."""
+    i_up, i_low = _sets(alpha, y, train_mask, C)
+    has = jnp.any(i_up) & jnp.any(i_low)
+    b_up = jnp.min(jnp.where(i_up, f, _INF))
+    b_low = jnp.max(jnp.where(i_low, f, -_INF))
+    gap = jnp.where(has, b_low - b_up, -_INF)
+    return b_up, b_low, gap
+
+
+# --------------------------------------------------------------------------
+# kernel-row providers
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+class DenseKernel:
+    """Precomputed kernel matrix — today's LibSVM-parity hot path.
+
+    Direct indexing (``v[i]`` / ``.at[i].add``) is the right idiom both
+    solo and under ``vmap``: the one-hot contraction alternative (which the
+    sharded sources use to keep the instance axis distributed) was measured
+    ~1.8x slower per batched iteration on CPU — the extra (b, n) masked
+    passes cost more than the batched gathers they replace.
+    """
+
+    fused = False
+
+    def __init__(self, K):
+        self.K = K
+
+    @property
+    def dtype(self):
+        return self.K.dtype
+
+    def diag(self):
+        return jnp.diagonal(self.K)
+
+    def row(self, i):
+        return self.K[i]
+
+    def rows2(self, i, j):
+        return self.K[i], self.K[j]
+
+    def read(self, v, i):
+        return v[i]
+
+    def update_alpha(self, alpha, i, j, y_i, y_j, delta):
+        alpha = alpha.at[i].add(y_i * delta)
+        return alpha.at[j].add(-y_j * delta)
+
+    def constrain(self, v):
+        return v
+
+    def tree_flatten(self):
+        return (self.K,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@jax.tree_util.register_pytree_node_class
+class OnDemandRBF:
+    """RBF kernel rows recomputed from X each iteration (K_ii = 1).
+
+    ``impl="gather"``: x_i = X[i] — a dynamic-slice; on a 2D-sharded X the
+    SPMD partitioner lowers this to large all-gathers.
+
+    ``impl="onehot"``: x_i = onehot(i) @ X — a skinny matvec reducing over
+    the *sharded instance axis*; scalar reads and the alpha scatter use the
+    same trick, dropping collective bytes per iteration ~1000x.
+    """
+
+    def __init__(self, X, gamma: float, sq_norms=None, impl: str = "gather"):
+        self.X = X
+        self.gamma = gamma
+        self.sq_norms = jnp.sum(X * X, axis=-1) if sq_norms is None else sq_norms
+        self.impl = impl
+
+    @property
+    def dtype(self):
+        return self.X.dtype
+
+    @property
+    def fused(self):
+        return self.impl == "onehot_fused"
+
+    def diag(self):
+        return jnp.ones(self.X.shape[0], self.X.dtype)
+
+    def row(self, i):
+        X = self.X
+        if self.impl.startswith("onehot"):
+            oh = (jnp.arange(X.shape[0]) == i).astype(X.dtype)
+            xi = oh @ X                                 # (d,) psum over inst
+        else:
+            xi = X[i]                                   # (d,) gathered row
+        cross = X @ xi                                  # (n,) feature-axis psum
+        d2 = jnp.maximum(self.sq_norms + jnp.sum(xi * xi) - 2.0 * cross, 0.0)
+        return self.constrain(jnp.exp(-self.gamma * d2))
+
+    def rows2(self, i, j):
+        """Both kernel rows in ONE pass over X (the fused-WSS-1 trick:
+        halves the dominant per-iteration HBM stream; WSS-1 needs ~10-30%
+        more iterations than WSS-2 — net win when memory-bound)."""
+        X = self.X
+        oh2 = jnp.stack([(jnp.arange(X.shape[0]) == i).astype(X.dtype),
+                         (jnp.arange(X.shape[0]) == j).astype(X.dtype)])
+        xij = oh2 @ X                                   # (2, d) psum over inst
+        cross = X @ xij.T                               # (n, 2): one X stream
+        d2 = jnp.maximum(self.sq_norms[:, None] + jnp.sum(xij * xij, 1)[None]
+                         - 2.0 * cross, 0.0)
+        K2 = jnp.exp(-self.gamma * d2)
+        return self.constrain(K2[:, 0]), self.constrain(K2[:, 1])
+
+    def read(self, v, i):
+        if self.impl.startswith("onehot"):
+            return jnp.sum(jnp.where(jnp.arange(v.shape[0]) == i, v, 0))
+        return v[i]
+
+    def update_alpha(self, alpha, i, j, y_i, y_j, delta):
+        if self.impl.startswith("onehot"):
+            idx = jnp.arange(alpha.shape[0])
+            return alpha + jnp.where(idx == i, y_i * delta, 0.0) \
+                - jnp.where(idx == j, y_j * delta, 0.0)
+        alpha = alpha.at[i].add(y_i * delta)
+        return alpha.at[j].add(-y_j * delta)
+
+    def constrain(self, v):
+        return v
+
+    def tree_flatten(self):
+        return (self.X, self.sq_norms), (self.gamma, self.impl)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        X, sq_norms = children
+        gamma, impl = aux
+        return cls(X, gamma, sq_norms, impl)
+
+
+@jax.tree_util.register_pytree_node_class
+class FusedRBF(OnDemandRBF):
+    """One-pass two-row RBF evaluation; forces WSS-1 pair selection (the
+    second index must come from f alone so both rows stream together)."""
+
+    def __init__(self, X, gamma: float, sq_norms=None, impl: str = "onehot_fused"):
+        super().__init__(X, gamma, sq_norms, impl="onehot_fused")
+
+
+@jax.tree_util.register_pytree_node_class
+class ShardedRBF(OnDemandRBF):
+    """OnDemandRBF plus logical-axis sharding constraints — the production
+    mesh path (instances over ("pod","data"), features over "model"). Off
+    a mesh scope the constraints are no-ops, so the same source serves
+    single-device tests and the 512-chip dry-run."""
+
+    def constrain(self, v):
+        return constrain(v, ("inst",), RULES)
+
+
+# --------------------------------------------------------------------------
+# the single iteration core
+# --------------------------------------------------------------------------
+
+def _step(source, y, train_mask, C, diag, tol, it_cap, wss, state):
+    """One SMO iteration: WSS pair selection + box-clipped rank-2 update.
+
+    A state that is already optimal (or iteration-capped) passes through
+    bit-unchanged with ``done`` set — this is what makes the same body safe
+    under ``vmap`` (converged folds freeze) and lets chunks over-dispatch
+    without overshooting.
+    """
+    alpha, f, it, done = state
+    i_up, i_low = _sets(alpha, y, train_mask, C)
+    has = jnp.any(i_up) & jnp.any(i_low)
+    b_up = jnp.min(jnp.where(i_up, f, _INF))
+    b_low = jnp.max(jnp.where(i_low, f, -_INF))
+    gap = jnp.where(has, b_low - b_up, -_INF)
+    done = done | (gap <= tol) | (it >= it_cap)
+
+    # --- select i: minimal f over I_up ---
+    i = _argmin(jnp.where(i_up, f, _INF))
+    f_i = source.read(f, i)
+    if wss == "2":
+        # LibSVM WSS-2: among j in I_low with f_j > f_i, maximise
+        # (f_j - f_i)^2 / eta_j.
+        K_i = source.row(i)
+        diff = f - f_i
+        eta = jnp.maximum(source.read(diag, i) + diag - 2.0 * K_i, _TAU)
+        gain = jnp.where(i_low & (diff > 0), diff * diff / eta, -_INF)
+        j = _argmax(gain)
+        K_j = source.row(j)
+    else:
+        # WSS-1 (maximal violating pair): j from f alone, so fused sources
+        # can evaluate both kernel rows in a single pass.
+        j = _argmax(jnp.where(i_low, f, -_INF))
+        K_i, K_j = source.rows2(i, j)
+
+    # --- analytic 2-variable update, delta >= 0 along (+y_i, -y_j) ---
+    f_j = source.read(f, j)
+    a_i, a_j = source.read(alpha, i), source.read(alpha, j)
+    y_i, y_j = source.read(y, i), source.read(y, j)
+    eta_ij = jnp.maximum(source.read(diag, i) + source.read(diag, j)
+                         - 2.0 * source.read(K_i, j), _TAU)
+    delta = (f_j - f_i) / eta_ij
+    hi_i = jnp.where(y_i > 0, C - a_i, a_i)
+    hi_j = jnp.where(y_j > 0, a_j, C - a_j)
+    delta = jnp.maximum(jnp.minimum(jnp.minimum(delta, hi_i), hi_j), 0.0)
+    alpha_new = source.update_alpha(alpha, i, j, y_i, y_j, delta)
+    alpha_new = jnp.clip(alpha_new, 0.0, C)  # kill fp dust at the box boundary
+    # rank-2 update keeps f consistent for ALL rows (incl. masked)
+    f_new = source.constrain(f + delta * (K_i - K_j))
+
+    alpha = jnp.where(done, alpha, alpha_new)
+    f = jnp.where(done, f, f_new)
+    it = jnp.where(done, it, it + 1)
+    return EngineState(alpha, f, it, done)
+
+
+def smo_chunk(source, y, train_mask, C, state: EngineState, *,
+              n_iters: int, wss: str = "2", tol: float = 1e-3,
+              it_cap=None) -> EngineState:
+    """Run up to ``n_iters`` SMO iterations from ``state``.
+
+    Pure function of its inputs with static shapes — safe to jit, to chain
+    (chunk N+1 continues chunk N's iterate sequence bit-exactly), and to
+    ``vmap`` over a batch of states/masks. ``it_cap`` (traced) bounds total
+    ``n_iter`` across chunks, so a tail chunk never needs a retrace.
+    """
+    if source.fused and wss == "2":
+        raise ValueError("fused kernel sources evaluate both rows in one "
+                         "pass and require WSS-1 (wss='1')")
+    C = jnp.asarray(C, source.dtype)
+    if it_cap is None:
+        it_cap = jnp.iinfo(jnp.int32).max
+    it_cap = jnp.asarray(it_cap, state.n_iter.dtype)
+    diag = source.diag()
+    step = functools.partial(_step, source, y, train_mask, C, diag, tol,
+                             it_cap, wss)
+
+    def cond(carry):
+        s, t = carry
+        return (~s.done) & (t < n_iters)
+
+    def body(carry):
+        s, t = carry
+        return step(s), t + 1
+
+    state, _ = jax.lax.while_loop(cond, body, (state, jnp.zeros((), jnp.int32)))
+    return state
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters", "wss"))
+def _chunk_jit(source, y, train_mask, C, tol, it_cap, state, n_iters, wss):
+    return smo_chunk(source, y, train_mask, C, state, n_iters=n_iters,
+                     wss=wss, tol=tol, it_cap=it_cap)
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters", "wss"))
+def _chunk_batched_jit(source, y, train_masks, Cs, tol, it_cap, states,
+                       n_iters, wss):
+    """One chunk over a batch of folds: a single top-level while_loop whose
+    body vmaps ``_step`` over (train_mask, C, state); source and y are
+    shared across the batch. Per-fold convergence masking comes from the
+    ``done`` freeze inside ``_step`` — a converged fold's state passes
+    through bit-unchanged while stragglers keep iterating. (vmapping the
+    body, not the while_loop, avoids the batching rule's second layer of
+    full-state selects per iteration.)"""
+    it_cap = jnp.asarray(it_cap, states.n_iter.dtype)
+    diag = source.diag()
+
+    def one(mask, C, state):
+        return _step(source, y, mask, jnp.asarray(C, source.dtype), diag,
+                     tol, it_cap, wss, state)
+
+    def cond(carry):
+        s, t = carry
+        return jnp.any(~s.done) & (t < n_iters)
+
+    def body(carry):
+        s, t = carry
+        return jax.vmap(one)(train_masks, Cs, s), t + 1
+
+    states, _ = jax.lax.while_loop(cond, body,
+                                   (states, jnp.zeros((), jnp.int32)))
+    return states
+
+
+# --------------------------------------------------------------------------
+# drivers: single solve / batched solve
+# --------------------------------------------------------------------------
+
+def init_state(source, y, train_mask, alpha0, f0,
+               n_iter0=0) -> EngineState:
+    """Entry transform shared by every wrapper: zero alphas outside the
+    training mask, cast to the source dtype, reset the done flag."""
+    alpha0 = jnp.where(train_mask, alpha0, 0.0)
+    return EngineState(alpha0.astype(source.dtype), f0.astype(source.dtype),
+                       jnp.asarray(n_iter0, jnp.int64), jnp.zeros((), bool))
+
+
+def _finalize(state: EngineState, y, train_mask, C, tol) -> SMOResult:
+    b_up, b_low, gap = optimality(state.alpha, state.f, y, train_mask, C)
+    return SMOResult(alpha=state.alpha, f=state.f, n_iter=state.n_iter,
+                     converged=gap <= tol, b_up=b_up, b_low=b_low)
+
+
+def solve(source, y, train_mask, C, alpha0, f0, *, tol: float = 1e-3,
+          max_iter: int = 10_000_000, wss: str = "2",
+          chunk_iters: int | None = None, on_chunk=None,
+          n_iter0: int = 0) -> SMOResult:
+    """Solve the masked dual SVM to convergence over any kernel source.
+
+    ``chunk_iters=None`` dispatches one chunk sized ``max_iter`` (a single
+    device program, like the old monolithic solver). With ``chunk_iters=m``
+    the host inspects ``done`` every m iterations and calls
+    ``on_chunk(state)`` between chunks — the mid-fold checkpoint hook.
+    ``n_iter0`` pre-loads the iteration counter when resuming a checkpointed
+    partial solve, so ``n_iter`` accounting survives a restart.
+    """
+    state = init_state(source, y, train_mask, alpha0, f0, n_iter0=n_iter0)
+    n = chunk_iters if chunk_iters is not None else max_iter
+    # cap counts TOTAL updates incl. the pre-loaded n_iter0, so a resumed
+    # solve stops exactly where the uninterrupted one would have
+    it_cap = jnp.asarray(max_iter, jnp.int64)
+    while True:
+        state = _chunk_jit(source, y, train_mask, C, tol, it_cap, state,
+                           n_iters=n, wss=wss)
+        if chunk_iters is None or bool(state.done):
+            break
+        if on_chunk is not None:
+            on_chunk(state)
+    return _finalize(state, y, train_mask, C, tol)
+
+
+def solve_batched(source, y, train_masks, Cs, alpha0s, f0s, *,
+                  tol: float = 1e-3, max_iter: int = 10_000_000,
+                  wss: str = "2", chunk_iters: int = 4096,
+                  on_chunk=None) -> SMOResult:
+    """Solve a batch of folds concurrently over one shared kernel source.
+
+    ``train_masks`` (b, n), ``Cs`` () or (b,), ``alpha0s``/``f0s`` (b, n).
+    One vmapped chunk advances every unconverged fold ~chunk_iters
+    iterations; folds that converge freeze (their state passes through the
+    body untouched) while stragglers keep iterating, so total device work
+    is b * max(n_iter_b), not b * sum. Returns a batched ``SMOResult``
+    (leading axis = fold).
+    """
+    if source.fused and wss == "2":
+        raise ValueError("fused kernel sources require WSS-1 (wss='1')")
+    b, n = train_masks.shape
+    Cs = jnp.broadcast_to(jnp.asarray(Cs, source.dtype), (b,))
+    alpha0s = jnp.where(train_masks, alpha0s, 0.0).astype(source.dtype)
+    states = EngineState(alpha0s, f0s.astype(source.dtype),
+                         jnp.zeros(b, jnp.int64), jnp.zeros(b, bool))
+    it_cap = jnp.asarray(max_iter, jnp.int64)
+    while True:
+        states = _chunk_batched_jit(source, y, train_masks, Cs, tol, it_cap,
+                                    states, n_iters=chunk_iters, wss=wss)
+        if bool(jnp.all(states.done)):
+            break
+        if on_chunk is not None:
+            on_chunk(states)
+    b_up, b_low, gap = jax.vmap(
+        lambda a, f, m, c: optimality(a, f, y, m, c))(
+            states.alpha, states.f, train_masks, Cs)
+    return SMOResult(alpha=states.alpha, f=states.f, n_iter=states.n_iter,
+                     converged=gap <= tol, b_up=b_up, b_low=b_low)

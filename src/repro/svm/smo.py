@@ -1,7 +1,12 @@
-"""Jittable SMO solver (Keerthi-style working-set selection, LibSVM parity).
+"""Dense LibSVM-parity SMO solver — a thin wrapper over the unified engine.
 
-Design notes
-------------
+The iteration core (Keerthi-style working-set selection, box-clipped rank-2
+update, duality-gap termination) lives in ``repro.svm.engine`` exactly once;
+this module binds it to a precomputed kernel matrix (``DenseKernel`` source)
+and keeps the historical call signature.
+
+Design notes (unchanged semantics)
+----------------------------------
 * One compiled solver serves every fold of k-fold CV: fold membership is a
   boolean ``train_mask`` over the padded instance axis, so shapes are static
   and the k-fold loop never retraces.
@@ -15,28 +20,17 @@ Design notes
   seeded initial alphas MUST satisfy the equality constraint; the seeding
   module repairs them before calling the solver.
 
-The solver is pure ``lax.while_loop`` — it lowers and shards (f, K rows are
-sharded over the data axis; the argmin/argmax reductions become all-reduces).
+New in the engine era: ``chunk_iters``/``on_chunk`` expose the engine's
+chunked dispatch for mid-fold checkpointing, and ``n_iter0`` resumes the
+iteration count of a restored partial solve (see DESIGN.md §Chunked
+dispatch). Defaults replay the old monolithic behaviour bit-exactly.
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple
-
-import jax
 import jax.numpy as jnp
 
-_INF = jnp.inf
-_TAU = 1e-12
-
-
-class SMOResult(NamedTuple):
-    alpha: jnp.ndarray      # (n,) dual variables (0 outside train_mask)
-    f: jnp.ndarray          # (n,) optimality indicators, globally consistent
-    n_iter: jnp.ndarray     # () int64 — SMO iterations executed
-    converged: jnp.ndarray  # () bool
-    b_up: jnp.ndarray       # () min f over I_up at exit
-    b_low: jnp.ndarray      # () max f over I_low at exit
+from repro.svm.engine import (DenseKernel, SMOResult, _sets,  # noqa: F401
+                              solve, solve_batched)
 
 
 def init_f(K: jnp.ndarray, y: jnp.ndarray, alpha: jnp.ndarray) -> jnp.ndarray:
@@ -50,76 +44,33 @@ def dual_objective(K: jnp.ndarray, y: jnp.ndarray, alpha: jnp.ndarray) -> jnp.nd
     return jnp.sum(alpha) - 0.5 * (v @ (K @ v))
 
 
-def _sets(alpha, y, mask, C):
-    """I_up / I_low membership (paper Eq. 4): I_up = I_u + I_m, I_low = I_l + I_m."""
-    pos, neg = y > 0, y < 0
-    at_lo, at_hi = alpha <= 0.0, alpha >= C
-    i_up = mask & ~((pos & at_hi) | (neg & at_lo))
-    i_low = mask & ~((pos & at_lo) | (neg & at_hi))
-    return i_up, i_low
-
-
-@functools.partial(jax.jit, static_argnames=("max_iter", "wss"))
 def smo_solve(K: jnp.ndarray, y: jnp.ndarray, train_mask: jnp.ndarray,
               C: float, alpha0: jnp.ndarray, f0: jnp.ndarray,
               tol: float = 1e-3, max_iter: int = 10_000_000,
-              wss: str = "2") -> SMOResult:
+              wss: str = "2", chunk_iters: int | None = None,
+              on_chunk=None, n_iter0: int = 0) -> SMOResult:
     """Solve the masked dual SVM with SMO, warm-started at (alpha0, f0).
 
     ``f0`` must equal ``init_f(K, y, alpha0)`` (callers use ``init_f`` or the
     incrementally-maintained ``f`` of a previous solve). For a cold start,
     ``alpha0 = 0`` gives ``f0 = -y`` with no matvec.
     """
-    diagK = jnp.diagonal(K)
-    C = jnp.asarray(C, K.dtype)
+    return solve(DenseKernel(K), y, train_mask, C, alpha0, f0, tol=tol,
+                 max_iter=max_iter, wss=wss, chunk_iters=chunk_iters,
+                 on_chunk=on_chunk, n_iter0=n_iter0)
 
-    def cond(state):
-        alpha, f, it = state
-        i_up, i_low = _sets(alpha, y, train_mask, C)
-        has = jnp.any(i_up) & jnp.any(i_low)
-        b_up = jnp.min(jnp.where(i_up, f, _INF))
-        b_low = jnp.max(jnp.where(i_low, f, -_INF))
-        gap = jnp.where(has, b_low - b_up, -_INF)
-        return (gap > tol) & (it < max_iter)
 
-    def body(state):
-        alpha, f, it = state
-        i_up, i_low = _sets(alpha, y, train_mask, C)
-        # --- select i: minimal f over I_up ---
-        i = jnp.argmin(jnp.where(i_up, f, _INF))
-        f_i = f[i]
-        K_i = K[i]
-        if wss == "2":
-            # LibSVM WSS-2: among j in I_low with f_j > f_i, maximise
-            # (f_j - f_i)^2 / eta_j.
-            diff = f - f_i
-            eta = jnp.maximum(diagK[i] + diagK - 2.0 * K_i, _TAU)
-            gain = jnp.where(i_low & (diff > 0), diff * diff / eta, -_INF)
-            j = jnp.argmax(gain)
-        else:
-            j = jnp.argmax(jnp.where(i_low, f, -_INF))
-        K_j = K[j]
-        # --- analytic 2-variable update, delta >= 0 along (+y_i, -y_j) ---
-        eta_ij = jnp.maximum(diagK[i] + diagK[j] - 2.0 * K_i[j], _TAU)
-        delta = (f[j] - f_i) / eta_ij
-        hi_i = jnp.where(y[i] > 0, C - alpha[i], alpha[i])
-        hi_j = jnp.where(y[j] > 0, alpha[j], C - alpha[j])
-        delta = jnp.maximum(jnp.minimum(jnp.minimum(delta, hi_i), hi_j), 0.0)
-        alpha = alpha.at[i].add(y[i] * delta)
-        alpha = alpha.at[j].add(-y[j] * delta)
-        alpha = jnp.clip(alpha, 0.0, C)  # kill fp dust at the box boundary
-        # rank-2 update keeps f consistent for ALL rows (incl. masked)
-        f = f + delta * (K_i - K_j)
-        return alpha, f, it + 1
+def smo_solve_batched(K: jnp.ndarray, y: jnp.ndarray, train_masks: jnp.ndarray,
+                      Cs, alpha0s: jnp.ndarray, f0s: jnp.ndarray,
+                      tol: float = 1e-3, max_iter: int = 10_000_000,
+                      wss: str = "2", chunk_iters: int = 4096) -> SMOResult:
+    """Solve a batch of folds over one shared kernel matrix concurrently.
 
-    alpha0 = jnp.where(train_mask, alpha0, 0.0)
-    state = (alpha0.astype(K.dtype), f0.astype(K.dtype), jnp.zeros((), jnp.int64))
-    alpha, f, it = jax.lax.while_loop(cond, body, state)
-
-    i_up, i_low = _sets(alpha, y, train_mask, C)
-    has = jnp.any(i_up) & jnp.any(i_low)
-    b_up = jnp.min(jnp.where(i_up, f, _INF))
-    b_low = jnp.max(jnp.where(i_low, f, -_INF))
-    gap = jnp.where(has, b_low - b_up, -_INF)
-    return SMOResult(alpha=alpha, f=f, n_iter=it, converged=gap <= tol,
-                     b_up=b_up, b_low=b_low)
+    ``train_masks``/``alpha0s``/``f0s`` carry a leading fold axis; ``Cs`` is
+    a scalar or (b,) vector (per-cell C for hyper-parameter grids). Returns
+    a fold-batched ``SMOResult``. Converged folds freeze while stragglers
+    keep iterating — see ``engine.solve_batched``.
+    """
+    return solve_batched(DenseKernel(K), y, train_masks, Cs, alpha0s, f0s,
+                         tol=tol, max_iter=max_iter, wss=wss,
+                         chunk_iters=chunk_iters)

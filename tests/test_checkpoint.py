@@ -84,6 +84,41 @@ def test_cv_resume_matches_uninterrupted(tmp_path):
         assert f_full.n_iter == f_res.n_iter
 
 
+def test_cv_mid_fold_resume(tmp_path):
+    """Chunked dispatch checkpoints INSIDE a fold: crash after a few chunks
+    of fold 2 and the restarted run resumes that fold's iterate sequence
+    (same n_iter account, same accuracy) instead of replaying it."""
+    from repro.core.cv import run_cv, _FOLD_STRIDE
+    from repro.data.svm_suite import make_dataset
+    ds = make_dataset("heart", n_override=100)
+    full = run_cv(ds, k=5, method="sir")
+
+    mgr = CheckpointManager(str(tmp_path / "cv"), max_to_keep=1000)
+    chunked = run_cv(ds, k=5, method="sir", checkpoint_manager=mgr,
+                     chunk_iters=50)
+    # chunking must not change results at all
+    for f_full, f_ch in zip(full.folds, chunked.folds):
+        assert f_full.n_iter == f_ch.n_iter
+        assert f_full.acc_correct == f_ch.acc_correct
+    # 'crash' mid fold 2: drop everything after its second chunk snapshot
+    mids = [s for s in mgr.all_steps() if s % _FOLD_STRIDE != 0
+            and s // _FOLD_STRIDE == 2]
+    assert len(mids) >= 2, "fold 2 should span several 50-iter chunks"
+    import shutil
+    for s in mgr.all_steps():
+        if s > mids[1]:
+            shutil.rmtree(mgr._step_dir(s))
+    mgr2 = CheckpointManager(str(tmp_path / "cv"), max_to_keep=1000)
+    resumed = run_cv(ds, k=5, method="sir", checkpoint_manager=mgr2,
+                     chunk_iters=50)
+    assert [f.fold for f in resumed.folds] == [2, 3, 4]
+    for f_full, f_res in zip(full.folds[2:], resumed.folds):
+        assert f_full.n_iter == f_res.n_iter
+        assert f_full.acc_correct == f_res.acc_correct
+    # the resumed fold still records its original seed provenance
+    assert resumed.folds[0].seed_from == 1
+
+
 ELASTIC_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -111,6 +146,9 @@ ELASTIC_SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.skipif(not hasattr(jax.sharding, "AxisType"),
+                    reason="subprocess harness uses jax.sharding.AxisType / "
+                           "make_mesh(axis_types=...); needs jax >= 0.5")
 @pytest.mark.parametrize("save_mesh,restore_mesh", [((4, 2), (2, 4)),
                                                     ((8, 1), (2, 4))])
 def test_elastic_restore_across_meshes(tmp_path, save_mesh, restore_mesh):

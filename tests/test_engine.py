@@ -1,0 +1,237 @@
+"""Unified SMO engine: kernel-source agreement, chunked-dispatch exactness,
+batched fold execution, and wrapper parity (smo_solve / smo_iterations)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.svm_suite import make_dataset, kfold_chunks
+from repro.svm import (DenseKernel, FusedRBF, OnDemandRBF, init_f,
+                       kernel_matrix, smo_solve, smo_solve_batched)
+from repro.svm.distributed import smo_iterations
+from repro.svm.engine import EngineState, smo_chunk
+
+
+def _setup(name="heart", n=150):
+    ds = make_dataset(name, n_override=n)
+    X = jnp.asarray(ds.X)
+    y = jnp.asarray(ds.y, jnp.float64)
+    K = kernel_matrix(X, X, gamma=ds.gamma)
+    return ds, X, K, y
+
+
+# ------------------------------------------------- kernel-source parity ---
+
+def test_sources_agree_on_rows():
+    """Every provider must hand the engine the same kernel row."""
+    ds, X, K, y = _setup()
+    dense = DenseKernel(K)
+    gather = OnDemandRBF(X, ds.gamma)
+    onehot = OnDemandRBF(X, ds.gamma, impl="onehot")
+    fused = FusedRBF(X, ds.gamma)
+    for i, j in [(0, 7), (31, 149), (80, 80)]:
+        rows = [np.asarray(dense.row(i)), np.asarray(gather.row(i)),
+                np.asarray(onehot.row(i)), np.asarray(fused.rows2(i, j)[0])]
+        for r in rows[1:]:
+            np.testing.assert_allclose(r, rows[0], atol=1e-12)
+        np.testing.assert_allclose(np.asarray(fused.rows2(i, j)[1]),
+                                   np.asarray(dense.row(j)), atol=1e-12)
+
+
+def test_ondemand_gather_vs_onehot_bitwise():
+    """The two scalar-read/update idioms must replay the exact same fp ops."""
+    ds, X, K, y = _setup(n=120)
+    n = y.shape[0]
+    sq = jnp.sum(X * X, axis=1)
+    mask = jnp.ones(n, bool).at[:20].set(False)
+    outs = {}
+    for impl in ("gather", "onehot"):
+        outs[impl] = smo_iterations(X, y, mask, jnp.zeros(n), -y, sq, ds.C,
+                                    gamma=ds.gamma, n_iters=200, impl=impl)
+    for a, b in zip(outs["gather"], outs["onehot"]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fused_wss1_converges_same_fixed_point():
+    """WSS-1/fused takes more iterations but must reach the same dual."""
+    ds, X, K, y = _setup(n=120)
+    n = y.shape[0]
+    sq = jnp.sum(X * X, axis=1)
+    mask = jnp.ones(n, bool)
+    a, f, it, gap = smo_iterations(X, y, mask, jnp.zeros(n), -y, sq, ds.C,
+                                   gamma=ds.gamma, n_iters=200_000,
+                                   impl="onehot_fused")
+    assert float(gap) <= 1e-3
+    ref = smo_solve(kernel_matrix(X, X, gamma=ds.gamma), y, mask, ds.C,
+                    jnp.zeros(n), -y)
+    from repro.svm import dual_objective
+    K_full = kernel_matrix(X, X, gamma=ds.gamma)
+    assert float(dual_objective(K_full, y, a)) == pytest.approx(
+        float(dual_objective(K_full, y, ref.alpha)), rel=1e-3)
+
+
+def test_fused_requires_wss1():
+    ds, X, K, y = _setup(n=64)
+    src = FusedRBF(X, ds.gamma)
+    state = EngineState(jnp.zeros(64), -y, jnp.zeros((), jnp.int32),
+                        jnp.zeros((), bool))
+    with pytest.raises(ValueError, match="WSS-1"):
+        smo_chunk(src, y, jnp.ones(64, bool), ds.C, state, n_iters=10,
+                  wss="2")
+
+
+# ------------------------------------------------------ chunked dispatch ---
+
+@pytest.mark.parametrize("chunk_iters", [64, 500])
+def test_chunked_equals_monolithic_bitwise(chunk_iters):
+    ds, X, K, y = _setup()
+    n = y.shape[0]
+    mask = jnp.ones(n, bool).at[:25].set(False)
+    mono = smo_solve(K, y, mask, ds.C, jnp.zeros(n), -y)
+    chun = smo_solve(K, y, mask, ds.C, jnp.zeros(n), -y,
+                     chunk_iters=chunk_iters)
+    for a, b in zip(mono, chun):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_chunk_snapshot_resumes_to_same_fixed_point():
+    """Restart from any mid-solve snapshot (the checkpoint unit) and land on
+    the identical iterate sequence — alpha, f AND the n_iter account."""
+    ds, X, K, y = _setup()
+    n = y.shape[0]
+    mask = jnp.ones(n, bool)
+    snaps = []
+    full = smo_solve(K, y, mask, ds.C, jnp.zeros(n), -y, chunk_iters=100,
+                     on_chunk=snaps.append)
+    assert len(snaps) >= 2, "test needs a solve spanning several chunks"
+    state = snaps[1]
+    resumed = smo_solve(K, y, mask, ds.C, state.alpha, state.f,
+                        chunk_iters=100, n_iter0=int(state.n_iter))
+    np.testing.assert_array_equal(np.asarray(full.alpha),
+                                  np.asarray(resumed.alpha))
+    np.testing.assert_array_equal(np.asarray(full.f), np.asarray(resumed.f))
+    assert int(full.n_iter) == int(resumed.n_iter)
+
+
+def test_smo_iterations_is_resumable_chunk():
+    """Two 150-iteration dispatches == one 300-iteration dispatch: the chunk
+    is the scheduler's retry unit, with (alpha, f) as the only state."""
+    ds, X, K, y = _setup(n=120)
+    n = y.shape[0]
+    sq = jnp.sum(X * X, axis=1)
+    mask = jnp.ones(n, bool)
+    a1, f1, it1, _ = smo_iterations(X, y, mask, jnp.zeros(n), -y, sq, ds.C,
+                                    gamma=ds.gamma, n_iters=150)
+    a2, f2, it2, _ = smo_iterations(X, y, mask, a1, f1, sq, ds.C,
+                                    gamma=ds.gamma, n_iters=150)
+    a3, f3, it3, _ = smo_iterations(X, y, mask, jnp.zeros(n), -y, sq, ds.C,
+                                    gamma=ds.gamma, n_iters=300)
+    np.testing.assert_array_equal(np.asarray(a2), np.asarray(a3))
+    np.testing.assert_array_equal(np.asarray(f2), np.asarray(f3))
+    assert int(it1) + int(it2) == int(it3)
+
+
+def test_converged_input_passes_through():
+    ds, X, K, y = _setup(n=100)
+    n = y.shape[0]
+    mask = jnp.ones(n, bool)
+    res = smo_solve(K, y, mask, ds.C, jnp.zeros(n), -y)
+    again = smo_solve(K, y, mask, ds.C, res.alpha, res.f, chunk_iters=32)
+    assert int(again.n_iter) == 0
+    np.testing.assert_array_equal(np.asarray(res.alpha),
+                                  np.asarray(again.alpha))
+    # the sharded wrapper likewise reports 0 iterations for a converged state
+    sq = jnp.sum(X * X, axis=1)
+    a, f, it, gap = smo_iterations(X, y, mask, res.alpha, res.f, sq, ds.C,
+                                   gamma=ds.gamma, n_iters=50)
+    assert int(it) == 0 and float(gap) <= 1e-3
+
+
+def test_max_iter_cap_respected_across_chunks():
+    ds, X, K, y = _setup()
+    n = y.shape[0]
+    mask = jnp.ones(n, bool)
+    capped = smo_solve(K, y, mask, ds.C, jnp.zeros(n), -y, max_iter=130,
+                       chunk_iters=50)
+    mono = smo_solve(K, y, mask, ds.C, jnp.zeros(n), -y, max_iter=130)
+    assert int(capped.n_iter) == 130 == int(mono.n_iter)
+    assert not bool(capped.converged)
+    np.testing.assert_array_equal(np.asarray(capped.alpha),
+                                  np.asarray(mono.alpha))
+
+
+# ------------------------------------------------- batched fold execution ---
+
+def test_batched_folds_match_sequential_bitwise():
+    ds, X, K, y = _setup("adult", n=400)
+    k = 5
+    chunks = kfold_chunks(400, k, seed=0)
+    n = chunks.size
+    K2, y2 = K[:n][:, :n], y[:n]
+    masks = np.ones((k, n), bool)
+    for h in range(k):
+        masks[h, chunks[h]] = False
+    masks = jnp.asarray(masks)
+    bat = smo_solve_batched(K2, y2, masks, ds.C, jnp.zeros((k, n)),
+                            jnp.tile(-y2, (k, 1)))
+    for h in range(k):
+        seq = smo_solve(K2, y2, masks[h], ds.C, jnp.zeros(n), -y2)
+        np.testing.assert_array_equal(np.asarray(seq.alpha),
+                                      np.asarray(bat.alpha[h]))
+        np.testing.assert_array_equal(np.asarray(seq.f),
+                                      np.asarray(bat.f[h]))
+        assert int(seq.n_iter) == int(bat.n_iter[h])
+        assert bool(bat.converged[h])
+
+
+def test_batched_per_lane_C():
+    """Per-lane C values (the hyper-parameter grid axis) solve correctly."""
+    ds, X, K, y = _setup(n=120)
+    n = y.shape[0]
+    mask = jnp.ones(n, bool).at[:20].set(False)
+    Cs = jnp.asarray([0.5, 4.0, 32.0])
+    bat = smo_solve_batched(K, y, jnp.tile(mask[None], (3, 1)), Cs,
+                            jnp.zeros((3, n)), jnp.tile(-y, (3, 1)))
+    for lane, C in enumerate([0.5, 4.0, 32.0]):
+        seq = smo_solve(K, y, mask, C, jnp.zeros(n), -y)
+        np.testing.assert_array_equal(np.asarray(seq.alpha),
+                                      np.asarray(bat.alpha[lane]))
+        assert float(jnp.max(bat.alpha[lane])) <= C + 1e-12
+
+
+def test_batched_warm_seeds():
+    """Warm-started lanes (alpha-seeded folds) drop iterations in batch mode
+    exactly as they do sequentially."""
+    from repro.core import seeding
+    from repro.core.cv import _transition_idx
+    ds, X, K, y = _setup("adult", n=400)
+    k = 5
+    chunks = kfold_chunks(400, k, seed=0)
+    n = chunks.size
+    K2, y2 = K[:n][:, :n], y[:n]
+    m0 = jnp.ones(n, bool).at[jnp.asarray(chunks[0])].set(False)
+    m1 = jnp.ones(n, bool).at[jnp.asarray(chunks[1])].set(False)
+    r0 = smo_solve(K2, y2, m0, ds.C, jnp.zeros(n), -y2)
+    S, R, T = _transition_idx(chunks, 0, 1)
+    a1 = seeding.sir_seed(K2, y2, ds.C, r0, S, R, T)
+    f1 = init_f(K2, y2, a1)
+    masks = jnp.stack([m1, m1])
+    alpha0s = jnp.stack([jnp.zeros(n), a1])
+    f0s = jnp.stack([-y2, f1])
+    bat = smo_solve_batched(K2, y2, masks, ds.C, alpha0s, f0s)
+    assert int(bat.n_iter[1]) < int(bat.n_iter[0])
+    cold = smo_solve(K2, y2, m1, ds.C, jnp.zeros(n), -y2)
+    warm = smo_solve(K2, y2, m1, ds.C, a1, f1)
+    assert int(bat.n_iter[0]) == int(cold.n_iter)
+    assert int(bat.n_iter[1]) == int(warm.n_iter)
+
+
+def test_run_cv_batched_matches_cold_cv():
+    from repro.core.cv import run_cv, run_cv_batched
+    ds = make_dataset("heart", n_override=120)
+    cold = run_cv(ds, k=4, method="cold")
+    bat = run_cv_batched(ds, k=4)
+    assert bat.method == "cold_batched"
+    assert bat.accuracy == pytest.approx(cold.accuracy, abs=1e-12)
+    assert [f.n_iter for f in bat.folds] == [f.n_iter for f in cold.folds]
+    assert all(f.converged for f in bat.folds)

@@ -1,8 +1,33 @@
 """Paper-claim validation + property tests for the seeding algorithms."""
+import functools
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    # property tests degrade to explicit skips; everything else still runs
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):
+        def deco(fn):
+            @functools.wraps(fn)
+            @pytest.mark.skip(reason="hypothesis not installed: property "
+                                     "test skipped (pip install hypothesis)")
+            def stub():
+                pass
+            return stub
+        return deco
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    class st:  # noqa: N801 - stand-in for hypothesis.strategies
+        integers = staticmethod(lambda *a, **k: None)
+        floats = staticmethod(lambda *a, **k: None)
 
 from repro.core import seeding
 from repro.core.cv import run_cv, _transition_idx
@@ -108,6 +133,113 @@ def test_loo_seed_constraints(fn):
         assert float(a0[t]) == 0.0
         assert float(jnp.abs(jnp.sum(a0 * y))) < 1e-6 * ds.C
         assert bool(jnp.all((a0 >= 0) & (a0 <= ds.C)))
+
+
+def test_kfold_chunks_indices_stay_in_sliced_range():
+    """k not dividing n: chunk indices must index the TRUNCATED arrays.
+    (The old permutation(n)[:k*m] kept indices >= k*m; jax's clamping
+    scatter then silently corrupted that fold's train mask.)"""
+    from repro.data.svm_suite import kfold_chunks
+    for n, k in [(100, 3), (101, 10), (270, 7)]:
+        chunks = kfold_chunks(n, k, seed=0)
+        assert chunks.shape == (k, n // k)
+        assert int(chunks.max()) < chunks.size
+        assert len(np.unique(chunks)) == chunks.size
+    # full-CV drive through the non-divisible path (used to crash / corrupt)
+    ds = make_dataset("heart", n_override=100)
+    rep = run_cv(ds, k=3, method="sir")
+    assert all(f.converged for f in rep.folds)
+
+
+# ---------------------------------------- constraint-repair edge cases -----
+# the corners seeding.py documents: label-skewed folds where -s_S is outside
+# T's box-feasible range (stage 2 spills into S), and the empty-free-set
+# bias fallback.
+
+def test_water_fill_clamps_infeasible_target():
+    y = jnp.asarray([1.0, 1.0, -1.0])
+    C = 2.0
+    lo = jnp.where(y > 0, 0.0, -C)
+    hi = jnp.where(y > 0, C, 0.0)
+    beta = jnp.asarray([0.5, 1.0, -0.5])
+    # target above sum(hi)=4: every coordinate pins to hi
+    out = seeding.water_fill(beta, lo, hi, jnp.asarray(100.0))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(hi), atol=1e-9)
+    # target below sum(lo)=-2: every coordinate pins to lo
+    out = seeding.water_fill(beta, lo, hi, jnp.asarray(-100.0))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(lo), atol=1e-9)
+
+
+def test_repair_equality_label_skewed_spills_into_S():
+    """All-one-label T chunk: -s_S is infeasible for T's box, so stage 2
+    must rebalance S itself (the documented corner case)."""
+    C = 2.0
+    # S: six +1 instances carrying beta=1.5 each (s_S = 9); T: three +1
+    # instances — T's box sum range is [0, 6], so the target -9 is infeasible
+    y = jnp.asarray([1.0] * 6 + [1.0] * 3 + [-1.0])
+    alpha0 = jnp.asarray([1.5] * 6 + [0.0] * 3 + [0.7])
+    S_idx = jnp.arange(6)
+    T_idx = jnp.arange(6, 9)
+    out = seeding.repair_equality(alpha0, y, C, S_idx, T_idx)
+    train = jnp.concatenate([S_idx, T_idx])
+    assert float(jnp.abs(jnp.sum((y * out)[train]))) < 1e-9
+    assert bool(jnp.all((out[train] >= -1e-12) & (out[train] <= C + 1e-12)))
+    # the R instance (index 9) is untouched by repair
+    assert float(out[9]) == pytest.approx(0.7)
+
+
+def test_repair_equality_feasible_is_noop_on_S():
+    """When T can absorb -s_S, S must not be disturbed (paper: touch T
+    first, spill into S only in the infeasible corner)."""
+    C = 4.0
+    y = jnp.asarray([1.0, -1.0, 1.0, -1.0, 1.0, -1.0])
+    alpha0 = jnp.asarray([1.0, 2.0, 0.0, 0.0, 0.5, 0.2])
+    S_idx = jnp.asarray([0, 1])
+    T_idx = jnp.asarray([2, 3])
+    out = seeding.repair_equality(alpha0, y, C, S_idx, T_idx)
+    np.testing.assert_allclose(np.asarray(out[S_idx]),
+                               np.asarray(alpha0[S_idx]), atol=1e-9)
+    assert float(jnp.sum((y * out)[jnp.asarray([0, 1, 2, 3])])) == \
+        pytest.approx(0.0, abs=1e-9)
+
+
+def test_bias_fallback_empty_free_set():
+    """With every alpha at a bound the free-set mean is undefined; _bias
+    must fall back to the midpoint of (b_up, b_low)."""
+    from repro.svm.smo import SMOResult
+    n = 6
+    y = jnp.asarray([1.0, -1.0] * 3)
+    C = 1.0
+    alpha = jnp.asarray([1.0, 1.0, 0.0, 0.0, 1.0, 1.0])  # all at 0 or C
+    prev = SMOResult(alpha=alpha, f=jnp.linspace(-1, 1, n),
+                     n_iter=jnp.asarray(0), converged=jnp.asarray(True),
+                     b_up=jnp.asarray(-0.25), b_low=jnp.asarray(0.75))
+    mask = jnp.ones(n, bool)
+    b = seeding._bias(prev, y, mask, C)
+    assert float(b) == pytest.approx(0.5 * (-0.25 + 0.75))
+    # and the seeders still produce feasible alpha0 from such a solution
+    S_idx = jnp.asarray([0, 1])
+    R_idx = jnp.asarray([2, 3])
+    T_idx = jnp.asarray([4, 5])
+    K = jnp.eye(n)
+    a0 = seeding.mir_seed(K, y, C, prev, S_idx, R_idx, T_idx)
+    train = jnp.concatenate([S_idx, T_idx])
+    assert float(jnp.abs(jnp.sum((y * a0)[train]))) < 1e-9
+    assert bool(jnp.all((a0 >= -1e-12) & (a0 <= C + 1e-12)))
+    assert float(jnp.abs(a0[R_idx]).max()) == 0.0
+
+
+def test_scale_seed_C_constraints():
+    """C-grid transition seed: box at the NEW C, exact equality, zero off
+    the training mask."""
+    ds, K, y, chunks, res0, (S, R, T) = _fold_setup("heart", n=200, k=5)
+    nn = chunks.size
+    mask0 = jnp.ones(nn, bool).at[jnp.asarray(chunks[0])].set(False)
+    for C_new in (ds.C / 8.0, ds.C * 8.0):
+        a0 = seeding.scale_seed_C(res0.alpha, y, ds.C, C_new, mask0)
+        assert bool(jnp.all((a0 >= -1e-12) & (a0 <= C_new + 1e-12)))
+        assert float(jnp.abs(jnp.sum(a0 * y))) < 1e-6 * max(C_new, 1.0)
+        assert float(jnp.abs(jnp.where(mask0, 0.0, a0)).max()) == 0.0
 
 
 # ------------------------------------------------------ property tests -----
