@@ -19,12 +19,26 @@ _REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 def _write_bench_table1(rows: list[dict], quick: bool) -> None:
     import jax
+    # per-method aggregates (summed over datasets): the CI artifact diff
+    # shows a seeding init-time regression — e.g. the jittable ATO losing
+    # its edge over ato_ref — in one line instead of buried across rows
+    per_method: dict[str, dict] = {}
+    for r in rows:
+        agg = per_method.setdefault(
+            r["method"], {"init_s": 0.0, "solve_s": 0.0, "iterations": 0})
+        agg["init_s"] += r["init_s"]
+        agg["solve_s"] += r["solve_s"]
+        agg["iterations"] += r["iterations"]
+    for agg in per_method.values():
+        agg["init_s"] = round(agg["init_s"], 4)
+        agg["solve_s"] = round(agg["solve_s"], 4)
     payload = {
         "bench": "table1_kfold",
         "quick": quick,
         "jax": jax.__version__,
         "backend": jax.default_backend(),
         "python": platform.python_version(),
+        "per_method": per_method,
         "rows": rows,
     }
     out = os.path.join(_REPO_ROOT, "BENCH_table1.json")

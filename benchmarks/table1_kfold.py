@@ -15,6 +15,11 @@ in BENCH_table1.json — on few-core CPU hosts the vmapped batch is typically
 NOT faster (the (k, n) state busts cache and XLA CPU pays a thread fork/join
 per parallel fusion); the batch schedule targets accelerator backends where
 per-dispatch overhead dominates (DESIGN.md §Batched folds).
+
+An ``ato_ref`` row runs the eager host-side ATO loop that ``ato`` (now a
+fixed-shape jitted ramp, DESIGN.md §Jittable ATO) replaced: the pair makes
+the ATO init-time win — and any regression of it — visible directly in
+BENCH_table1.json's artifact diff.
 """
 from __future__ import annotations
 
@@ -24,7 +29,7 @@ from repro.data.svm_suite import make_dataset
 
 SIZES = {"adult": 1000, "heart": 270, "madelon": 1200, "mnist": 1000,
          "webdata": 1000}
-METHODS = ("cold", "cold_batched", "ato", "mir", "sir")
+METHODS = ("cold", "cold_batched", "ato", "ato_ref", "mir", "sir")
 
 
 def run(k: int = 10, quick: bool = False, reps: int = 3):

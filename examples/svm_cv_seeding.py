@@ -53,7 +53,10 @@ try:
         shutil.rmtree(mgr._step_dir(s))
     resumed = run_cv(ds, k=10, method="sir",
                      checkpoint_manager=CheckpointManager(tmp))
-    print(f"\nrestart after failure: recomputed folds "
-          f"{[f.fold for f in resumed.folds]} only (seeded from checkpoint)")
+    redone = [f.fold for f in resumed.folds if not f.restored]
+    kept = [f.fold for f in resumed.folds if f.restored]
+    print(f"\nrestart after failure: recomputed folds {redone} only "
+          f"(folds {kept} restored from checkpoint; report "
+          f"{'partial' if resumed.partial else 'complete'})")
 finally:
     shutil.rmtree(tmp, ignore_errors=True)

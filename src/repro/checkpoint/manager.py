@@ -12,7 +12,9 @@ Design (scaled-down Orbax):
 * ``save(..., blocking=False)`` runs the serialization on a background
   thread so the training loop overlaps checkpoint I/O with compute
   (async checkpointing). ``wait()`` joins before exit.
-* Retention: ``max_to_keep`` newest steps are kept.
+* Retention: ``max_to_keep`` newest steps are kept PER ``retain_class``
+  (default: one shared class), so high-frequency snapshots cannot evict
+  the rare records a resume depends on.
 
 The same manager checkpoints LM training state (params/opt/step) and the CV
 fold chain (fold index, alpha, f) — the paper's alpha seeding doubles as the
@@ -40,7 +42,8 @@ def _flatten(tree):
     return out
 
 
-def save_pytree(path: str, tree, extra_meta: dict | None = None) -> None:
+def save_pytree(path: str, tree, extra_meta: dict | None = None,
+                retain_class: str = "default") -> None:
     """Atomic commit: write to <path>.tmp, fsync, rename, marker."""
     tmp = path + ".tmp"
     if os.path.exists(tmp):
@@ -50,7 +53,7 @@ def save_pytree(path: str, tree, extra_meta: dict | None = None) -> None:
     np.savez(os.path.join(tmp, "arrays.npz"), **flat)
     treedef = jax.tree_util.tree_structure(tree)
     meta = {"treedef": str(treedef), "keys": sorted(flat),
-            "extra": extra_meta or {}}
+            "extra": extra_meta or {}, "retain_class": retain_class}
     with open(os.path.join(tmp, "meta.json"), "w") as fh:
         json.dump(meta, fh)
     with open(os.path.join(tmp, "COMMIT"), "w") as fh:
@@ -90,6 +93,7 @@ class CheckpointManager:
         self.max_to_keep = max_to_keep
         os.makedirs(directory, exist_ok=True)
         self._thread: threading.Thread | None = None
+        self._retain_classes: dict[int, str] = {}
 
     def _step_dir(self, step: int) -> str:
         return os.path.join(self.directory, f"step_{step:010d}")
@@ -107,13 +111,19 @@ class CheckpointManager:
         return steps[-1] if steps else None
 
     def save(self, step: int, tree, extra_meta: dict | None = None,
-             blocking: bool = True) -> None:
+             blocking: bool = True, retain_class: str = "default") -> None:
+        """``retain_class`` partitions the retention budget: ``max_to_keep``
+        newest steps are kept PER class, so frequent low-value snapshots
+        (e.g. the CV driver's mid-fold chunk states) cannot evict the rare
+        records that resume correctness depends on (completed folds)."""
         self.wait()
+        self._retain_classes[step] = retain_class
         # materialize on host BEFORE backgrounding (donated buffers may die)
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
 
         def _work():
-            save_pytree(self._step_dir(step), host_tree, extra_meta)
+            save_pytree(self._step_dir(step), host_tree, extra_meta,
+                        retain_class)
             self._gc()
 
         if blocking:
@@ -136,7 +146,25 @@ class CheckpointManager:
         tree, extra = load_pytree(self._step_dir(step), target)
         return step, tree, extra
 
+    def _step_class(self, step: int) -> str:
+        """Retention class of a step; read from meta.json when this manager
+        instance didn't write it (resume after a restart)."""
+        cls = self._retain_classes.get(step)
+        if cls is None:
+            try:
+                with open(os.path.join(self._step_dir(step),
+                                       "meta.json")) as fh:
+                    cls = json.load(fh).get("retain_class", "default")
+            except (OSError, json.JSONDecodeError):
+                cls = "default"
+            self._retain_classes[step] = cls
+        return cls
+
     def _gc(self) -> None:
-        steps = self.all_steps()
-        for s in steps[: -self.max_to_keep]:
-            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+        by_class: dict[str, list[int]] = {}
+        for s in self.all_steps():   # sorted -> per-class lists sorted too
+            by_class.setdefault(self._step_class(s), []).append(s)
+        for steps in by_class.values():
+            for s in steps[: -self.max_to_keep]:
+                shutil.rmtree(self._step_dir(s), ignore_errors=True)
+                self._retain_classes.pop(s, None)

@@ -7,7 +7,10 @@ driver is also the fault-tolerance unit, at two granularities:
 * fold-level (always on with a checkpoint manager): each completed fold is
   checkpointed (fold index + alpha + f), so a restarted job re-seeds from
   the last completed fold — the paper's own mechanism doubles as the
-  recovery path;
+  recovery path. On restore, EVERY retained done record is loaded: the
+  resumed report covers the pre-crash folds (``FoldStat.restored``) so its
+  totals match an uninterrupted run, or ``CVReport.partial`` flags the gap
+  when retention GC dropped some;
 * chunk-level (opt-in via ``chunk_iters``): the engine's chunked dispatch
   snapshots (alpha, f, n_iter) every ``checkpoint_every`` chunks *inside* a
   fold, so recovery no longer loses an in-flight fold — the restarted solve
@@ -55,6 +58,7 @@ class FoldStat:
     acc_total: int
     objective: float
     converged: bool
+    restored: bool = False  # rebuilt from a checkpoint (times then read 0.0)
 
 
 @dataclasses.dataclass
@@ -84,6 +88,13 @@ class CVReport:
         t = sum(f.acc_total for f in self.folds)
         return c / max(t, 1)
 
+    @property
+    def partial(self) -> bool:
+        """True when the report does not cover every fold — a resumed run
+        whose earlier done-records were retention-GC'd. Totals/accuracy then
+        aggregate fewer than k folds and are NOT comparable to a full run."""
+        return sorted(f.fold for f in self.folds) != list(range(self.k))
+
     def row(self) -> dict:
         return {"dataset": self.dataset, "method": self.method, "k": self.k,
                 "iterations": self.total_iterations,
@@ -103,6 +114,18 @@ def _transition_idx(chunks: np.ndarray, g: int, h: int):
     k = chunks.shape[0]
     S = np.concatenate([chunks[j] for j in range(k) if j not in (g, h)])
     return jnp.asarray(S), jnp.asarray(chunks[h]), jnp.asarray(chunks[g])
+
+
+def _eval_fold(K, y, chunks, h, res, C) -> tuple[int, int, float]:
+    """(acc_correct, acc_total, objective) of fold h's held-out chunk —
+    the one evaluation path shared by the live CV loop, the batched driver
+    and the checkpoint-restore rebuild, so they cannot drift apart."""
+    test_idx = jnp.asarray(chunks[h])
+    train_mask = jnp.ones(chunks.size, bool).at[test_idx].set(False)
+    b = bias_from_solution(res, y, train_mask, C)
+    pred = predict(K[test_idx], y, res.alpha, b)
+    return (int(jnp.sum(pred == y[test_idx])), int(test_idx.shape[0]),
+            float(dual_objective(K, y, res.alpha)))
 
 
 def _fold_masks(chunks: np.ndarray) -> np.ndarray:
@@ -144,44 +167,68 @@ def run_cv(ds: SVMDataset, k: int = 10, method: str = "sir",
     y = y[:n]
 
     results: dict[int, object] = {}
+    restored_meta: dict[int, dict] = {}
     folds: list[FoldStat] = []
     start_fold = 0
     resume = None   # (alpha, f, n_iter, seed_from) of an in-flight fold
 
     if checkpoint_manager is not None and checkpoint_manager.latest_step() is not None:
-        step, tree, extra = checkpoint_manager.restore()
-        # a checkpoint is only resumable into the SAME run: a different
-        # partition (k/dataset/seed) misaligns the fold masks, and resuming
-        # a mid-fold snapshot under a different method/partition would
-        # silently converge to a wrong but "converged" fixed point. A done
-        # record tolerates a method change (seeding never moves the fixed
-        # point); a mid snapshot IS the method's trajectory, so it doesn't.
-        want = {"k": k, "dataset": ds.name, "seed": seed}
-        if extra.get("phase") == "mid":
-            want["method"] = method
-        got = {key: extra.get(key) for key in want}
-        if got != want:
-            raise ValueError(
-                f"checkpoint at step {step} belongs to run {got}, cannot "
-                f"resume it as {want}; point the manager at a fresh "
-                "directory or delete the stale checkpoints")
-        if extra.get("phase") == "mid":
-            start_fold = extra["fold"]
-            resume = (jnp.asarray(tree["alpha"]), jnp.asarray(tree["f"]),
-                      int(tree["n_iter"]), extra["seed_from"])
-            prev = extra.get("prev_step")
-            if prev is not None:
-                try:  # may have been retention-GC'd; only seeds later folds
-                    _, ptree, pextra = checkpoint_manager.restore(step=prev)
-                    results[pextra["fold"]] = _result_from_tree(ptree)
-                except FileNotFoundError:
-                    pass
-        else:
-            results[extra["fold"]] = _result_from_tree(tree)
-            start_fold = extra["fold"] + 1
+        latest = checkpoint_manager.latest_step()
+        # restore EVERY retained done record, not just the latest: the
+        # returned report must account for pre-crash folds (else its
+        # total_iterations/accuracy silently disagree with an uninterrupted
+        # run), and the strict straggler policy needs fold h-1 in
+        # ``results`` to seed fold h. Done records live at
+        # (fold+1)*_FOLD_STRIDE unconditionally — chunked and unchunked runs
+        # share the numbering, so either kind can resume the other. Mid
+        # snapshots (step % _FOLD_STRIDE != 0) are stale unless latest.
+        for s in checkpoint_manager.all_steps():
+            if s % _FOLD_STRIDE != 0 and s != latest:
+                continue
+            step, tree, extra = checkpoint_manager.restore(step=s)
+            # a checkpoint is only resumable into the SAME run: a different
+            # partition (k/dataset/seed) misaligns the fold masks, and
+            # resuming a mid-fold snapshot under a different
+            # method/partition would silently converge to a wrong but
+            # "converged" fixed point. A done record tolerates a method
+            # change (seeding never moves the fixed point); a mid snapshot
+            # IS the method's trajectory, so it doesn't.
+            want = {"k": k, "dataset": ds.name, "seed": seed}
+            if extra.get("phase") == "mid":
+                want["method"] = method
+            got = {key: extra.get(key) for key in want}
+            if got != want:
+                raise ValueError(
+                    f"checkpoint at step {step} belongs to run {got}, cannot "
+                    f"resume it as {want}; point the manager at a fresh "
+                    "directory or delete the stale checkpoints")
+            if extra.get("phase") == "mid":   # only possible for the latest
+                start_fold = extra["fold"]
+                resume = (jnp.asarray(tree["alpha"]), jnp.asarray(tree["f"]),
+                          int(tree["n_iter"]), extra["seed_from"])
+            else:
+                results[extra["fold"]] = _result_from_tree(tree)
+                restored_meta[extra["fold"]] = extra
+                start_fold = max(start_fold, extra["fold"] + 1)
 
-    last_done_step = max(
-        ((h + 1) * _FOLD_STRIDE for h in results), default=None)
+    # rebuild FoldStats for the restored folds so the report covers them
+    # (per-fold timings are not checkpointed and read 0.0; ``restored``
+    # marks them) — but ONLY for records written under the SAME method:
+    # a done record from another method is a valid seed (the fixed point is
+    # method-independent) yet its n_iter is that method's trajectory, and
+    # republishing it under this report's label would fabricate a
+    # per-method iteration count (the paper's headline metric). Skipped
+    # folds leave a gap that ``report.partial`` flags.
+    for h in sorted(results):
+        if restored_meta[h].get("method") != method:
+            continue
+        res = results[h]
+        correct, total, obj = _eval_fold(K, y, chunks, h, res, ds.C)
+        folds.append(FoldStat(
+            fold=h, seed_from=restored_meta[h].get("seed_from", -1),
+            n_iter=int(res.n_iter), init_time=0.0, solve_time=0.0,
+            acc_correct=correct, acc_total=total, objective=obj,
+            converged=bool(res.converged), restored=True))
 
     for h in range(start_fold, k):
         test_idx = jnp.asarray(chunks[h])
@@ -223,20 +270,21 @@ def run_cv(ds: SVMDataset, k: int = 10, method: str = "sir",
             # would keep resurrecting the stale pre-crash snapshot forever
             counter = {"c": n_iter0 // chunk_iters}
 
-            def on_chunk(state, h=h, seed_from=seed_from, counter=counter,
-                         prev_step=last_done_step):
+            def on_chunk(state, h=h, seed_from=seed_from, counter=counter):
                 counter["c"] += 1
                 if counter["c"] % checkpoint_every:
                     return
                 step = h * _FOLD_STRIDE + min(counter["c"], _FOLD_STRIDE - 2) + 1
+                # mid snapshots GC separately from done records: they are
+                # frequent and superseded by the next one, and must never
+                # evict the done records the resume path depends on
                 checkpoint_manager.save(
                     step, {"alpha": state.alpha, "f": state.f,
                            "n_iter": state.n_iter},
                     extra_meta={"phase": "mid", "fold": h,
-                                "seed_from": seed_from, "prev_step": prev_step,
-                                "method": method, "k": k, "dataset": ds.name,
-                                "seed": seed},
-                    blocking=False)
+                                "seed_from": seed_from, "method": method,
+                                "k": k, "dataset": ds.name, "seed": seed},
+                    blocking=False, retain_class="mid")
 
         t0 = time.perf_counter()
         res = smo_solve(K, y, train_mask, ds.C, alpha0, f0, tol=tol,
@@ -245,29 +293,28 @@ def run_cv(ds: SVMDataset, k: int = 10, method: str = "sir",
         jax.block_until_ready(res)
         solve_time = time.perf_counter() - t0
 
-        b = bias_from_solution(res, y, train_mask, ds.C)
-        pred = predict(K[test_idx], y, res.alpha, b)
-        correct = int(jnp.sum(pred == y[test_idx]))
-        obj = float(dual_objective(K, y, res.alpha))
-
+        correct, total, obj = _eval_fold(K, y, chunks, h, res, ds.C)
         folds.append(FoldStat(
             fold=h, seed_from=seed_from, n_iter=int(res.n_iter),
             init_time=init_time, solve_time=solve_time,
-            acc_correct=correct, acc_total=int(test_idx.shape[0]),
+            acc_correct=correct, acc_total=total,
             objective=obj, converged=bool(res.converged)))
         results[h] = res
 
         if checkpoint_manager is not None:
-            last_done_step = (h + 1) * _FOLD_STRIDE if chunk_iters is not None \
-                else h
+            # strided numbering UNCONDITIONALLY: unchunked runs used to save
+            # fold h at step h while every reader assumed (h+1)*_FOLD_STRIDE,
+            # so a later resume with chunk_iters set pointed at nonexistent
+            # steps and silently degraded strict seeding to cold
             checkpoint_manager.save(
-                last_done_step,
+                (h + 1) * _FOLD_STRIDE,
                 {"alpha": res.alpha, "f": res.f, "n_iter": res.n_iter,
                  "converged": res.converged, "b_up": res.b_up,
                  "b_low": res.b_low},
-                extra_meta={"phase": "done", "fold": h, "method": method,
-                            "k": k, "dataset": ds.name, "seed": seed},
-                blocking=False)
+                extra_meta={"phase": "done", "fold": h, "seed_from": seed_from,
+                            "method": method, "k": k, "dataset": ds.name,
+                            "seed": seed},
+                blocking=False, retain_class="done")
 
     if checkpoint_manager is not None:
         checkpoint_manager.wait()
@@ -311,15 +358,11 @@ def run_cv_batched(ds: SVMDataset, k: int = 10, tol: float = 1e-3,
     folds = []
     for h in range(k):
         fold_res = jax.tree.map(lambda a: a[h], res)
-        test_idx = jnp.asarray(chunks[h])
-        b = bias_from_solution(fold_res, y, masks[h], ds.C)
-        pred = predict(K[test_idx], y, fold_res.alpha, b)
+        correct, total, obj = _eval_fold(K, y, chunks, h, fold_res, ds.C)
         folds.append(FoldStat(
             fold=h, seed_from=-1, n_iter=int(fold_res.n_iter),
             init_time=0.0, solve_time=solve_time / k,
-            acc_correct=int(jnp.sum(pred == y[test_idx])),
-            acc_total=int(test_idx.shape[0]),
-            objective=float(dual_objective(K, y, fold_res.alpha)),
+            acc_correct=correct, acc_total=total, objective=obj,
             converged=bool(fold_res.converged)))
     return CVReport(dataset=ds.name, method="cold_batched", k=k, n=n,
                     kernel_time=kernel_time, folds=folds)

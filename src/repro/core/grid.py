@@ -13,7 +13,10 @@ top of the unified engine:
   batched engine call instead of a python loop: fold 0 of every cell in a
   gamma row (when not C-chaining), every fold h>0 across cells (each cell
   seeds from its own fold h-1, so cells are mutually independent), and the
-  entire row for ``method="cold"`` (k * n_C independent lanes).
+  entire row for ``method="cold"`` (k * n_C independent lanes). For
+  ``method="ato"`` the seeding itself is batched too: the jittable ATO
+  (``seeding.ato_seed_batch``) vmaps one fixed-shape ramp over the whole C
+  row, so a transition costs one device program instead of n_C host loops.
 
 The fold chain inside a cell stays sequential — that is the paper's
 algorithm — but the grid turns its breadth axes into vmap lanes.
@@ -190,9 +193,17 @@ def run_grid(ds: SVMDataset, Cs, gammas, k: int = 10, method: str = "sir",
             for h in range(1, k):
                 S_idx, R_idx, T_idx = _transition_idx(chunks, h - 1, h)
                 t0 = time.perf_counter()
-                alpha0s = jnp.stack([
-                    seeder(K, y, Cs[ci], _lane(prev, ci), S_idx, R_idx, T_idx)
-                    for ci in range(m)])
+                if method == "ato":
+                    # the jittable ATO vmaps over the C row: one device
+                    # program ramps every cell's transition concurrently
+                    # (pad sized for the widest lane; see seeding.py)
+                    alpha0s = seeding.ato_seed_batch(K, y, C_vec, prev,
+                                                     S_idx, R_idx, T_idx)
+                else:
+                    alpha0s = jnp.stack([
+                        seeder(K, y, Cs[ci], _lane(prev, ci),
+                               S_idx, R_idx, T_idx)
+                        for ci in range(m)])
                 # per-cell init_f (not one batched GEMM): same reduction
                 # order as run_cv, so grid cells match it bit-exactly
                 f0s = jnp.stack([init_f(K, y, alpha0s[ci]) for ci in range(m)])

@@ -236,10 +236,22 @@ def sir_seed(K, y, C, prev: SMOResult, S_idx, R_idx, T_idx,
 # --------------------------------------------------------------------------
 # ATO — Adjusting Alpha Towards Optimum (paper Eq. 7-11, Algorithm 1)
 # --------------------------------------------------------------------------
+#
+# Two implementations share the per-step ramp/retire/graduate semantics:
+#
+# * ``ato_seed``     — fixed-shape ``lax.while_loop``: the dynamic M/T/R
+#   index sets become boolean masks, the per-step least-squares system is a
+#   bordered KKT solve over a padded working set, and the whole transition
+#   (ramp + constraint repair) runs as ONE jitted device program with zero
+#   host syncs inside the loop (see DESIGN.md §Jittable ATO).
+# * ``ato_seed_ref`` — the eager host-side loop kept as the executable
+#   reference (paper-faithful pinv least squares); the parity contract is
+#   covered by tests/test_seeding.py.
 
-def ato_seed(K, y, C, prev: SMOResult, S_idx, R_idx, T_idx,
-             max_steps: int = 30, tol: float = 1e-3):
-    """Karasuyama/Takeuchi-style incremental-decremental ramp.
+
+def ato_seed_ref(K, y, C, prev: SMOResult, S_idx, R_idx, T_idx,
+                 max_steps: int = 30, tol: float = 1e-3):
+    """Karasuyama/Takeuchi-style incremental-decremental ramp (reference).
 
     Host-side loop (the working sets change size every step; the dense
     (1+|M|) x |M| pseudo-inverse dominates — exactly the cost profile the
@@ -251,9 +263,7 @@ def ato_seed(K, y, C, prev: SMOResult, S_idx, R_idx, T_idx,
     alpha = prev.alpha.copy()
     f = prev.f.copy()
     n = y.shape[0]
-    in_T = jnp.zeros(n, bool).at[T_idx].set(True)
-    in_R = jnp.zeros(n, bool).at[R_idx].set(True)
-    in_S = jnp.zeros(n, bool).at[S_idx].set(True)
+    in_S, in_T, in_R = _transition_masks(n, S_idx, R_idx, T_idx)
     T_active = in_T
     R_active = in_R & (alpha > 0)
     alpha = jnp.where(in_T, 0.0, alpha)
@@ -317,6 +327,166 @@ def ato_seed(K, y, C, prev: SMOResult, S_idx, R_idx, T_idx,
     return repair_equality(alpha, y, C, S_idx, T_idx)
 
 
+def _bucket_cap(m: int, n: int) -> int:
+    """Smallest multiple of 128 >= m, clamped to [1, n]. Buckets the
+    working-set pad so jit retraces are O(n / 128) per problem size instead
+    of one per transition, while keeping the padded LU within ~2x of the
+    exact-|M| cost (a pow2 bucket can pad 605 -> 1024 and quadruple it)."""
+    cap = max(128, -(-m // 128) * 128)
+    return max(1, min(cap, n))
+
+
+def _ato_ramp(K, y, C, alpha, f, b_fallback, in_S, in_T, in_R, tol,
+              m_cap: int, max_steps: int):
+    """Fixed-shape ATO ramp: ``ato_seed_ref``'s loop with masks for the
+    M/T/R sets and a bordered KKT solve for Phi. Pure traced function —
+    jit- and vmap-safe (the grid batches it across a C row).
+
+    The free set M is always a subset of (initially-free S rows) + T: a
+    bounded row's alpha never moves (only M/T-active/R-active alphas do), so
+    it can never become free, while graduated T rows can. Callers therefore
+    pad the working set to ``m_cap >= |free S at entry| + |T|``, which is
+    exact — overflow is impossible, not just unlikely.
+    """
+    n = y.shape[0]
+    C = jnp.asarray(C, K.dtype)
+    thresh = 1e-12 * jnp.maximum(C, 1.0)
+    valid = jnp.arange(m_cap)
+
+    def cond(carry):
+        _alpha, _f, T_act, R_act, step, stop = carry
+        return (step < max_steps) & ~stop & (jnp.any(R_act) | jnp.any(T_act))
+
+    def body(carry):
+        alpha, f, T_act, R_act, step, _ = carry
+        train_now = in_S | (in_T & ~T_act)
+        free = train_now & (alpha > 0) & (alpha < C)
+        nf = jnp.sum(free)
+        b = jnp.where(nf > 0,
+                      jnp.sum(jnp.where(free, f, 0.0)) / jnp.maximum(nf, 1),
+                      b_fallback)
+        # ramp directions: T ramps up to C, R ramps down to 0 (per unit eta)
+        v = jnp.where(T_act, C - alpha, 0.0) - jnp.where(R_act, alpha, 0.0)
+        w = y * v
+        # fixed-shape working set: indices of M padded to m_cap (padding
+        # lanes gather row 0 but are masked out of every product below)
+        idx = jnp.nonzero(free, size=m_cap, fill_value=0)[0]
+        lane = valid < nf
+        yM = jnp.where(lane, y[idx], 0.0)
+        Q = (yM[:, None] * yM[None, :]) * K[idx][:, idx]
+        # Bordered KKT system replacing the reference's pinv least squares
+        # (Eq. 10): unknown (db, Phi) with the equality row enforced exactly
+        #     [0    yM^T] [db ]   [sum(w)        ]
+        #     [yM   Q_MM] [Phi] = [yM * (K_M: @ w)]
+        # Padding lanes carry an identity diagonal and zero rhs (Phi = 0
+        # there); a tiny relative ridge keeps the LU finite on duplicate
+        # instances, and a non-finite solve falls back to Phi = 0 (pure
+        # T/R ramp — the M-empty behaviour).
+        lam = 1e-10 * (1.0 + jnp.max(jnp.abs(jnp.diagonal(Q))))
+        B = jnp.zeros((m_cap + 1, m_cap + 1), K.dtype)
+        B = B.at[0, 0].set(jnp.where(nf > 0, 0.0, 1.0))
+        B = B.at[0, 1:].set(yM)
+        B = B.at[1:, 0].set(yM)
+        B = B.at[1:, 1:].set(Q + jnp.diag(jnp.where(lane, lam, 1.0)))
+        r0 = jnp.where(nf > 0, jnp.sum(w), 0.0)
+        r = yM * (K[idx] @ w)
+        sol = jnp.linalg.solve(B, jnp.concatenate([r0[None], r]))
+        Phi = jnp.where(lane & jnp.isfinite(sol[1:]), sol[1:], 0.0)
+        Phi_full = jnp.zeros(n, K.dtype).at[idx].add(jnp.where(lane, Phi, 0.0))
+        # per-unit df (Eq. 11 divided by y_i), one kernel matvec
+        g = K @ (w - y * Phi_full)
+        # step size: smallest eta>0 putting some bound instance's f at b
+        bound = train_now & ~free
+        live = jnp.abs(g) > 1e-12
+        safe_g = jnp.where(live, g, 1.0)
+        etas = jnp.where(bound & live, (b - f) / safe_g, _INF)
+        etas = jnp.where(etas > 1e-12, etas, _INF)
+        eta = jnp.minimum(jnp.min(etas), 1.0)
+        eta = jnp.where(jnp.isfinite(eta), eta, jnp.ones((), K.dtype))
+        # apply (M, T-active, R-active are disjoint: one fused update)
+        alpha_new = jnp.clip(alpha + eta * (v - Phi_full), 0.0, C)
+        f_new = f + eta * g
+        # retire drained R instances; graduate T instances that meet Eq. 5
+        R_new = R_act & (alpha_new > thresh)
+        ok_m = (alpha_new > 0) & (alpha_new < C) & (jnp.abs(f_new - b) <= tol)
+        ok_u = (((y > 0) & (alpha_new <= 0)) | ((y < 0) & (alpha_new >= C))) \
+            & (f_new >= b - tol)
+        ok_l = (((y > 0) & (alpha_new >= C)) | ((y < 0) & (alpha_new <= 0))) \
+            & (f_new <= b + tol)
+        T_new = T_act & ~(ok_m | ok_u | ok_l)
+        return (alpha_new, f_new, T_new, R_new, step + 1, eta >= 1.0)
+
+    carry = (jnp.where(in_T, 0.0, alpha), f, in_T, in_R & (alpha > 0),
+             jnp.zeros((), jnp.int32), jnp.zeros((), bool))
+    alpha, *_ = jax.lax.while_loop(cond, body, carry)
+    return jnp.where(in_R, 0.0, alpha)   # R must leave the training set
+
+
+@functools.partial(jax.jit, static_argnames=("m_cap", "max_steps"))
+def _ato_seed_jit(K, y, C, alpha, f, b_fallback, in_S, in_T, in_R,
+                  S_idx, T_idx, tol, *, m_cap, max_steps):
+    out = _ato_ramp(K, y, C, alpha, f, b_fallback, in_S, in_T, in_R, tol,
+                    m_cap, max_steps)
+    return repair_equality(out, y, jnp.asarray(C, K.dtype), S_idx, T_idx)
+
+
+@functools.partial(jax.jit, static_argnames=("m_cap", "max_steps"))
+def _ato_seed_batch_jit(K, y, Cs, alphas, fs, b_fallbacks, in_S, in_T, in_R,
+                        S_idx, T_idx, tol, *, m_cap, max_steps):
+    def one(C, alpha, f, b_fb):
+        out = _ato_ramp(K, y, C, alpha, f, b_fb, in_S, in_T, in_R, tol,
+                        m_cap, max_steps)
+        return repair_equality(out, y, jnp.asarray(C, K.dtype), S_idx, T_idx)
+
+    return jax.vmap(one)(Cs, alphas, fs, b_fallbacks)
+
+
+def _transition_masks(n, S_idx, R_idx, T_idx):
+    in_T = jnp.zeros(n, bool).at[T_idx].set(True)
+    in_R = jnp.zeros(n, bool).at[R_idx].set(True)
+    in_S = jnp.zeros(n, bool).at[S_idx].set(True)
+    return in_S, in_T, in_R
+
+
+def ato_seed(K, y, C, prev: SMOResult, S_idx, R_idx, T_idx,
+             max_steps: int = 30, tol: float = 1e-3):
+    """Jittable ATO: ``ato_seed_ref``'s ramp as one fixed-shape device
+    program (see ``_ato_ramp``). The single host sync below sizes the padded
+    working set BEFORE the loop; everything else — including the constraint
+    repair — runs on device.
+    """
+    y = jnp.asarray(y, K.dtype)
+    n = y.shape[0]
+    in_S, in_T, in_R = _transition_masks(n, S_idx, R_idx, T_idx)
+    nf0 = int(jnp.sum(in_S & (prev.alpha > 0) & (prev.alpha < C)))
+    m_cap = _bucket_cap(nf0 + int(T_idx.shape[0]), n)
+    b_fb = 0.5 * (prev.b_up + prev.b_low)
+    return _ato_seed_jit(K, y, C, prev.alpha, prev.f, b_fb, in_S, in_T, in_R,
+                         S_idx, T_idx, tol, m_cap=m_cap,
+                         max_steps=int(max_steps))
+
+
+def ato_seed_batch(K, y, Cs, prev: SMOResult, S_idx, R_idx, T_idx,
+                   max_steps: int = 30, tol: float = 1e-3):
+    """Batched ATO over lanes sharing one fold transition — the grid's
+    C-row case: ``prev`` is a batched ``SMOResult`` (leading axis = lane,
+    one per C value) and ``Cs`` its per-lane C. One vmapped while_loop
+    ramps every lane concurrently (lanes that finish freeze via the
+    batching rule's select); the pad is sized for the widest lane.
+    """
+    y = jnp.asarray(y, K.dtype)
+    n = y.shape[0]
+    Cs = jnp.asarray(Cs, K.dtype)
+    in_S, in_T, in_R = _transition_masks(n, S_idx, R_idx, T_idx)
+    free0 = in_S[None] & (prev.alpha > 0) & (prev.alpha < Cs[:, None])
+    nf0 = int(jnp.max(jnp.sum(free0, axis=1)))
+    m_cap = _bucket_cap(nf0 + int(T_idx.shape[0]), n)
+    b_fbs = 0.5 * (prev.b_up + prev.b_low)
+    return _ato_seed_batch_jit(K, y, Cs, prev.alpha, prev.f, b_fbs,
+                               in_S, in_T, in_R, S_idx, T_idx, tol,
+                               m_cap=m_cap, max_steps=int(max_steps))
+
+
 # --------------------------------------------------------------------------
 # LOO baselines: AVG (DeCoste & Wagstaff 2000) and TOP (Lee et al. 2004)
 # --------------------------------------------------------------------------
@@ -374,4 +544,5 @@ def top_seed_loo(K, y, C, alpha, t: jnp.ndarray):
     return y * water_fill(beta, lo, hi, 0.0)
 
 
-SEEDERS = {"cold": cold_seed, "ato": ato_seed, "mir": mir_seed, "sir": sir_seed}
+SEEDERS = {"cold": cold_seed, "ato": ato_seed, "ato_ref": ato_seed_ref,
+           "mir": mir_seed, "sir": sir_seed}

@@ -100,20 +100,36 @@ def _sets(alpha, y, mask, C):
     return i_up, i_low
 
 
+def _guarded_first(v, m, nan):
+    """First index where ``v == m`` — or the first NaN index if any (NaN
+    wins, as in ``jnp.argmin``/``argmax``) — always in range."""
+    idx = jnp.arange(v.shape[0])
+    first = jnp.min(jnp.where(v == m, idx, v.shape[0]))
+    first_nan = jnp.min(jnp.where(nan, idx, v.shape[0]))
+    out = jnp.where(jnp.any(nan), first_nan, first)
+    return jnp.minimum(out, v.shape[0] - 1)
+
+
 def _argmin(v):
     """First index of the minimum. Same selection (and tie-breaking: first
     occurrence) as ``jnp.argmin``, but built from plain min reduces — XLA's
     variadic argmin reduce is an order of magnitude slower on CPU, and
-    catastrophically so when vmapped over a fold batch."""
-    m = jnp.min(v)
-    idx = jnp.arange(v.shape[0])
-    return jnp.min(jnp.where(v == m, idx, v.shape[0]))
+    catastrophically so when vmapped over a fold batch.
+
+    NaN-guarded: the naive ``v == jnp.min(v)`` is all-False when v contains
+    a NaN (min propagates it), which used to return ``v.shape[0]`` — an
+    out-of-range index that jax's clamped gather silently turned into
+    "always pick the last row", so the solver spun on a bogus pair instead
+    of surfacing the bad state.
+    """
+    nan = jnp.isnan(v)
+    return _guarded_first(v, jnp.min(jnp.where(nan, _INF, v)), nan)
 
 
 def _argmax(v):
-    m = jnp.max(v)
-    idx = jnp.arange(v.shape[0])
-    return jnp.min(jnp.where(v == m, idx, v.shape[0]))
+    """First index of the maximum; NaN-guarded like ``_argmin``."""
+    nan = jnp.isnan(v)
+    return _guarded_first(v, jnp.max(jnp.where(nan, -_INF, v)), nan)
 
 
 def optimality(alpha, f, y, train_mask, C):
@@ -296,7 +312,10 @@ def _step(source, y, train_mask, C, diag, tol, it_cap, wss, state):
     b_up = jnp.min(jnp.where(i_up, f, _INF))
     b_low = jnp.max(jnp.where(i_low, f, -_INF))
     gap = jnp.where(has, b_low - b_up, -_INF)
-    done = done | (gap <= tol) | (it >= it_cap)
+    # a NaN gap (NaN in f on an active row) can never satisfy gap <= tol, so
+    # the solver would burn max_iter on a poisoned state; halt instead and
+    # let _finalize report converged=False (the bad state surfaces)
+    done = done | (gap <= tol) | (it >= it_cap) | jnp.isnan(gap)
 
     # --- select i: minimal f over I_up ---
     i = _argmin(jnp.where(i_up, f, _INF))

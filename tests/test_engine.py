@@ -226,6 +226,38 @@ def test_batched_warm_seeds():
     assert int(bat.n_iter[1]) == int(warm.n_iter)
 
 
+# ------------------------------------------------------- NaN guards -------
+
+def test_arg_reduces_nan_guard():
+    """Regression: a NaN used to make ``v == min(v)`` all-False, so the
+    reduce returned v.shape[0] — out of range — and jax's clamped gather
+    silently aliased it to the last row."""
+    from repro.svm.engine import _argmin, _argmax
+    v = jnp.asarray([3.0, jnp.nan, 1.0, jnp.nan])
+    assert int(_argmin(v)) == int(jnp.argmin(v)) == 1
+    assert int(_argmax(v)) == int(jnp.argmax(v)) == 1
+    clean = jnp.asarray([3.0, 1.0, 1.0, 7.0])
+    assert int(_argmin(clean)) == int(jnp.argmin(clean)) == 1
+    assert int(_argmax(clean)) == int(jnp.argmax(clean)) == 3
+    # degenerate inputs stay in range
+    assert int(_argmin(jnp.asarray([jnp.nan, jnp.nan]))) == 0
+    assert int(_argmax(jnp.asarray([jnp.nan, jnp.nan]))) == 0
+    assert int(_argmin(jnp.full(3, jnp.inf))) == 0
+    assert int(_argmax(jnp.full(3, -jnp.inf))) == 0
+
+
+def test_solver_halts_on_nan_state():
+    """A NaN in f on an active row must stop the solve immediately with
+    converged=False instead of spinning on a bogus pair until max_iter."""
+    ds, X, K, y = _setup(n=64)
+    n = y.shape[0]
+    f0 = (-y).at[3].set(jnp.nan)
+    res = smo_solve(K, y, jnp.ones(n, bool), ds.C, jnp.zeros(n), f0,
+                    max_iter=50_000)
+    assert not bool(res.converged)
+    assert int(res.n_iter) == 0   # halted before any update was applied
+
+
 def test_run_cv_batched_matches_cold_cv():
     from repro.core.cv import run_cv, run_cv_batched
     ds = make_dataset("heart", n_override=120)

@@ -50,6 +50,26 @@ def test_seed_across_C_same_accuracy(ds):
         assert c.converged
 
 
+def test_grid_ato_batched_row(ds):
+    """method="ato": each fold transition is ONE vmapped ramp across the C
+    row (seeding.ato_seed_batch). Cells must match the standalone ATO CV run
+    on accuracy and converge; iteration counts are comparable, not
+    bit-identical (the batched pad is sized for the widest lane)."""
+    rep = run_grid(ds, Cs=CS, gammas=[0.3], k=4, method="ato")
+    assert len(rep.cells) == len(CS)
+    assert all(c.converged for c in rep.cells)
+    for C in CS:
+        cell = [c for c in rep.cells if c.C == C][0]
+        cv = run_cv(dataclasses.replace(ds, C=C, gamma=0.3), k=4,
+                    method="ato")
+        assert cell.accuracy == pytest.approx(cv.accuracy, abs=0.05)
+        assert cell.iterations <= 2 * cv.total_iterations + 500
+    # ATO transitions compose with the C-chained fold 0 (seed_across_C)
+    rep2 = run_grid(ds, Cs=CS, gammas=[0.3], k=4, method="ato",
+                    seed_across_C=True)
+    assert all(c.converged for c in rep2.cells)
+
+
 def test_grid_reports_times(ds):
     rep = run_grid(ds, Cs=CS, gammas=GAMMAS, k=3, method="sir")
     assert rep.kernel_time > 0 and rep.solve_time > 0

@@ -242,6 +242,99 @@ def test_scale_seed_C_constraints():
         assert float(jnp.abs(jnp.where(mask0, 0.0, a0)).max()) == 0.0
 
 
+# ----------------------------------------------------- jittable ATO -------
+# ato_seed is a fixed-shape lax.while_loop (bordered KKT solve over a padded
+# working set); ato_seed_ref is the eager paper-faithful loop it replaced.
+# The parity contract: feasible seed, alpha0 close up to the repair
+# tolerance, and — the real claim — the seeded solve reaching the same fixed
+# point with comparable iteration counts.
+
+ATO_SUITE_N = {"adult": 400, "heart": 270, "madelon": 400, "mnist": 400,
+               "webdata": 400}
+
+
+@pytest.mark.parametrize("name", sorted(ATO_SUITE_N))
+def test_ato_jit_parity_suite(name):
+    ds, K, y, chunks, res0, (S, R, T) = _fold_setup(name, n=ATO_SUITE_N[name],
+                                                    k=5)
+    a_ref = seeding.ato_seed_ref(K, y, ds.C, res0, S, R, T)
+    a_jit = seeding.ato_seed(K, y, ds.C, res0, S, R, T)
+    eps = 1e-8 * max(ds.C, 1.0)
+    assert bool(jnp.all((a_jit >= -eps) & (a_jit <= ds.C + eps)))
+    assert float(jnp.abs(jnp.sum(a_jit * y))) < 1e-6 * max(ds.C, 1.0)
+    assert float(jnp.abs(a_jit[R]).max()) == 0.0
+    # bordered KKT vs pinv least squares: same ramp, slightly different
+    # Phi per step (heart's full 30-step ramp accumulates the most)
+    assert float(jnp.max(jnp.abs(a_jit - a_ref))) < 0.2 * ds.C
+    nn = chunks.size
+    mask1 = jnp.ones(nn, bool).at[jnp.asarray(chunks[1])].set(False)
+    warm_ref = smo_solve(K, y, mask1, ds.C, a_ref, init_f(K, y, a_ref))
+    warm_jit = smo_solve(K, y, mask1, ds.C, a_jit, init_f(K, y, a_jit))
+    assert bool(warm_jit.converged)
+    from repro.svm import dual_objective
+    assert float(dual_objective(K, y, warm_jit.alpha)) == pytest.approx(
+        float(dual_objective(K, y, warm_ref.alpha)), rel=1e-3, abs=1e-6)
+    # comparable warm-start quality (not bit-identical trajectories)
+    assert int(warm_jit.n_iter) <= 1.5 * int(warm_ref.n_iter) + 300
+
+
+def test_ato_jit_empty_free_set():
+    """All-bounded prev solution: the masked solve must degrade to the pure
+    T/R ramp (Phi = 0), matching the reference's M-empty branch exactly."""
+    from repro.svm.smo import SMOResult
+    n = 8
+    y = jnp.asarray([1.0, -1.0] * 4)
+    C = 1.0
+    alpha = jnp.asarray([1.0, 1.0, 0.0, 0.0, 1.0, 1.0, 0.0, 0.0])
+    K = jnp.eye(n) + 0.05
+    f = init_f(K, y, alpha)
+    prev = SMOResult(alpha=alpha, f=f, n_iter=jnp.asarray(0),
+                     converged=jnp.asarray(True), b_up=jnp.asarray(-0.25),
+                     b_low=jnp.asarray(0.75))
+    S_idx = jnp.asarray([0, 1, 2, 3])
+    R_idx = jnp.asarray([4, 5])
+    T_idx = jnp.asarray([6, 7])
+    a_ref = seeding.ato_seed_ref(K, y, C, prev, S_idx, R_idx, T_idx)
+    a_jit = seeding.ato_seed(K, y, C, prev, S_idx, R_idx, T_idx)
+    np.testing.assert_allclose(np.asarray(a_jit), np.asarray(a_ref),
+                               atol=1e-9)
+    train = jnp.concatenate([S_idx, T_idx])
+    assert float(jnp.abs(jnp.sum((y * a_jit)[train]))) < 1e-9
+    assert float(jnp.abs(a_jit[R_idx]).max()) == 0.0
+
+
+def test_ato_jit_drained_R_exits_early():
+    """alpha_R already zero: R_active is empty from step 0; the loop still
+    ramps T and terminates via the eta=1 exit, like the reference."""
+    from repro.svm.smo import SMOResult
+    ds, K, y, chunks, res0, (S, R, T) = _fold_setup("heart", n=150, k=5)
+    alpha = res0.alpha.at[R].set(0.0)
+    prev = SMOResult(alpha=alpha, f=init_f(K, y, alpha), n_iter=res0.n_iter,
+                     converged=res0.converged, b_up=res0.b_up,
+                     b_low=res0.b_low)
+    a_ref = seeding.ato_seed_ref(K, y, ds.C, prev, S, R, T)
+    a_jit = seeding.ato_seed(K, y, ds.C, prev, S, R, T)
+    eps = 1e-8 * max(ds.C, 1.0)
+    assert bool(jnp.all((a_jit >= -eps) & (a_jit <= ds.C + eps)))
+    assert float(jnp.abs(jnp.sum(a_jit * y))) < 1e-6 * max(ds.C, 1.0)
+    assert float(jnp.abs(a_jit[R]).max()) == 0.0
+    assert float(jnp.max(jnp.abs(a_jit - a_ref))) < 0.2 * ds.C
+
+
+def test_ato_seed_batch_matches_solo():
+    """The vmapped batch entry (the grid's C-row path) reproduces the solo
+    seeder lane for lane."""
+    import jax
+    ds, K, y, chunks, res0, (S, R, T) = _fold_setup("heart", n=150, k=5)
+    prev2 = jax.tree.map(lambda a: jnp.stack([a, a]), res0)
+    a2 = seeding.ato_seed_batch(K, y, jnp.asarray([ds.C, ds.C]), prev2,
+                                S, R, T)
+    a1 = seeding.ato_seed(K, y, ds.C, res0, S, R, T)
+    assert a2.shape == (2,) + a1.shape
+    np.testing.assert_array_equal(np.asarray(a2[0]), np.asarray(a2[1]))
+    np.testing.assert_allclose(np.asarray(a2[0]), np.asarray(a1), atol=1e-9)
+
+
 # ------------------------------------------------------ property tests -----
 
 @settings(max_examples=20, deadline=None)
