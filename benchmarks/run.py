@@ -32,6 +32,22 @@ def _write_bench_table1(rows: list[dict], quick: bool) -> None:
     for agg in per_method.values():
         agg["init_s"] = round(agg["init_s"], 4)
         agg["solve_s"] = round(agg["solve_s"], 4)
+    # scheduler occupancy aggregate: mean live width (weighted by chunk
+    # count) and peak width across every repacked run — a shrinking
+    # mean_live_width is the repack win; mean == peak means retirement
+    # never compacted the batch and the scheduler degraded to the old
+    # fixed-width schedule
+    occ_rows = [r["occupancy"] for r in rows if "occupancy" in r]
+    scheduler = None
+    if occ_rows:
+        total_chunks = sum(o["chunks"] for o in occ_rows)
+        scheduler = {
+            "chunks": total_chunks,
+            "mean_live_width": round(
+                sum(o["mean_live_width"] * o["chunks"] for o in occ_rows)
+                / max(total_chunks, 1), 3),
+            "peak_width": max(o["peak_width"] for o in occ_rows),
+        }
     payload = {
         "bench": "table1_kfold",
         "quick": quick,
@@ -39,6 +55,7 @@ def _write_bench_table1(rows: list[dict], quick: bool) -> None:
         "backend": jax.default_backend(),
         "python": platform.python_version(),
         "per_method": per_method,
+        "scheduler": scheduler,
         "rows": rows,
     }
     out = os.path.join(_REPO_ROOT, "BENCH_table1.json")

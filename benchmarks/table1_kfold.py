@@ -7,29 +7,130 @@ Datasets are the synthetic suite at CPU-budget cardinality (DESIGN.md
 run so jit compile time doesn't pollute the init-time comparison (the
 paper's C++ has no JIT).
 
-Beyond the paper's columns, a ``cold_batched`` row runs the same k
-independent cold folds CONCURRENTLY through the engine's batched solver
-(identical per-fold fixed points; only the schedule differs). Its total_s
-against ``cold``'s is the fold-batching speedup/overhead tracked across PRs
-in BENCH_table1.json — on few-core CPU hosts the vmapped batch is typically
-NOT faster (the (k, n) state busts cache and XLA CPU pays a thread fork/join
-per parallel fusion); the batch schedule targets accelerator backends where
-per-dispatch overhead dominates (DESIGN.md §Batched folds).
+Beyond the paper's columns:
 
-An ``ato_ref`` row runs the eager host-side ATO loop that ``ato`` (now a
-fixed-shape jitted ramp, DESIGN.md §Jittable ATO) replaced: the pair makes
-the ATO init-time win — and any regression of it — visible directly in
-BENCH_table1.json's artifact diff.
+* ``cold_batched`` — the same k independent cold folds as ONE fixed-width
+  batch through ``engine.solve_batched`` (identical per-fold fixed points;
+  only the schedule differs). On few-core CPU hosts this was measured
+  SLOWER than sequential (the live batch never shrinks — DESIGN.md
+  §Batched folds);
+* ``cold_batched_repacked`` — the same folds through the LaneScheduler
+  (DESIGN.md §Lane scheduler): converged lanes retire between chunks, the
+  live batch is repacked to bucketed widths, and the last straggler runs
+  the sequential single-lane program. Its row carries an ``occupancy``
+  dict (mean/peak live width) that ``benchmarks.run`` aggregates into the
+  BENCH_table1.json ``scheduler`` block — the repack win, and any
+  regression of it, is a one-line artifact diff against ``cold_batched``;
+* ``ato_ref`` — the eager host-side ATO loop that the jitted ramp
+  replaced, kept as the jit baseline;
+* ``ato_bucketed`` — the batched ATO ramp across a 3-lane C row for every
+  fold transition, with per-lane m_cap buckets (``init_s``) vs the
+  historical widest-lane pad (``init_s_padded``); the bucketed ramp must
+  be no slower on every dataset.
 """
 from __future__ import annotations
 
+import time
+
+import jax
+import jax.numpy as jnp
+
 from benchmarks.bench_lib import emit
-from repro.core.cv import run_cv, run_cv_batched
-from repro.data.svm_suite import make_dataset
+from repro.core import seeding
+from repro.core.cv import _fold_masks, _transition_idx, run_cv, run_cv_batched
+from repro.data.svm_suite import kfold_chunks, make_dataset
+from repro.svm import (bias_from_solution, init_f, kernel_matrix, predict,
+                       smo_solve_batched)
 
 SIZES = {"adult": 1000, "heart": 270, "madelon": 1200, "mnist": 1000,
          "webdata": 1000}
-METHODS = ("cold", "cold_batched", "ato", "ato_ref", "mir", "sir")
+METHODS = ("cold", "cold_batched", "cold_batched_repacked", "ato", "ato_ref",
+           "mir", "sir")
+#: C multipliers of the ato_bucketed row — a wide spread (a grid row's
+#: realistic range) so lanes land in different free-set cap buckets on
+#: every suite dataset (the case bucketing exists for); the middle lane is
+#: the paper's C, keeping its accuracy comparable to the ato row
+ATO_ROW_C = (0.01, 1.0, 100.0)
+
+
+def _ato_bucketed_row(name: str, k: int, reps: int) -> dict:
+    """Time the batched ATO ramp (one 3-lane C row, every fold transition)
+    with per-lane buckets vs the widest-lane pad. The solve chain advances
+    on the bucketed seeds; ramp timings are warm min-of-reps."""
+    ds = make_dataset(name, n_override=SIZES[name])
+    X = jnp.asarray(ds.X)
+    y = jnp.asarray(ds.y, jnp.float64)
+    K = kernel_matrix(X, X, kind="rbf", gamma=ds.gamma)
+    chunks = kfold_chunks(ds.n, k, seed=0)
+    n = chunks.size
+    K, y = K[:n][:, :n], y[:n]
+    masks = jnp.asarray(_fold_masks(chunks))
+    Cs = jnp.asarray([m * ds.C for m in ATO_ROW_C], jnp.float64)
+    m = Cs.shape[0]
+
+    # warm the batched-solver program (each dataset's n forces a fresh
+    # trace) so solve_s matches the other rows' warm-run convention —
+    # max_iter=1 compiles the same program (it_cap is traced, not static)
+    jax.block_until_ready(smo_solve_batched(
+        K, y, jnp.tile(masks[0][None], (m, 1)), Cs,
+        jnp.zeros((m, n), K.dtype), jnp.tile(-y, (m, 1)), max_iter=1))
+    t0 = time.perf_counter()
+    prev = smo_solve_batched(K, y, jnp.tile(masks[0][None], (m, 1)), Cs,
+                             jnp.zeros((m, n), K.dtype), jnp.tile(-y, (m, 1)))
+    jax.block_until_ready(prev)
+    solve_s = time.perf_counter() - t0
+    iters = int(jnp.sum(prev.n_iter))
+    correct = total = 0
+    ramp_bucketed = ramp_padded = 0.0
+
+    def eval_paper_lane(res, h):
+        # accuracy of the paper-C lane (index 1), comparable to the ato row
+        lane = jax.tree.map(lambda a: a[1], res)
+        test_idx = jnp.asarray(chunks[h])
+        b = bias_from_solution(lane, y, masks[h], float(Cs[1]))
+        pred = predict(K[test_idx], y, lane.alpha, b)
+        return int(jnp.sum(pred == y[test_idx])), int(test_idx.shape[0])
+
+    c0, t0_ = eval_paper_lane(prev, 0)
+    correct += c0
+    total += t0_
+    for h in range(1, k):
+        S, R, T = _transition_idx(chunks, h - 1, h)
+        timed = {}
+        for key, flag in (("bucketed", True), ("padded", False)):
+            def ramp(flag=flag):
+                out = seeding.ato_seed_batch(K, y, Cs, prev, S, R, T,
+                                             bucket_by_lane=flag)
+                jax.block_until_ready(out)
+                return out
+            ramp()                                   # warm the jit caches
+            best = float("inf")
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                out = ramp()
+                best = min(best, time.perf_counter() - t0)
+            timed[key] = best
+            if flag:
+                alpha0s = out
+        ramp_bucketed += timed["bucketed"]
+        ramp_padded += timed["padded"]
+        f0s = jnp.stack([init_f(K, y, alpha0s[ci]) for ci in range(m)])
+        t0 = time.perf_counter()
+        prev = smo_solve_batched(K, y, jnp.tile(masks[h][None], (m, 1)), Cs,
+                                 alpha0s, f0s)
+        jax.block_until_ready(prev)
+        solve_s += time.perf_counter() - t0
+        iters += int(jnp.sum(prev.n_iter))
+        ch, th = eval_paper_lane(prev, h)
+        correct += ch
+        total += th
+    return {"dataset": name, "method": "ato_bucketed", "k": k,
+            "iterations": iters, "init_s": round(ramp_bucketed, 4),
+            "solve_s": round(solve_s, 4),
+            "total_s": round(ramp_bucketed + solve_s, 4),
+            "accuracy": round(correct / max(total, 1), 4),
+            "us_per_iteration": round(1e6 * solve_s / max(iters, 1), 2),
+            "init_s_padded": round(ramp_padded, 4)}
 
 
 def run(k: int = 10, quick: bool = False, reps: int = 3):
@@ -39,9 +140,12 @@ def run(k: int = 10, quick: bool = False, reps: int = 3):
     for name in names:
         ds = make_dataset(name, n_override=SIZES[name])
         for method in METHODS:
-            runner = (lambda: run_cv_batched(ds, k=k)) \
-                if method == "cold_batched" \
-                else (lambda: run_cv(ds, k=k, method=method))
+            if method == "cold_batched":
+                runner = lambda: run_cv_batched(ds, k=k, schedule="batched")
+            elif method == "cold_batched_repacked":
+                runner = lambda: run_cv_batched(ds, k=k, schedule="repacked")
+            else:
+                runner = lambda m=method: run_cv(ds, k=k, method=m)
             runner()                                # warm the jit caches
             # min-of-reps: solver timings on shared CPUs are noisy (and the
             # near-degenerate suites hit denormal-heavy kernels); the min is
@@ -52,7 +156,10 @@ def run(k: int = 10, quick: bool = False, reps: int = 3):
             row["us_per_iteration"] = round(
                 1e6 * (rep.total_solve_time)
                 / max(rep.total_iterations, 1), 2)
+            if rep.occupancy is not None:
+                row["occupancy"] = rep.occupancy
             rows.append(row)
+        rows.append(_ato_bucketed_row(name, k, reps))
     emit(f"table1_k{k}", rows)
     return rows
 

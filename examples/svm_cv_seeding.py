@@ -24,14 +24,15 @@ for method in ("cold", "ato", "mir", "sir"):
         per_fold = [(f.fold, f.seed_from, f.n_iter) for f in rep.folds]
         print("       per-fold (fold, seeded_from, iters):", per_fold)
 
-# ---- batched fold execution: independent cold folds as one vmap batch ----
+# ---- lane-scheduled fold execution: independent cold folds submitted to
+# the LaneScheduler (repacked/bucketed/width-capped dispatch) ----
 from repro.core.cv import run_cv_batched  # noqa: E402
 
 rep_cold = run_cv(ds, k=10, method="cold")
 rep_bat = run_cv_batched(ds, k=10)
 print(f"\ncold sequential: {rep_cold.row()['total_s']}s; "
-      f"cold batched: {rep_bat.row()['total_s']}s "
-      f"(same per-fold fixed points, one concurrent solve)")
+      f"cold lane-scheduled: {rep_bat.row()['total_s']}s "
+      f"(same per-fold fixed points; occupancy {rep_bat.occupancy})")
 
 # ---- hyper-parameter grid: kernel reuse + C-adjacent alpha seeding ----
 from repro.core.grid import run_grid  # noqa: E402

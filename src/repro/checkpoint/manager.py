@@ -110,6 +110,18 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def steps_of_class(self, retain_class: str) -> list[int]:
+        """Committed steps written under one ``retain_class``. Record kinds
+        GC independently, so resume paths that only understand one kind
+        (e.g. the batched CV driver's ``"batch"`` mid-batch snapshots,
+        keyed by lane id) must also *select* by class rather than trusting
+        ``latest_step`` across the whole directory."""
+        return [s for s in self.all_steps() if self._step_class(s) == retain_class]
+
+    def latest_step_of_class(self, retain_class: str) -> int | None:
+        steps = self.steps_of_class(retain_class)
+        return steps[-1] if steps else None
+
     def save(self, step: int, tree, extra_meta: dict | None = None,
              blocking: bool = True, retain_class: str = "default") -> None:
         """``retain_class`` partitions the retention budget: ``max_to_keep``

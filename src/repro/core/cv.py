@@ -21,10 +21,13 @@ or ``best_available`` (seed from the nearest *completed* fold; lets the
 scheduler keep going when a fold is slow/lost; still bit-compatible results
 because seeding never changes the fixed point).
 
-``run_cv_batched`` executes independent (cold) folds concurrently through
-the engine's batched solver — one vmapped chunk advances every unconverged
-fold, so k folds cost ~max(n_iter_h) iterations of device time instead of
-sum(n_iter_h) dispatches.
+``run_cv_batched`` executes independent (cold) folds concurrently. Its
+default ``schedule="repacked"`` drives them through the LaneScheduler
+(DESIGN.md §Lane scheduler): converged folds retire between chunks, the
+live batch is compacted, and the last straggler runs the sequential
+single-lane program — so k folds cost ~sum(n_iter_h) lane-iterations with
+mid-batch checkpoints keyed by fold id. ``schedule="batched"`` keeps the
+fixed-width ``engine.solve_batched`` baseline (~k * max(n_iter_h) work).
 """
 from __future__ import annotations
 
@@ -37,14 +40,20 @@ import numpy as np
 
 from repro.core import seeding
 from repro.data.svm_suite import SVMDataset, kfold_chunks
-from repro.svm import (accuracy, bias_from_solution, init_f, kernel_matrix,
-                       predict, smo_solve, smo_solve_batched, dual_objective)
+from repro.svm import (DenseKernel, accuracy, bias_from_solution, init_f,
+                       kernel_matrix, predict, smo_solve, smo_solve_batched,
+                       dual_objective)
 
 # step numbering inside a checkpoint directory: fold h's mid-fold chunk
 # snapshots live at h*_FOLD_STRIDE + 1 + chunk, its completion record at
 # (h+1)*_FOLD_STRIDE — monotone in (fold, chunk), so ``latest_step`` always
 # points at the furthest progress.
 _FOLD_STRIDE = 1_000_000
+# run_cv_batched's mid-batch snapshots live at _BATCH_BASE + chunk: far
+# above any run_cv step (k*_FOLD_STRIDE), so the two record kinds can share
+# a directory without step collisions (save() replaces an existing step
+# dir, so a collision would silently clobber the other run's checkpoint)
+_BATCH_BASE = _FOLD_STRIDE ** 2
 
 
 @dataclasses.dataclass
@@ -69,6 +78,9 @@ class CVReport:
     n: int
     kernel_time: float
     folds: list[FoldStat]
+    #: LaneScheduler width stats (mean/peak live width, program count) when
+    #: the run used the repacked schedule; None for sequential/plain-batched
+    occupancy: dict | None = None
 
     @property
     def total_iterations(self) -> int:
@@ -172,8 +184,16 @@ def run_cv(ds: SVMDataset, k: int = 10, method: str = "sir",
     start_fold = 0
     resume = None   # (alpha, f, n_iter, seed_from) of an in-flight fold
 
-    if checkpoint_manager is not None and checkpoint_manager.latest_step() is not None:
-        latest = checkpoint_manager.latest_step()
+    if checkpoint_manager is not None:
+        # run_cv's records all live below _BATCH_BASE; run_cv_batched's
+        # batch snapshots (>= _BATCH_BASE, keyed by lane id, resumable only
+        # by run_cv_batched) are excluded from BOTH the loop and the
+        # "latest" computation — a shared directory must not make run_cv
+        # treat its own newest mid snapshot as stale just because a batch
+        # record outranks it numerically.
+        cv_steps = [s for s in checkpoint_manager.all_steps()
+                    if s < _BATCH_BASE]
+        latest = cv_steps[-1] if cv_steps else None
         # restore EVERY retained done record, not just the latest: the
         # returned report must account for pre-crash folds (else its
         # total_iterations/accuracy silently disagree with an uninterrupted
@@ -182,7 +202,7 @@ def run_cv(ds: SVMDataset, k: int = 10, method: str = "sir",
         # (fold+1)*_FOLD_STRIDE unconditionally — chunked and unchunked runs
         # share the numbering, so either kind can resume the other. Mid
         # snapshots (step % _FOLD_STRIDE != 0) are stale unless latest.
-        for s in checkpoint_manager.all_steps():
+        for s in cv_steps:
             if s % _FOLD_STRIDE != 0 and s != latest:
                 continue
             step, tree, extra = checkpoint_manager.restore(step=s)
@@ -324,15 +344,43 @@ def run_cv(ds: SVMDataset, k: int = 10, method: str = "sir",
 
 def run_cv_batched(ds: SVMDataset, k: int = 10, tol: float = 1e-3,
                    max_iter: int = 5_000_000, seed: int = 0,
-                   kernel_backend: str = "jnp",
-                   chunk_iters: int = 4096) -> CVReport:
-    """Cold k-fold CV with all folds solved concurrently (method
-    "cold_batched"): independent solves are a batch, not a loop.
+                   kernel_backend: str = "jnp", chunk_iters: int = 4096,
+                   schedule: str = "repacked", lane_quantum: int = 4,
+                   max_width: int | None = None, checkpoint_manager=None,
+                   checkpoint_every: int = 1) -> CVReport:
+    """Cold k-fold CV with all folds solved concurrently: independent
+    solves are a batch, not a loop.
 
-    Produces the same per-fold fixed points as ``run_cv(method="cold")``
+    ``schedule`` picks the dispatch strategy:
+
+    * ``"repacked"`` (default, method "cold_batched_repacked") — a
+      ``LaneScheduler`` retires converged folds between chunks, compacts
+      the live batch (bucketed widths) and caps the dispatch width by the
+      backend cost model (``max_width``; on CPU the default is a width-1
+      round-robin through the sequential program), so device work tracks
+      ``sum_h n_iter_h`` (DESIGN.md §Lane scheduler);
+    * ``"batched"`` (method "cold_batched") — the fixed-width
+      ``engine.solve_batched`` batch kept as the repack baseline.
+
+    Both produce the same per-fold fixed points as ``run_cv(method="cold")``
     (bit-identical alphas — the engine body is shared); only the schedule
     differs. Seeded chains stay sequential by nature — their concurrency
-    axis is the hyper-parameter grid (see ``repro.core.grid``)."""
+    axis is the hyper-parameter grid (see ``repro.core.grid``).
+
+    With a checkpoint manager (repacked schedule only), every
+    ``checkpoint_every``-th chunk snapshots ALL lanes' (alpha, f, n_iter,
+    done) keyed by **original fold id** — not packed position — as one
+    ``phase: "batch_mid"`` record (retain_class "batch"), so a crashed
+    mid-batch run resumes each fold's exact iterate sequence regardless of
+    how lanes were packed at the crash."""
+    from repro.svm.engine import EngineState, _finalize
+    from repro.svm.scheduler import LaneScheduler
+
+    if schedule not in ("repacked", "batched"):
+        raise ValueError(f"unknown schedule {schedule!r}")
+    if checkpoint_manager is not None and schedule != "repacked":
+        raise ValueError("mid-batch checkpointing requires the repacked "
+                         "schedule (snapshots are keyed by scheduler lane)")
     X = jnp.asarray(ds.X)
     y = jnp.asarray(ds.y, jnp.float64)
 
@@ -348,24 +396,110 @@ def run_cv_batched(ds: SVMDataset, k: int = 10, tol: float = 1e-3,
     y = y[:n]
     masks = jnp.asarray(_fold_masks(chunks))
 
-    t0 = time.perf_counter()
-    res = smo_solve_batched(K, y, masks, ds.C, jnp.zeros((k, n), K.dtype),
-                            jnp.tile(-y, (k, 1)), tol=tol, max_iter=max_iter,
-                            chunk_iters=chunk_iters)
-    jax.block_until_ready(res)
-    solve_time = time.perf_counter() - t0
+    if schedule == "batched":
+        t0 = time.perf_counter()
+        res = smo_solve_batched(K, y, masks, ds.C, jnp.zeros((k, n), K.dtype),
+                                jnp.tile(-y, (k, 1)), tol=tol,
+                                max_iter=max_iter, chunk_iters=chunk_iters)
+        jax.block_until_ready(res)
+        solve_time = time.perf_counter() - t0
 
+        folds = []
+        for h in range(k):
+            fold_res = jax.tree.map(lambda a: a[h], res)
+            correct, total, obj = _eval_fold(K, y, chunks, h, fold_res, ds.C)
+            folds.append(FoldStat(
+                fold=h, seed_from=-1, n_iter=int(fold_res.n_iter),
+                init_time=0.0, solve_time=solve_time / k,
+                acc_correct=correct, acc_total=total, objective=obj,
+                converged=bool(fold_res.converged)))
+        return CVReport(dataset=ds.name, method="cold_batched", k=k, n=n,
+                        kernel_time=kernel_time, folds=folds)
+
+    # ---- repacked schedule: the CV driver is a thin scheduler client ----
+    restored: dict[int, tuple] = {}   # fold -> (alpha, f, n_iter, done)
+    step0 = 0
+    if checkpoint_manager is not None:
+        latest = checkpoint_manager.latest_step_of_class("batch")
+        if latest is not None:
+            step0, tree, extra = checkpoint_manager.restore(step=latest)
+            # tol and max_iter are part of the run identity: retired lanes
+            # carry fixed points at the snapshot's tolerance/budget, so
+            # resuming under different solver parameters would mix
+            # convergence criteria across lanes (e.g. a lane capped at the
+            # old max_iter frozen beside lanes running to the new one)
+            want = {"phase": "batch_mid", "k": k, "dataset": ds.name,
+                    "seed": seed, "tol": tol, "max_iter": max_iter}
+            got = {key: extra.get(key) for key in want}
+            if got != want:
+                raise ValueError(
+                    f"batch snapshot at step {step0} belongs to run {got}, "
+                    f"cannot resume it as {want}; point the manager at a "
+                    "fresh directory or delete the stale checkpoints")
+            for i, h in enumerate(extra["lane_ids"]):
+                restored[h] = (jnp.asarray(tree["alpha"][i]),
+                               jnp.asarray(tree["f"][i]),
+                               int(tree["n_iter"][i]), bool(tree["done"][i]))
+
+    on_snapshot = None
+    if checkpoint_manager is not None:
+        counter = {"c": max(step0, _BATCH_BASE)}
+
+        def on_snapshot(sched):
+            counter["c"] += 1
+            lane_ids, tree = sched.snapshot_lanes()
+            checkpoint_manager.save(
+                counter["c"], tree,
+                extra_meta={"phase": "batch_mid", "lane_ids": lane_ids,
+                            "k": k, "dataset": ds.name, "seed": seed,
+                            "tol": tol, "max_iter": max_iter,
+                            "method": "cold_batched_repacked"},
+                blocking=False, retain_class="batch")
+
+    sched = LaneScheduler(DenseKernel(K), y, tol=tol,
+                          chunk_iters=chunk_iters, lane_quantum=lane_quantum,
+                          max_width=max_width, on_snapshot=on_snapshot,
+                          snapshot_every=checkpoint_every)
+    done_at_start: set[int] = set()
+    for h in range(k):
+        if h in restored:
+            alpha, f, n_iter, done = restored[h]
+            if done:
+                # a retired lane: re-finalize its snapshot state (optimality
+                # is a pure function of alpha/f, so converged/b_up/b_low
+                # come back identical to the pre-crash result)
+                state = EngineState(alpha, f, jnp.asarray(n_iter, jnp.int64),
+                                    jnp.ones((), bool))
+                sched.add_result(h, _finalize(state, y, masks[h], ds.C, tol))
+                done_at_start.add(h)
+            else:
+                sched.add(h, masks[h], ds.C, alpha, f, n_iter0=n_iter,
+                          max_iter=max_iter)
+        else:
+            sched.add(h, masks[h], ds.C, jnp.zeros(n, K.dtype), -y,
+                      max_iter=max_iter)
+
+    t0 = time.perf_counter()
+    results = sched.run()
+    jax.block_until_ready([results[h].alpha for h in results])
+    solve_time = time.perf_counter() - t0
+    if checkpoint_manager is not None:
+        checkpoint_manager.wait()
+
+    live = max(k - len(done_at_start), 1)
     folds = []
     for h in range(k):
-        fold_res = jax.tree.map(lambda a: a[h], res)
-        correct, total, obj = _eval_fold(K, y, chunks, h, fold_res, ds.C)
+        res = results[h]
+        correct, total, obj = _eval_fold(K, y, chunks, h, res, ds.C)
         folds.append(FoldStat(
-            fold=h, seed_from=-1, n_iter=int(fold_res.n_iter),
-            init_time=0.0, solve_time=solve_time / k,
+            fold=h, seed_from=-1, n_iter=int(res.n_iter),
+            init_time=0.0,
+            solve_time=0.0 if h in done_at_start else solve_time / live,
             acc_correct=correct, acc_total=total, objective=obj,
-            converged=bool(fold_res.converged)))
-    return CVReport(dataset=ds.name, method="cold_batched", k=k, n=n,
-                    kernel_time=kernel_time, folds=folds)
+            converged=bool(res.converged), restored=h in done_at_start))
+    return CVReport(dataset=ds.name, method="cold_batched_repacked", k=k,
+                    n=n, kernel_time=kernel_time, folds=folds,
+                    occupancy=sched.occupancy)
 
 
 def _result_from_tree(tree):

@@ -9,17 +9,23 @@ top of the unified engine:
 * **C-adjacent seeding** (``seed_across_C=True``) — fold 0 of cell
   (C_m, gamma) warm-starts from fold 0 of (C_{m-1}, gamma) via
   ``seeding.scale_seed_C`` (bounded-SV alphas scale ~linearly with C);
-* **batched concurrency** — solves with no seed dependency run as ONE
-  batched engine call instead of a python loop: fold 0 of every cell in a
-  gamma row (when not C-chaining), every fold h>0 across cells (each cell
-  seeds from its own fold h-1, so cells are mutually independent), and the
-  entire row for ``method="cold"`` (k * n_C independent lanes). For
-  ``method="ato"`` the seeding itself is batched too: the jittable ATO
-  (``seeding.ato_seed_batch``) vmaps one fixed-shape ramp over the whole C
-  row, so a transition costs one device program instead of n_C host loops.
+* **lane-scheduled concurrency** — every (cell, fold) solve is one lane in
+  a ``LaneScheduler`` (DESIGN.md §Lane scheduler). Fold-chain edges are
+  lane *dependencies* carrying the seed transform (SIR/MIR via ``SEEDERS``,
+  ATO via the jittable ramp, ``scale_seed_C`` along the C axis), so the
+  row no longer barriers at each fold: cell A proceeds to fold h+1 the
+  moment its own fold h retires, while cell B still iterates on fold h.
+  Converged lanes retire between chunks and the live batch is repacked,
+  so device work tracks the sum of per-lane iterations. For
+  ``method="cold"`` every lane is independent (k * n_C cold lanes).
 
 The fold chain inside a cell stays sequential — that is the paper's
-algorithm — but the grid turns its breadth axes into vmap lanes.
+algorithm — but the grid turns its breadth axes into scheduler lanes.
+
+Per-row evaluation is vectorized: one jitted vmap computes every lane's
+held-out correct-count (bias + predict) on device, and a single transfer
+brings back (correct, n_iter, converged) for the whole row — the old
+per-(cell, fold) ``int(...)`` round trips are gone.
 """
 from __future__ import annotations
 
@@ -33,8 +39,8 @@ import numpy as np
 from repro.core import seeding
 from repro.core.cv import _fold_masks, _transition_idx
 from repro.data.svm_suite import SVMDataset, kfold_chunks
-from repro.svm import (bias_from_solution, init_f, kernel_matrix, predict,
-                       smo_solve_batched)
+from repro.svm import (DenseKernel, LaneScheduler, bias_from_solution,
+                       init_f, kernel_matrix, predict)
 
 
 @dataclasses.dataclass
@@ -61,6 +67,8 @@ class GridReport:
     seed_time: float
     solve_time: float
     cells: list[GridCell]
+    #: aggregated LaneScheduler width stats across gamma rows
+    occupancy: dict | None = None
 
     @property
     def total_iterations(self) -> int:
@@ -77,22 +85,56 @@ class GridReport:
                  "converged": c.converged} for c in self.cells]
 
 
-def _lane(tree, idx):
-    return jax.tree.map(lambda a: a[idx], tree)
+@jax.jit
+def _eval_lanes_jit(K, y, test_idx, train_masks, Cs, res):
+    """Held-out correct-count for a batch of lanes — the same
+    bias_from_solution + predict pipeline as the sequential CV path,
+    vmapped so the whole gamma row is ONE device program."""
+    def one(ti, mask, C, r):
+        b = bias_from_solution(r, y, mask, C)
+        pred = predict(K[ti], y, r.alpha, b)
+        return jnp.sum(pred == y[ti])
+
+    return jax.vmap(one)(test_idx, train_masks, Cs, res)
+
+
+def _merge_occupancy(rows: list[dict]) -> dict | None:
+    if not rows:
+        return None
+    chunks = sum(r["chunks"] for r in rows)
+    if chunks == 0:
+        return {"chunks": 0, "mean_live_width": 0.0, "peak_width": 0}
+    return {
+        "chunks": chunks,
+        "mean_live_width": round(
+            sum(r["mean_live_width"] * r["chunks"] for r in rows) / chunks, 3),
+        "mean_packed_width": round(
+            sum(r["mean_packed_width"] * r["chunks"] for r in rows) / chunks,
+            3),
+        "peak_width": max(r["peak_width"] for r in rows),
+        "programs": max(r["programs"] for r in rows),
+    }
 
 
 def run_grid(ds: SVMDataset, Cs, gammas, k: int = 10, method: str = "sir",
              tol: float = 1e-3, max_iter: int = 5_000_000, seed: int = 0,
              seed_across_C: bool = False, chunk_iters: int = 4096,
-             kernel_backend: str = "jnp") -> GridReport:
+             kernel_backend: str = "jnp", lane_quantum: int = 4,
+             max_width: int | None = None) -> GridReport:
     """Cross-validate every (C, gamma) cell; returns per-cell accuracy and
     iteration counts (``GridReport.best()`` picks the winner).
 
     ``method`` is the fold-chain seeder inside each cell ("cold" disables
-    chaining and batches the whole gamma row at once). ``seed_across_C``
+    chaining; every lane is then independent). ``seed_across_C``
     additionally chains fold 0 along ascending C within a gamma row —
     trades fold-0 concurrency for warm starts, which wins when C values
     are dense (adjacent cells share most of their support vectors).
+
+    Each gamma row is one LaneScheduler run: lane (ci, h) depends on
+    (ci, h-1) through the method's seed transform, so cells advance
+    through their fold chains independently — no per-fold row barrier —
+    and per-cell results match ``run_cv`` on the same hyper-parameters
+    (same seeders, same engine, bit-identical solves).
     """
     Cs = sorted(float(c) for c in Cs)
     gammas = [float(g) for g in gammas]
@@ -104,10 +146,12 @@ def run_grid(ds: SVMDataset, Cs, gammas, k: int = 10, method: str = "sir",
     n = chunks.size
     y = y_all[:n]
     masks = jnp.asarray(_fold_masks(chunks))          # (k, n)
-    C_vec = jnp.asarray(Cs, jnp.float64)              # (m,)
+    transitions = {} if method == "cold" else \
+        {h: _transition_idx(chunks, h - 1, h) for h in range(1, k)}
 
     kernel_time = seed_time = solve_time = 0.0
     cells: list[GridCell] = []
+    occupancies: list[dict] = []
 
     for gamma in gammas:
         t0 = time.perf_counter()
@@ -116,117 +160,67 @@ def run_grid(ds: SVMDataset, Cs, gammas, k: int = 10, method: str = "sir",
         K.block_until_ready()
         kernel_time += time.perf_counter() - t0
 
-        iters = np.zeros(m, np.int64)
-        correct = np.zeros(m, np.int64)
-        total = np.zeros(m, np.int64)
-        conv = np.ones(m, bool)
-
-        def eval_fold(res_lane, h, ci, C):
-            test_idx = jnp.asarray(chunks[h])
-            b = bias_from_solution(res_lane, y, masks[h], C)
-            pred = predict(K[test_idx], y, res_lane.alpha, b)
-            correct[ci] += int(jnp.sum(pred == y[test_idx]))
-            total[ci] += int(test_idx.shape[0])
-            iters[ci] += int(res_lane.n_iter)
-            conv[ci] &= bool(res_lane.converged)
-
-        if method == "cold":
-            # every (cell, fold) is independent: one batch of m*k lanes
-            t0 = time.perf_counter()
-            bmasks = jnp.tile(masks, (m, 1))                      # (m*k, n)
-            bC = jnp.repeat(C_vec, k)
-            res = smo_solve_batched(K, y, bmasks, bC,
-                                    jnp.zeros((m * k, n), K.dtype),
-                                    jnp.tile(-y, (m * k, 1)), tol=tol,
-                                    max_iter=max_iter,
-                                    chunk_iters=chunk_iters)
-            jax.block_until_ready(res)
-            solve_time += time.perf_counter() - t0
-            for ci in range(m):
-                for h in range(k):
-                    eval_fold(_lane(res, ci * k + h), h, ci, Cs[ci])
-        else:
-            seeder = seeding.SEEDERS[method]
-            # ---- fold 0 across the C row ----
-            if seed_across_C and m > 1:
-                # chain along ascending C (scale_seed_C), sequential
-                lanes = []
-                prev_alpha = None
-                for ci, C in enumerate(Cs):
-                    t0 = time.perf_counter()
-                    if prev_alpha is None:
-                        alpha0 = jnp.zeros(n, K.dtype)
-                        f0 = -y
-                    else:
-                        alpha0 = seeding.scale_seed_C(
-                            prev_alpha, y, Cs[ci - 1], C, masks[0])
-                        f0 = init_f(K, y, alpha0)
-                    jax.block_until_ready((alpha0, f0))
-                    seed_time += time.perf_counter() - t0
-                    t0 = time.perf_counter()
-                    r = smo_solve_batched(K, y, masks[0][None], C,
-                                          alpha0[None], f0[None], tol=tol,
-                                          max_iter=max_iter,
-                                          chunk_iters=chunk_iters)
-                    jax.block_until_ready(r)
-                    solve_time += time.perf_counter() - t0
-                    lanes.append(r)
-                    prev_alpha = r.alpha[0]
-                prev = jax.tree.map(
-                    lambda *xs: jnp.concatenate(xs, 0), *lanes)
+        sched = LaneScheduler(DenseKernel(K), y, tol=tol,
+                              chunk_iters=chunk_iters,
+                              lane_quantum=lane_quantum,
+                              max_width=max_width)
+        zeros = jnp.zeros(n, K.dtype)
+        seeder = seeding.SEEDERS[method]
+        for ci, C in enumerate(Cs):
+            if method != "cold" and seed_across_C and ci > 0:
+                def c_seed(prev, C_old=Cs[ci - 1], C_new=C):
+                    a0 = seeding.scale_seed_C(prev.alpha, y, C_old, C_new,
+                                              masks[0])
+                    return a0, init_f(K, y, a0)
+                sched.add((ci, 0), masks[0], C, dep=(ci - 1, 0),
+                          seed_fn=c_seed, max_iter=max_iter)
             else:
-                # fold 0 of every cell is cold/independent: one batch
-                t0 = time.perf_counter()
-                prev = smo_solve_batched(K, y,
-                                         jnp.tile(masks[0][None], (m, 1)),
-                                         C_vec, jnp.zeros((m, n), K.dtype),
-                                         jnp.tile(-y, (m, 1)), tol=tol,
-                                         max_iter=max_iter,
-                                         chunk_iters=chunk_iters)
-                jax.block_until_ready(prev)
-                solve_time += time.perf_counter() - t0
-            for ci in range(m):
-                eval_fold(_lane(prev, ci), 0, ci, Cs[ci])
-
-            # ---- folds 1..k-1: cells are independent given their own
-            # fold h-1 result -> seed per cell, solve the row as a batch ----
+                sched.add((ci, 0), masks[0], C, zeros, -y, max_iter=max_iter)
             for h in range(1, k):
-                S_idx, R_idx, T_idx = _transition_idx(chunks, h - 1, h)
-                t0 = time.perf_counter()
-                if method == "ato":
-                    # the jittable ATO vmaps over the C row: one device
-                    # program ramps every cell's transition concurrently
-                    # (pad sized for the widest lane; see seeding.py)
-                    alpha0s = seeding.ato_seed_batch(K, y, C_vec, prev,
-                                                     S_idx, R_idx, T_idx)
-                else:
-                    alpha0s = jnp.stack([
-                        seeder(K, y, Cs[ci], _lane(prev, ci),
-                               S_idx, R_idx, T_idx)
-                        for ci in range(m)])
-                # per-cell init_f (not one batched GEMM): same reduction
-                # order as run_cv, so grid cells match it bit-exactly
-                f0s = jnp.stack([init_f(K, y, alpha0s[ci]) for ci in range(m)])
-                jax.block_until_ready((alpha0s, f0s))
-                seed_time += time.perf_counter() - t0
-                t0 = time.perf_counter()
-                prev = smo_solve_batched(K, y,
-                                         jnp.tile(masks[h][None], (m, 1)),
-                                         C_vec, alpha0s, f0s, tol=tol,
-                                         max_iter=max_iter,
-                                         chunk_iters=chunk_iters)
-                jax.block_until_ready(prev)
-                solve_time += time.perf_counter() - t0
-                for ci in range(m):
-                    eval_fold(_lane(prev, ci), h, ci, Cs[ci])
+                if method == "cold":
+                    sched.add((ci, h), masks[h], C, zeros, -y,
+                              max_iter=max_iter)
+                    continue
+                S_idx, R_idx, T_idx = transitions[h]
 
+                def fold_seed(prev, C=C, S=S_idx, R=R_idx, T=T_idx):
+                    a0 = seeder(K, y, C, prev, S, R, T)
+                    return a0, init_f(K, y, a0)
+                sched.add((ci, h), masks[h], C, dep=(ci, h - 1),
+                          seed_fn=fold_seed, max_iter=max_iter)
+
+        t0 = time.perf_counter()
+        results = sched.run()
+        jax.block_until_ready([r.alpha for r in results.values()])
+        row_time = time.perf_counter() - t0
+        seed_time += sched.seed_time
+        solve_time += row_time - sched.seed_time
+        occupancies.append(sched.occupancy)
+
+        # ---- one batched on-device evaluation + a single transfer ----
+        lane_ids = [(ci, h) for ci in range(m) for h in range(k)]
+        res_row = jax.tree.map(lambda *xs: jnp.stack(xs),
+                               *[results[lid] for lid in lane_ids])
+        hs = np.asarray([h for _, h in lane_ids])
+        test_idx = jnp.asarray(chunks[hs])            # (m*k, n//k)
+        row_masks = masks[jnp.asarray(hs)]
+        row_Cs = jnp.asarray([Cs[ci] for ci, _ in lane_ids], jnp.float64)
+        correct_dev = _eval_lanes_jit(K, y, test_idx, row_masks, row_Cs,
+                                      res_row)
+        correct, iters, conv = jax.device_get(
+            (correct_dev, res_row.n_iter, res_row.converged))
+
+        t_sz = chunks.shape[1]
         for ci in range(m):
-            cells.append(GridCell(C=Cs[ci], gamma=gamma,
-                                  iterations=int(iters[ci]),
-                                  acc_correct=int(correct[ci]),
-                                  acc_total=int(total[ci]),
-                                  converged=bool(conv[ci])))
+            sel = slice(ci * k, (ci + 1) * k)
+            cells.append(GridCell(
+                C=Cs[ci], gamma=gamma,
+                iterations=int(iters[sel].sum()),
+                acc_correct=int(correct[sel].sum()),
+                acc_total=int(t_sz * k),
+                converged=bool(conv[sel].all())))
 
     return GridReport(dataset=ds.name, method=method, k=k, n=n,
                       kernel_time=kernel_time, seed_time=seed_time,
-                      solve_time=solve_time, cells=cells)
+                      solve_time=solve_time, cells=cells,
+                      occupancy=_merge_occupancy(occupancies))

@@ -28,6 +28,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.svm.smo import SMOResult
 
@@ -467,24 +468,53 @@ def ato_seed(K, y, C, prev: SMOResult, S_idx, R_idx, T_idx,
 
 
 def ato_seed_batch(K, y, Cs, prev: SMOResult, S_idx, R_idx, T_idx,
-                   max_steps: int = 30, tol: float = 1e-3):
+                   max_steps: int = 30, tol: float = 1e-3,
+                   bucket_by_lane: bool = True):
     """Batched ATO over lanes sharing one fold transition — the grid's
     C-row case: ``prev`` is a batched ``SMOResult`` (leading axis = lane,
     one per C value) and ``Cs`` its per-lane C. One vmapped while_loop
-    ramps every lane concurrently (lanes that finish freeze via the
-    batching rule's select); the pad is sized for the widest lane.
+    ramps a group of lanes concurrently (lanes that finish freeze via the
+    batching rule's select).
+
+    ``bucket_by_lane=True`` (default) applies the scheduler's repacking
+    idea to the ramp pad: each lane's working-set cap is computed from ITS
+    OWN free set (``_bucket_cap(|free S|_i + |T|, n)`` — the same exact
+    bound the solo ``ato_seed`` uses), lanes are grouped by cap, and one
+    program is dispatched per bucket. Lanes with a small free set no
+    longer pay the widest lane's O(m_cap^3) bordered solve; since caps are
+    already bucketed to multiples of 128, the group count (and the jit
+    retrace count) stays O(n / 128). ``bucket_by_lane=False`` keeps the
+    historical behaviour — every lane padded to the widest cap in one
+    program (the baseline the ``ato_bucketed`` benchmark row compares
+    against).
     """
     y = jnp.asarray(y, K.dtype)
     n = y.shape[0]
     Cs = jnp.asarray(Cs, K.dtype)
     in_S, in_T, in_R = _transition_masks(n, S_idx, R_idx, T_idx)
     free0 = in_S[None] & (prev.alpha > 0) & (prev.alpha < Cs[:, None])
-    nf0 = int(jnp.max(jnp.sum(free0, axis=1)))
-    m_cap = _bucket_cap(nf0 + int(T_idx.shape[0]), n)
+    nf0s = np.asarray(jnp.sum(free0, axis=1))   # one (lanes,) transfer
+    t_sz = int(T_idx.shape[0])
     b_fbs = 0.5 * (prev.b_up + prev.b_low)
-    return _ato_seed_batch_jit(K, y, Cs, prev.alpha, prev.f, b_fbs,
-                               in_S, in_T, in_R, S_idx, T_idx, tol,
-                               m_cap=m_cap, max_steps=int(max_steps))
+    if bucket_by_lane:
+        caps = np.asarray([_bucket_cap(int(nf) + t_sz, n) for nf in nf0s])
+    else:
+        caps = np.full(nf0s.shape[0],
+                       _bucket_cap(int(nf0s.max()) + t_sz, n))
+    out = jnp.zeros(prev.alpha.shape, K.dtype)
+    # the trace key is (m_cap, group size): caps are monotone in C, so
+    # bucket membership is a contiguous C-range and the distinct
+    # (cap, size) combinations stay small for realistic rows. Padding
+    # group sizes would bound the key space further but costs a full
+    # O(m_cap^3)-per-step ramp lane per pad — not worth it at C-row scale.
+    for cap in sorted(set(caps.tolist())):
+        idx = jnp.asarray(np.nonzero(caps == cap)[0])
+        sub = _ato_seed_batch_jit(K, y, Cs[idx], prev.alpha[idx],
+                                  prev.f[idx], b_fbs[idx], in_S, in_T, in_R,
+                                  S_idx, T_idx, tol, m_cap=int(cap),
+                                  max_steps=int(max_steps))
+        out = out.at[idx].set(sub)
+    return out
 
 
 # --------------------------------------------------------------------------

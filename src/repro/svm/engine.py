@@ -84,11 +84,38 @@ class SMOResult(NamedTuple):
 
 class EngineState(NamedTuple):
     """Resumable solver state — the unit chunks pass between themselves,
-    checkpoints serialize, and the batched driver stacks along axis 0."""
+    checkpoints serialize, and the batched driver stacks along axis 0.
+
+    The lane helpers below are the batched-state vocabulary: the scheduler
+    ``stack``s single-lane states into a packed batch and ``lane``-extracts
+    them back at retirement or for a single-lane (sequential-program)
+    dispatch; ``gather``/``scatter`` compact a batched state to a lane
+    subset and write it back — for callers that edit a batch in place
+    (e.g. reseeding a subset of grid lanes) rather than round-tripping
+    through per-lane states.
+    """
     alpha: jnp.ndarray
     f: jnp.ndarray
     n_iter: jnp.ndarray   # () int — updates applied so far
     done: jnp.ndarray     # () bool — converged or iteration-capped
+
+    @staticmethod
+    def stack(states: "list[EngineState]") -> "EngineState":
+        """Pack single-lane states into a batched state (axis 0 = lane)."""
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+    def lane(self, i) -> "EngineState":
+        """Extract lane ``i`` of a batched state as a single-lane state."""
+        return jax.tree.map(lambda a: a[i], self)
+
+    def gather(self, idx) -> "EngineState":
+        """Compact a batched state to the lanes in ``idx`` (repacking)."""
+        return jax.tree.map(lambda a: a[jnp.asarray(idx)], self)
+
+    def scatter(self, idx, sub: "EngineState") -> "EngineState":
+        """Write the lanes of ``sub`` back into positions ``idx``."""
+        return jax.tree.map(lambda a, b: a.at[jnp.asarray(idx)].set(b),
+                            self, sub)
 
 
 def _sets(alpha, y, mask, C):
@@ -396,21 +423,23 @@ def _chunk_jit(source, y, train_mask, C, tol, it_cap, state, n_iters, wss):
 
 
 @functools.partial(jax.jit, static_argnames=("n_iters", "wss"))
-def _chunk_batched_jit(source, y, train_masks, Cs, tol, it_cap, states,
+def _chunk_batched_jit(source, y, train_masks, Cs, tol, it_caps, states,
                        n_iters, wss):
     """One chunk over a batch of folds: a single top-level while_loop whose
-    body vmaps ``_step`` over (train_mask, C, state); source and y are
-    shared across the batch. Per-fold convergence masking comes from the
+    body vmaps ``_step`` over (train_mask, C, it_cap, state); source and y
+    are shared across the batch. Per-fold convergence masking comes from the
     ``done`` freeze inside ``_step`` — a converged fold's state passes
     through bit-unchanged while stragglers keep iterating. (vmapping the
     body, not the while_loop, avoids the batching rule's second layer of
-    full-state selects per iteration.)"""
-    it_cap = jnp.asarray(it_cap, states.n_iter.dtype)
+    full-state selects per iteration.) ``it_caps`` is per-lane — scheduler
+    lanes carry their own iteration budgets — a scalar broadcasts."""
+    it_caps = jnp.broadcast_to(jnp.asarray(it_caps, states.n_iter.dtype),
+                               states.done.shape)
     diag = source.diag()
 
-    def one(mask, C, state):
+    def one(mask, C, cap, state):
         return _step(source, y, mask, jnp.asarray(C, source.dtype), diag,
-                     tol, it_cap, wss, state)
+                     tol, cap, wss, state)
 
     def cond(carry):
         s, t = carry
@@ -418,7 +447,7 @@ def _chunk_batched_jit(source, y, train_masks, Cs, tol, it_cap, states,
 
     def body(carry):
         s, t = carry
-        return jax.vmap(one)(train_masks, Cs, s), t + 1
+        return jax.vmap(one)(train_masks, Cs, it_caps, s), t + 1
 
     states, _ = jax.lax.while_loop(cond, body,
                                    (states, jnp.zeros((), jnp.int32)))
@@ -475,7 +504,7 @@ def solve(source, y, train_mask, C, alpha0, f0, *, tol: float = 1e-3,
 def solve_batched(source, y, train_masks, Cs, alpha0s, f0s, *,
                   tol: float = 1e-3, max_iter: int = 10_000_000,
                   wss: str = "2", chunk_iters: int = 4096,
-                  on_chunk=None) -> SMOResult:
+                  on_chunk=None, n_iter0s=None) -> SMOResult:
     """Solve a batch of folds concurrently over one shared kernel source.
 
     ``train_masks`` (b, n), ``Cs`` () or (b,), ``alpha0s``/``f0s`` (b, n).
@@ -484,14 +513,22 @@ def solve_batched(source, y, train_masks, Cs, alpha0s, f0s, *,
     body untouched) while stragglers keep iterating, so total device work
     is b * max(n_iter_b), not b * sum. Returns a batched ``SMOResult``
     (leading axis = fold).
+
+    ``n_iter0s`` (() or (b,)) pre-loads per-lane iteration counters when
+    resuming a checkpointed batched run, mirroring the single-lane
+    ``solve(..., n_iter0=...)`` path: ``max_iter`` caps TOTAL updates
+    including the preload, so a resumed batch stops exactly where the
+    uninterrupted one would have.
     """
     if source.fused and wss == "2":
         raise ValueError("fused kernel sources require WSS-1 (wss='1')")
     b, n = train_masks.shape
     Cs = jnp.broadcast_to(jnp.asarray(Cs, source.dtype), (b,))
     alpha0s = jnp.where(train_masks, alpha0s, 0.0).astype(source.dtype)
+    n_iter0s = jnp.broadcast_to(
+        jnp.asarray(0 if n_iter0s is None else n_iter0s, jnp.int64), (b,))
     states = EngineState(alpha0s, f0s.astype(source.dtype),
-                         jnp.zeros(b, jnp.int64), jnp.zeros(b, bool))
+                         n_iter0s, jnp.zeros(b, bool))
     it_cap = jnp.asarray(max_iter, jnp.int64)
     while True:
         states = _chunk_batched_jit(source, y, train_masks, Cs, tol, it_cap,

@@ -1,0 +1,335 @@
+"""Lane scheduler: repacked batched dispatch with incremental admission.
+
+The engine's batched driver (``engine.solve_batched``) advances every lane
+of a fixed-width batch until the LAST lane converges — converged lanes
+freeze but still flow through the vmapped body, so on CPU the batch was
+measured slower than the sequential fold loop (DESIGN.md §Batched folds).
+This module replaces the fixed batch with a **schedule**:
+
+* **repacking** — between chunks, converged lanes are *retired* (their
+  state finalized into an ``SMOResult`` and scattered back to the caller's
+  slot by original lane id) and the live lanes gathered into a compact
+  batch, so device work tracks ``sum_h n_iter_h`` instead of
+  ``width * max_h n_iter_h``;
+* **bucketing** — the packed width is rounded up to a multiple of
+  ``lane_quantum`` (widths 1 and 2 stay exact), padding with inert
+  ``done`` lanes, so distinct jit programs stay O(peak_width / quantum)
+  instead of one retrace per live-width;
+* **degradation** — a dispatch width of 1 uses the *single-lane*
+  sequential program (the same ``_chunk_jit`` the scalar ``solve`` path
+  uses), so a straggler tail costs sequential-solver time, not a vmapped
+  batch of one;
+* **width capping** (``max_width``) — the dispatch width is bounded by a
+  backend cost model: XLA CPU pays a ~1.5-2x per-lane-iteration penalty
+  for ANY vmapped width (a thread-pool fork/join per parallel fusion, the
+  (w, n) state leaving L2) — measured flat from width 2 up — so on CPU the
+  only schedule at parity with the sequential fold loop is width 1: the
+  scheduler round-robins lanes through the sequential program at chunk
+  granularity (total device work still tracks ``sum_h n_iter_h``; lanes
+  beyond the cap park for one chunk, least-served first). Accelerator
+  backends amortize dispatch overhead across lanes and default to
+  unbounded width;
+* **admission** — a lane may be added with a *dependency* on another
+  lane's result plus a seed transform (``seed_fn(prev_result) ->
+  (alpha0, f0)``, e.g. a ``SEEDERS`` entry + ``init_f``). It is admitted
+  into the live batch the moment its dependency retires — so the CV grid's
+  per-cell fold chains interleave instead of barriering a whole row at
+  each fold (cell A solves fold h+1 while cell B still iterates fold h).
+
+Because each lane's iterate sequence depends only on its own
+(mask, C, state) — the engine body freezes ``done`` lanes and ``vmap``
+keeps lanes independent — per-lane results are **bit-identical** to
+sequential ``engine.solve`` runs regardless of the packing schedule
+(covered by tests/test_scheduler.py).
+
+Checkpointing: ``snapshot_lanes()`` serializes every admitted lane's
+(alpha, f, n_iter, done) stacked **in lane-id order**, not packed
+position, so a mid-batch snapshot survives any repack/resume boundary;
+``core/cv.py:run_cv_batched`` wires it to the checkpoint manager.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.svm.engine import (EngineState, SMOResult, _chunk_batched_jit,
+                              _chunk_jit, _finalize, init_state)
+
+
+def bucket_width(w: int, quantum: int = 4) -> int:
+    """Packed width for ``w`` live lanes: 1 and 2 are exact (the straggler
+    tail, where padding would be pure overhead), wider batches round up to
+    the next multiple of ``quantum`` so the number of distinct compiled
+    programs stays bounded by ``peak_width / quantum + 2``."""
+    if w <= 2:
+        return max(w, 1)
+    q = max(int(quantum), 1)
+    return -(-w // q) * q
+
+
+@dataclasses.dataclass
+class _Lane:
+    id: Any
+    train_mask: jnp.ndarray
+    C: float
+    max_iter: int
+    state: EngineState | None = None      # admitted, not yet retired
+    dep: Any = None                       # lane id this lane seeds from
+    seed_fn: Callable | None = None       # SMOResult -> (alpha0, f0)
+    result: SMOResult | None = None       # set at retirement
+    served: int = 0                       # chunks dispatched (park fairness)
+
+
+class LaneScheduler:
+    """Queue of independent solve lanes driven to convergence by repacked,
+    bucketed, incrementally-admitted chunk dispatch over one shared kernel
+    source. See the module docstring for the scheduling policy; per-lane
+    results are bit-identical to sequential solves."""
+
+    def __init__(self, source, y, *, tol: float = 1e-3, wss: str = "2",
+                 chunk_iters: int = 2048, lane_quantum: int = 4,
+                 max_width: int | None = None,
+                 on_snapshot=None, snapshot_every: int = 1):
+        if source.fused and wss == "2":
+            raise ValueError("fused kernel sources require WSS-1 (wss='1')")
+        if max_width is None:
+            # backend cost model (see module docstring): CPU's vmapped
+            # batch loses at every width > 1, accelerators want full width
+            max_width = 1 if jax.default_backend() == "cpu" else 0
+        self.max_width = int(max_width)   # 0 = unbounded
+        self.source = source
+        self.y = y
+        self.tol = tol
+        self.wss = wss
+        self.chunk_iters = int(chunk_iters)
+        self.lane_quantum = int(lane_quantum)
+        self.on_snapshot = on_snapshot
+        self.snapshot_every = max(int(snapshot_every), 1)
+        self._lanes: dict[Any, _Lane] = {}
+        self._order: list[Any] = []       # insertion order = packing order
+        self.results: dict[Any, SMOResult] = {}
+        self.seed_time = 0.0              # admission transforms (paper "init.")
+        self.chunk_count = 0
+        self._width_log: list[tuple[int, int]] = []   # (live, packed)/chunk
+        # packed-batch cache: rebuilt only when the live set changes
+        self._packed_ids: tuple | None = None
+        self._packed: tuple | None = None  # (masks, Cs, it_caps, states)
+
+    # ---------------------------------------------------------- lane intake
+
+    def add(self, lane_id, train_mask, C, alpha0=None, f0=None, *,
+            n_iter0: int = 0, max_iter: int = 10_000_000,
+            dep=None, seed_fn=None) -> None:
+        """Register a lane. Either give its start point (``alpha0``/``f0``,
+        optionally ``n_iter0`` when resuming a snapshot) or a dependency
+        (``dep`` = another lane id, ``seed_fn`` mapping that lane's
+        ``SMOResult`` to this lane's (alpha0, f0)) — the lane is then
+        admitted when the dependency retires."""
+        if lane_id in self._lanes:
+            raise ValueError(f"duplicate lane id {lane_id!r}")
+        if (dep is None) == (alpha0 is None):
+            raise ValueError("give exactly one of alpha0/f0 or dep/seed_fn")
+        if (alpha0 is None) != (f0 is None):
+            raise ValueError("alpha0 and f0 must be given together "
+                             "(f0 = init_f(K, y, alpha0))")
+        if dep is not None and seed_fn is None:
+            raise ValueError("a dependent lane needs a seed_fn")
+        lane = _Lane(id=lane_id, train_mask=train_mask, C=C,
+                     max_iter=int(max_iter), dep=dep, seed_fn=seed_fn)
+        if alpha0 is not None:
+            lane.state = init_state(self.source, self.y, train_mask,
+                                    alpha0, f0, n_iter0=n_iter0)
+        self._lanes[lane_id] = lane
+        self._order.append(lane_id)
+
+    def add_result(self, lane_id, result: SMOResult) -> None:
+        """Register an already-solved lane (a restored ``done`` snapshot):
+        it participates as a seed dependency but is never dispatched."""
+        if lane_id in self._lanes:
+            raise ValueError(f"duplicate lane id {lane_id!r}")
+        lane = _Lane(id=lane_id, train_mask=None, C=None, max_iter=0,
+                     result=result)
+        self._lanes[lane_id] = lane
+        self._order.append(lane_id)
+        self.results[lane_id] = result
+
+    # ------------------------------------------------------------ scheduling
+
+    def _admit(self) -> None:
+        """Admit every pending lane whose dependency has retired: run its
+        seed transform (timed as init/seed work) and build its state."""
+        for lane_id in self._order:
+            lane = self._lanes[lane_id]
+            if lane.state is not None or lane.result is not None:
+                continue
+            if lane.dep not in self.results:
+                continue
+            t0 = time.perf_counter()
+            alpha0, f0 = lane.seed_fn(self.results[lane.dep])
+            jax.block_until_ready((alpha0, f0))
+            self.seed_time += time.perf_counter() - t0
+            lane.state = init_state(self.source, self.y, lane.train_mask,
+                                    alpha0, f0)
+
+    def _live(self) -> list[_Lane]:
+        return [self._lanes[i] for i in self._order
+                if self._lanes[i].state is not None
+                and self._lanes[i].result is None]
+
+    def _retire(self, lane: _Lane) -> None:
+        lane.result = _finalize(lane.state, self.y, lane.train_mask,
+                                lane.C, self.tol)
+        self.results[lane.id] = lane.result
+
+    def _pack(self, live: list[_Lane]) -> None:
+        """Gather the live lanes into a compact batch of bucketed width;
+        pad positions replicate lane 0 with ``done`` set (inert: the engine
+        body passes done lanes through untouched, and the while_loop's
+        ``any(~done)`` ignores them)."""
+        width = bucket_width(len(live), self.lane_quantum)
+        states = [ln.state for ln in live]
+        masks = [ln.train_mask for ln in live]
+        Cs = [ln.C for ln in live]
+        caps = [ln.max_iter for ln in live]
+        for _ in range(width - len(live)):
+            pad = live[0].state
+            states.append(pad._replace(done=jnp.ones((), bool)))
+            masks.append(live[0].train_mask)
+            Cs.append(live[0].C)
+            caps.append(0)
+        self._packed_ids = tuple(ln.id for ln in live)
+        self._packed = (jnp.stack(masks),
+                        jnp.asarray(Cs, self.source.dtype),
+                        jnp.asarray(caps, jnp.int64),
+                        EngineState.stack(states))
+
+    def _unpack(self, live: list[_Lane]) -> None:
+        states = self._packed[3]
+        for i, lane in enumerate(live):
+            lane.state = states.lane(i)
+        self._packed_ids = None
+        self._packed = None
+
+    def run(self) -> dict[Any, SMOResult]:
+        """Drive every lane to retirement; returns {lane_id: SMOResult}."""
+        while True:
+            self._admit()
+            live = self._live()
+            if not live:
+                pending = [i for i in self._order
+                           if self._lanes[i].result is None]
+                if pending:
+                    raise RuntimeError(
+                        f"lanes {pending} wait on dependencies that never "
+                        "retire (missing or cyclic dep)")
+                break
+            selected, parked = live, False
+            if self.max_width and len(live) > self.max_width:
+                # park the overflow for one chunk, least-served lanes first
+                # (stable sort: insertion order breaks ties), so every lane
+                # keeps advancing at chunk granularity
+                selected = sorted(live, key=lambda ln: ln.served)
+                selected = selected[:self.max_width]
+                parked = True
+            for lane in selected:
+                lane.served += 1
+            width = (1 if len(selected) == 1
+                     else bucket_width(len(selected), self.lane_quantum))
+            self._width_log.append((len(live), width))
+            if len(selected) == 1:
+                self._step_single(selected[0])
+            else:
+                self._step_batched(selected, flush=parked)
+            self.chunk_count += 1
+            if self.on_snapshot is not None and \
+                    self.chunk_count % self.snapshot_every == 0:
+                self.on_snapshot(self)
+        return dict(self.results)
+
+    def _step_single(self, lane: _Lane) -> None:
+        """Dispatch width 1: the sequential single-lane program
+        (bit-identical to ``engine.solve``'s chunks) — no vmap overhead on
+        a straggler or a width-capped round-robin schedule."""
+        lane.state = _chunk_jit(self.source, self.y, lane.train_mask, lane.C,
+                                self.tol, jnp.asarray(lane.max_iter, jnp.int64),
+                                lane.state, n_iters=self.chunk_iters,
+                                wss=self.wss)
+        if bool(lane.state.done):
+            self._retire(lane)
+
+    def _step_batched(self, live: list[_Lane], flush: bool = False) -> None:
+        """One chunk over the selected lanes. ``flush`` forces the packed
+        states back into the lanes afterwards — required whenever the next
+        chunk may select a different lane set (parking rotation), or the
+        stale ``lane.state`` would be repacked and progress lost."""
+        if self._packed_ids != tuple(ln.id for ln in live):
+            self._pack(live)
+        masks, Cs, caps, states = self._packed
+        states = _chunk_batched_jit(self.source, self.y, masks, Cs, self.tol,
+                                    caps, states, n_iters=self.chunk_iters,
+                                    wss=self.wss)
+        self._packed = (masks, Cs, caps, states)
+        done = np.asarray(states.done[:len(live)])   # one (w,) transfer
+        if done.any() or flush:
+            self._unpack(live)
+            for flag, lane in zip(done, live):
+                if flag:
+                    self._retire(lane)
+
+    # ---------------------------------------------------------- observability
+
+    def _lane_state(self, lane: _Lane) -> EngineState:
+        """Current state of a live lane, reading through the packed cache."""
+        if self._packed_ids is not None and lane.id in self._packed_ids:
+            return self._packed[3].lane(self._packed_ids.index(lane.id))
+        return lane.state
+
+    def snapshot_lanes(self):
+        """(lane_ids, tree) of every admitted-or-retired lane, stacked in
+        lane-id (insertion) order — NOT packed position — so a mid-batch
+        checkpoint restores by original lane id across any repack/resume
+        boundary. ``tree`` = {alpha (L, n), f (L, n), n_iter (L,),
+        done (L,)}; pending (unadmitted) lanes are omitted — their seeds
+        re-derive from the retired results in the snapshot."""
+        ids, alphas, fs, iters, dones = [], [], [], [], []
+        for lane_id in self._order:
+            lane = self._lanes[lane_id]
+            if lane.result is not None:
+                src, done = lane.result, True
+            elif lane.state is not None:
+                src, done = self._lane_state(lane), False
+            else:
+                continue
+            ids.append(lane_id)
+            alphas.append(src.alpha)
+            fs.append(src.f)
+            iters.append(src.n_iter)
+            dones.append(done)
+        tree = {"alpha": jnp.stack(alphas), "f": jnp.stack(fs),
+                "n_iter": jnp.stack(iters), "done": jnp.asarray(dones)}
+        return ids, tree
+
+    @property
+    def occupancy(self) -> dict:
+        """Schedule shape over the run. ``mean_live_width`` counts
+        *runnable* lanes per chunk (the demand); ``mean_packed_width`` /
+        ``peak_width`` count the *dispatched* program width (after width
+        capping and pad bucketing). live >> packed is the width-capped
+        round-robin regime (CPU); live == packed == peak means retirement
+        never compacted the batch (lanes converged together)."""
+        if not self._width_log:
+            return {"chunks": 0, "mean_live_width": 0.0,
+                    "mean_packed_width": 0.0, "peak_width": 0,
+                    "programs": 0}
+        lives = [w for w, _ in self._width_log]
+        packed = [p for _, p in self._width_log]
+        return {"chunks": len(self._width_log),
+                "mean_live_width": round(sum(lives) / len(lives), 3),
+                "mean_packed_width": round(sum(packed) / len(packed), 3),
+                "peak_width": max(packed),
+                "programs": len(set(packed))}

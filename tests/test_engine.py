@@ -258,12 +258,44 @@ def test_solver_halts_on_nan_state():
     assert int(res.n_iter) == 0   # halted before any update was applied
 
 
-def test_run_cv_batched_matches_cold_cv():
+@pytest.mark.parametrize("schedule,label", [
+    ("batched", "cold_batched"), ("repacked", "cold_batched_repacked")])
+def test_run_cv_batched_matches_cold_cv(schedule, label):
     from repro.core.cv import run_cv, run_cv_batched
     ds = make_dataset("heart", n_override=120)
     cold = run_cv(ds, k=4, method="cold")
-    bat = run_cv_batched(ds, k=4)
-    assert bat.method == "cold_batched"
+    bat = run_cv_batched(ds, k=4, schedule=schedule)
+    assert bat.method == label
     assert bat.accuracy == pytest.approx(cold.accuracy, abs=1e-12)
     assert [f.n_iter for f in bat.folds] == [f.n_iter for f in cold.folds]
     assert all(f.converged for f in bat.folds)
+    if schedule == "repacked":
+        assert bat.occupancy["chunks"] >= 1
+        assert bat.occupancy["peak_width"] >= 1
+
+
+def test_solve_batched_n_iter0s_resume_bitwise():
+    """A capped batched run resumed with per-lane ``n_iter0s`` replays the
+    uninterrupted iterate sequence — alpha, f AND the n_iter account —
+    mirroring the single-lane ``solve(..., n_iter0=...)`` path."""
+    ds, X, K, y = _setup(n=120)
+    n = y.shape[0]
+    masks = jnp.stack([jnp.ones(n, bool).at[:20].set(False),
+                       jnp.ones(n, bool).at[20:40].set(False)])
+    Cs = jnp.asarray([ds.C, 4.0 * ds.C])
+    a0 = jnp.zeros((2, n))
+    f0 = jnp.tile(-y, (2, 1))
+    full = smo_solve_batched(K, y, masks, Cs, a0, f0)
+    part = smo_solve_batched(K, y, masks, Cs, a0, f0, max_iter=150)
+    np.testing.assert_array_equal(np.asarray(part.n_iter), [150, 150])
+    resumed = smo_solve_batched(K, y, masks, Cs, part.alpha, part.f,
+                                n_iter0s=part.n_iter)
+    for a, b in zip(full, resumed):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the cap counts TOTAL updates incl. the preload: resuming a 150-iter
+    # state under max_iter=150 must apply zero further updates
+    recapped = smo_solve_batched(K, y, masks, Cs, part.alpha, part.f,
+                                 n_iter0s=part.n_iter, max_iter=150)
+    np.testing.assert_array_equal(np.asarray(recapped.alpha),
+                                  np.asarray(part.alpha))
+    np.testing.assert_array_equal(np.asarray(recapped.n_iter), [150, 150])

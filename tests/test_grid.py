@@ -51,10 +51,11 @@ def test_seed_across_C_same_accuracy(ds):
 
 
 def test_grid_ato_batched_row(ds):
-    """method="ato": each fold transition is ONE vmapped ramp across the C
-    row (seeding.ato_seed_batch). Cells must match the standalone ATO CV run
-    on accuracy and converge; iteration counts are comparable, not
-    bit-identical (the batched pad is sized for the widest lane)."""
+    """method="ato": each cell's fold transitions run the jittable ATO ramp
+    (seeding.ato_seed) as scheduler admission transforms, so cells advance
+    independently. Cells must match the standalone ATO CV run on accuracy
+    and converge; iteration counts are comparable (same per-lane m_cap as
+    run_cv, so usually identical, but not contractually bit-equal)."""
     rep = run_grid(ds, Cs=CS, gammas=[0.3], k=4, method="ato")
     assert len(rep.cells) == len(CS)
     assert all(c.converged for c in rep.cells)
