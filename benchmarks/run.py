@@ -38,16 +38,41 @@ def _write_bench_table1(rows: list[dict], quick: bool) -> None:
     # never compacted the batch and the scheduler degraded to the old
     # fixed-width schedule
     occ_rows = [r["occupancy"] for r in rows if "occupancy" in r]
+    # the historical mean/peak aggregate is the REPACKED-CV signal (a
+    # shrinking mean_live_width is the repack win vs cold_batched); the
+    # 45-lane grid rows would dominate its chunk counts and shift it for
+    # schedule-unrelated reasons, so they are excluded here and tracked by
+    # their own rows + the per-source block below
+    cv_occ = [r["occupancy"] for r in rows
+              if "occupancy" in r and not r["method"].startswith("grid")]
     scheduler = None
     if occ_rows:
-        total_chunks = sum(o["chunks"] for o in occ_rows)
+        total_chunks = sum(o["chunks"] for o in cv_occ)
         scheduler = {
             "chunks": total_chunks,
             "mean_live_width": round(
-                sum(o["mean_live_width"] * o["chunks"] for o in occ_rows)
+                sum(o["mean_live_width"] * o["chunks"] for o in cv_occ)
                 / max(total_chunks, 1), 3),
-            "peak_width": max(o["peak_width"] for o in occ_rows),
+            "peak_width": max((o["peak_width"] for o in cv_occ), default=0),
         }
+        # per-source (per-gamma) live widths from multi-source pools,
+        # aggregated across datasets by source slot: a straggler gamma row
+        # shows up as one slot's mean/peak running away from the others —
+        # the cross-gamma pooling win stays visible as an artifact diff
+        per_source: dict[str, dict] = {}
+        for o in occ_rows:
+            for key, s in (o.get("per_source") or {}).items():
+                rec = per_source.setdefault(
+                    key, {"chunks": 0, "live": 0.0, "peak": 0})
+                rec["chunks"] += s["chunks"]
+                rec["live"] += s["mean_live_width"] * s["chunks"]
+                rec["peak"] = max(rec["peak"], s["peak_live_width"])
+        if per_source:
+            scheduler["per_source_live_width"] = {
+                key: {"chunks": rec["chunks"],
+                      "mean": round(rec["live"] / max(rec["chunks"], 1), 3),
+                      "peak": rec["peak"]}
+                for key, rec in sorted(per_source.items())}
     payload = {
         "bench": "table1_kfold",
         "quick": quick,

@@ -26,7 +26,14 @@ Beyond the paper's columns:
 * ``ato_bucketed`` — the batched ATO ramp across a 3-lane C row for every
   fold transition, with per-lane m_cap buckets (``init_s``) vs the
   historical widest-lane pad (``init_s_padded``); the bucketed ramp must
-  be no slower on every dataset.
+  be no slower on every dataset;
+* ``grid_pooled`` / ``grid_rows`` — a 3x3 (C, gamma) grid through
+  ``run_grid`` as ONE cross-gamma lane pool vs the per-gamma-row scheduler
+  baseline (identical per-cell results; only the schedule differs). The
+  pooled row carries the pool occupancy incl. per-source (per-gamma) live
+  widths, so the straggler-row win — and any regression of it — stays
+  visible in the BENCH_table1.json artifact diff. Acceptance: pooled is no
+  slower in aggregate.
 """
 from __future__ import annotations
 
@@ -51,6 +58,46 @@ METHODS = ("cold", "cold_batched", "cold_batched_repacked", "ato", "ato_ref",
 #: every suite dataset (the case bucketing exists for); the middle lane is
 #: the paper's C, keeping its accuracy comparable to the ato row
 ATO_ROW_C = (0.01, 1.0, 100.0)
+#: the grid_pooled/grid_rows comparison grid: multipliers of the paper's
+#: (C, gamma), k=5 — 9 cells x 5 folds = 45 lanes per run, enough to give
+#: the cross-gamma pool straggler rows to dissolve while keeping the
+#: benchmark wall-clock sane
+GRID_C = (0.25, 1.0, 4.0)
+GRID_GAMMA = (0.5, 1.0, 2.0)
+GRID_K = 5
+
+
+def _grid_rows(name: str, reps: int) -> list[dict]:
+    """Time the same (C, gamma) grid under the cross-gamma pool and the
+    per-gamma-row baseline. Per-cell results are bit-identical (asserted in
+    tests/test_study.py); the rows exist to track the schedule's
+    wall-clock and occupancy shape."""
+    from repro.core.grid import run_grid
+    ds = make_dataset(name, n_override=SIZES[name])
+    Cs = [m * ds.C for m in GRID_C]
+    gammas = [m * ds.gamma for m in GRID_GAMMA]
+    rows = []
+    for method_name, pool in (("grid_pooled", "cross_gamma"),
+                              ("grid_rows", "per_gamma")):
+        def runner(pool=pool):
+            return run_grid(ds, Cs=Cs, gammas=gammas, k=GRID_K,
+                            method="sir", pool=pool)
+        runner()                                 # warm the jit caches
+        rep = min((runner() for _ in range(reps)),
+                  key=lambda r: r.solve_time)
+        row = {"dataset": name, "method": method_name, "k": GRID_K,
+               "iterations": rep.total_iterations,
+               "init_s": round(rep.seed_time, 4),
+               "solve_s": round(rep.solve_time, 4),
+               "total_s": round(rep.seed_time + rep.solve_time
+                                + rep.kernel_time, 4),
+               "accuracy": round(rep.best().accuracy, 4),
+               "us_per_iteration": round(
+                   1e6 * rep.solve_time / max(rep.total_iterations, 1), 2)}
+        if rep.occupancy is not None:
+            row["occupancy"] = rep.occupancy
+        rows.append(row)
+    return rows
 
 
 def _ato_bucketed_row(name: str, k: int, reps: int) -> dict:
@@ -160,6 +207,7 @@ def run(k: int = 10, quick: bool = False, reps: int = 3):
                 row["occupancy"] = rep.occupancy
             rows.append(row)
         rows.append(_ato_bucketed_row(name, k, reps))
+        rows.extend(_grid_rows(name, reps))
     emit(f"table1_k{k}", rows)
     return rows
 

@@ -1,5 +1,7 @@
 """End-to-end driver for the paper's full experimental protocol on one
-dataset: all four methods, fold-level detail, fault-tolerant restart demo.
+dataset: the SVC estimator facade, all four seeding methods, the pooled
+cross-gamma grid, and a fault-tolerant restart demo — every path a thin
+plan over the Study API.
 
     PYTHONPATH=src python examples/svm_cv_seeding.py [dataset]
 """
@@ -10,13 +12,20 @@ import tempfile
 from repro.checkpoint import CheckpointManager
 from repro.core.cv import run_cv
 from repro.data.svm_suite import make_dataset
+from repro.svm import SVC
 
 name = sys.argv[1] if len(sys.argv) > 1 else "madelon"
 ds = make_dataset(name, n_override=600)
 
+# ---- the estimator facade: fit / predict / cross_validate ----
+svc = SVC(C=ds.C, gamma=ds.gamma)
+svc.fit(ds.X, ds.y)
 print(f"== {ds.name}: n={ds.n}, C={ds.C}, gamma={ds.gamma}, k=10 ==")
+print(f"SVC fit: {svc.n_iter_} iterations, converged={svc.converged_}, "
+      f"train acc={svc.score(ds.X, ds.y):.4f}")
+
 for method in ("cold", "ato", "mir", "sir"):
-    rep = run_cv(ds, k=10, method=method)
+    rep = svc.cross_validate(ds.X, ds.y, k=10, method=method)
     r = rep.row()
     print(f"{method:>5}: iters={r['iterations']:>7} init={r['init_s']:>8}s "
           f"solve={r['solve_s']:>8}s acc={r['accuracy']}")
@@ -25,7 +34,7 @@ for method in ("cold", "ato", "mir", "sir"):
         print("       per-fold (fold, seeded_from, iters):", per_fold)
 
 # ---- lane-scheduled fold execution: independent cold folds submitted to
-# the LaneScheduler (repacked/bucketed/width-capped dispatch) ----
+# the lane pool (repacked/bucketed/width-capped dispatch) ----
 from repro.core.cv import run_cv_batched  # noqa: E402
 
 rep_cold = run_cv(ds, k=10, method="cold")
@@ -34,15 +43,18 @@ print(f"\ncold sequential: {rep_cold.row()['total_s']}s; "
       f"cold lane-scheduled: {rep_bat.row()['total_s']}s "
       f"(same per-fold fixed points; occupancy {rep_bat.occupancy})")
 
-# ---- hyper-parameter grid: kernel reuse + C-adjacent alpha seeding ----
+# ---- hyper-parameter grid: ONE multi-source pool across gammas — kernel
+# reuse per gamma, C-adjacent alpha seeding, no per-row barrier ----
 from repro.core.grid import run_grid  # noqa: E402
 
-grid = run_grid(ds, Cs=[ds.C / 4, ds.C, ds.C * 4], gammas=[ds.gamma],
+grid = run_grid(ds, Cs=[ds.C / 4, ds.C, ds.C * 4],
+                gammas=[ds.gamma / 2, ds.gamma],
                 k=5, method="sir", seed_across_C=True)
 best = grid.best()
+occ = grid.occupancy or {}
 print(f"grid best cell: C={best.C} gamma={best.gamma} "
-      f"acc={best.accuracy:.4f} ({grid.total_iterations} total iters, "
-      f"kernel computed once per gamma)")
+      f"acc={best.accuracy:.4f} ({grid.total_iterations} total iters; "
+      f"per-gamma live widths {occ.get('per_source')})")
 
 # ---- fault tolerance: the alpha chain doubles as the restart seed ----
 tmp = tempfile.mkdtemp()

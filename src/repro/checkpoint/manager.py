@@ -122,6 +122,16 @@ class CheckpointManager:
         steps = self.steps_of_class(retain_class)
         return steps[-1] if steps else None
 
+    def restore_latest_of_class(self, retain_class: str):
+        """(step, tree, extra) of the newest committed record in one
+        ``retain_class``, or None when the class has no records — the
+        one-call resume entry the Study API uses (class-scoped ``latest``:
+        a directory shared with other record kinds must not shadow it)."""
+        step = self.latest_step_of_class(retain_class)
+        if step is None:
+            return None
+        return self.restore(step=step)
+
     def save(self, step: int, tree, extra_meta: dict | None = None,
              blocking: bool = True, retain_class: str = "default") -> None:
         """``retain_class`` partitions the retention budget: ``max_to_keep``

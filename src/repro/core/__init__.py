@@ -8,4 +8,8 @@ from repro.core.seeding import (  # noqa: F401
     cold_seed, mir_seed, sir_seed, ato_seed, ato_seed_ref, ato_seed_batch,
     avg_seed_loo, top_seed_loo, water_fill, repair_equality, SEEDERS,
 )
-from repro.core.cv import run_cv, run_loo, CVReport, FoldStat  # noqa: F401
+from repro.core.study import (  # noqa: F401
+    EvalSpec, LaneSpec, LaneStat, Plan, StudyCheckpoint, StudyResult,
+    run_plan)
+from repro.core.cv import run_cv, run_cv_batched, run_loo, CVReport, FoldStat  # noqa: F401
+from repro.core.grid import run_grid, GridCell, GridReport  # noqa: F401

@@ -1,33 +1,36 @@
-"""k-fold cross-validation driver with alpha-seed chaining.
+"""k-fold cross-validation drivers — thin plan builders over the Study API.
 
 Reproduces the paper's experimental protocol: fold 0 starts cold; fold h>0
-warm-starts from the most recent completed fold via the chosen seeder. The
-driver is also the fault-tolerance unit, at two granularities:
+warm-starts from the most recent completed fold via the chosen seeder. Each
+driver DECLARES that structure as a ``repro.core.study.Plan`` — lanes with
+seed dependencies carrying named transforms — and ``run_plan`` executes it
+on the lane pool; the drivers keep their historical signatures, record
+formats and (bit-identical) outputs.
+
+``run_cv`` is also the fault-tolerance unit, at two granularities:
 
 * fold-level (always on with a checkpoint manager): each completed fold is
-  checkpointed (fold index + alpha + f), so a restarted job re-seeds from
-  the last completed fold — the paper's own mechanism doubles as the
-  recovery path. On restore, EVERY retained done record is loaded: the
-  resumed report covers the pre-crash folds (``FoldStat.restored``) so its
-  totals match an uninterrupted run, or ``CVReport.partial`` flags the gap
-  when retention GC dropped some;
-* chunk-level (opt-in via ``chunk_iters``): the engine's chunked dispatch
-  snapshots (alpha, f, n_iter) every ``checkpoint_every`` chunks *inside* a
-  fold, so recovery no longer loses an in-flight fold — the restarted solve
-  resumes the exact iterate sequence (bit-identical fixed point).
+  checkpointed (fold index + alpha + f) from the pool's per-lane
+  retirement callback, so a restarted job re-seeds from the last completed
+  fold — the paper's own mechanism doubles as the recovery path. On
+  restore, EVERY retained done record is loaded: the resumed report covers
+  the pre-crash folds (``FoldStat.restored``) so its totals match an
+  uninterrupted run, or ``CVReport.partial`` flags the gap when retention
+  GC dropped some;
+* chunk-level (opt-in via ``chunk_iters``): the pool's per-lane chunk hook
+  snapshots (alpha, f, n_iter) every ``checkpoint_every`` chunks *inside*
+  a fold, so recovery no longer loses an in-flight fold — the restarted
+  solve resumes the exact iterate sequence (bit-identical fixed point).
 
 Straggler policy: ``strict`` (paper semantics — always seed from fold h-1)
 or ``best_available`` (seed from the nearest *completed* fold; lets the
 scheduler keep going when a fold is slow/lost; still bit-compatible results
 because seeding never changes the fixed point).
 
-``run_cv_batched`` executes independent (cold) folds concurrently. Its
-default ``schedule="repacked"`` drives them through the LaneScheduler
-(DESIGN.md §Lane scheduler): converged folds retire between chunks, the
-live batch is compacted, and the last straggler runs the sequential
-single-lane program — so k folds cost ~sum(n_iter_h) lane-iterations with
-mid-batch checkpoints keyed by fold id. ``schedule="batched"`` keeps the
-fixed-width ``engine.solve_batched`` baseline (~k * max(n_iter_h) work).
+``run_cv_batched`` executes independent (cold) folds concurrently through
+the pool's repacked schedule; ``run_loo`` chains (or fans out) the
+leave-one-out rounds through the same plan machinery — both get repacked
+dispatch and mid-study checkpoint/resume from the shared entry point.
 """
 from __future__ import annotations
 
@@ -39,10 +42,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import seeding
+from repro.core.study import Plan, StudyCheckpoint, run_plan
 from repro.data.svm_suite import SVMDataset, kfold_chunks
-from repro.svm import (DenseKernel, accuracy, bias_from_solution, init_f,
-                       kernel_matrix, predict, smo_solve, smo_solve_batched,
-                       dual_objective)
+from repro.svm import (DenseKernel, bias_from_solution, dual_objective,
+                       kernel_matrix, predict, smo_solve_batched)
 
 # step numbering inside a checkpoint directory: fold h's mid-fold chunk
 # snapshots live at h*_FOLD_STRIDE + 1 + chunk, its completion record at
@@ -52,7 +55,9 @@ _FOLD_STRIDE = 1_000_000
 # run_cv_batched's mid-batch snapshots live at _BATCH_BASE + chunk: far
 # above any run_cv step (k*_FOLD_STRIDE), so the two record kinds can share
 # a directory without step collisions (save() replaces an existing step
-# dir, so a collision would silently clobber the other run's checkpoint)
+# dir, so a collision would silently clobber the other run's checkpoint).
+# Study records (retain_class "study") start at study.STUDY_BASE, above
+# both — see DESIGN.md §Study API for the full key scheme.
 _BATCH_BASE = _FOLD_STRIDE ** 2
 
 
@@ -78,8 +83,8 @@ class CVReport:
     n: int
     kernel_time: float
     folds: list[FoldStat]
-    #: LaneScheduler width stats (mean/peak live width, program count) when
-    #: the run used the repacked schedule; None for sequential/plain-batched
+    #: lane-pool width stats (mean/peak live width, program count) when the
+    #: run used the repacked schedule; None for sequential/plain-batched
     occupancy: dict | None = None
 
     @property
@@ -162,8 +167,16 @@ def run_cv(ds: SVMDataset, k: int = 10, method: str = "sir",
     ``chunk_iters`` switches the solver to chunked dispatch; with a
     checkpoint manager attached, every ``checkpoint_every``-th chunk is
     snapshotted so a crash mid-fold resumes inside the fold instead of
-    replaying it from its seed."""
-    seeder = seeding.SEEDERS[method]
+    replaying it from its seed.
+
+    The fold chain is one Study plan: restored folds enter as given
+    results, live fold h is a lane whose seed dependency carries the
+    ``"fold"`` transform (and an ``after`` ordering edge on fold h-1, so
+    the paper's sequential protocol — and the mid-fold checkpoint cadence
+    that assumes one in-flight fold — is preserved even for independent
+    cold folds; the concurrent schedules live in ``run_cv_batched`` and
+    ``run_grid``)."""
+    seeding.SEEDERS[method]   # validate the method name up front
     X = jnp.asarray(ds.X)
     y = jnp.asarray(ds.y, jnp.float64)
 
@@ -177,6 +190,7 @@ def run_cv(ds: SVMDataset, k: int = 10, method: str = "sir",
     n = chunks.size  # padded n (multiple of k)
     K = K[:n][:, :n]
     y = y[:n]
+    masks = jnp.asarray(_fold_masks(chunks))
 
     results: dict[int, object] = {}
     restored_meta: dict[int, dict] = {}
@@ -185,12 +199,11 @@ def run_cv(ds: SVMDataset, k: int = 10, method: str = "sir",
     resume = None   # (alpha, f, n_iter, seed_from) of an in-flight fold
 
     if checkpoint_manager is not None:
-        # run_cv's records all live below _BATCH_BASE; run_cv_batched's
-        # batch snapshots (>= _BATCH_BASE, keyed by lane id, resumable only
-        # by run_cv_batched) are excluded from BOTH the loop and the
-        # "latest" computation — a shared directory must not make run_cv
-        # treat its own newest mid snapshot as stale just because a batch
-        # record outranks it numerically.
+        # run_cv's records all live below _BATCH_BASE; batch/study records
+        # (keyed by lane id, resumable only through run_plan) are excluded
+        # from BOTH the loop and the "latest" computation — a shared
+        # directory must not make run_cv treat its own newest mid snapshot
+        # as stale just because a batch record outranks it numerically.
         cv_steps = [s for s in checkpoint_manager.all_steps()
                     if s < _BATCH_BASE]
         latest = cv_steps[-1] if cv_steps else None
@@ -250,78 +263,79 @@ def run_cv(ds: SVMDataset, k: int = 10, method: str = "sir",
             acc_correct=correct, acc_total=total, objective=obj,
             converged=bool(res.converged), restored=True))
 
-    for h in range(start_fold, k):
-        test_idx = jnp.asarray(chunks[h])
-        train_mask = jnp.ones(n, bool).at[test_idx].set(False)
+    # ---- declare the fold chain as a plan ----
+    plan = Plan(sources={"cv": DenseKernel(K)}, y=y, tol=tol,
+                chunk_iters=chunk_iters if chunk_iters is not None
+                else max_iter)
+    for g in sorted(results):
+        plan.lane(g, result=results[g])
 
-        # ---- choose the seed fold (straggler policy) ----
-        completed = [g for g in sorted(results) if g not in unavailable_folds]
-        if resume is not None:
+    # the seed-fold choice (straggler policy) is deterministic: live folds
+    # execute in order (the ``after`` chain), so fold h sees exactly the
+    # restored folds plus every earlier live fold as completed
+    seed_froms: dict[int, int] = {}
+    base_counts: dict[int, int] = {}
+    done_folds = sorted(results)
+    prev_lane = None
+    zeros = jnp.zeros(n, K.dtype)
+    for h in range(start_fold, k):
+        avail = [g for g in done_folds if g not in unavailable_folds]
+        if resume is not None and h == start_fold:
             seed_from = resume[3]
-        elif h == 0 or method == "cold" or not completed:
+        elif h == 0 or method == "cold" or not avail:
             seed_from = -1
         elif straggler_policy == "strict":
-            seed_from = h - 1 if (h - 1) in completed else -1
+            seed_from = h - 1 if (h - 1) in avail else -1
         else:  # best_available: nearest completed fold
-            seed_from = min(completed, key=lambda g: abs(h - g))
+            seed_from = min(avail, key=lambda g: abs(h - g))
+        seed_froms[h] = seed_from
+        base_counts[h] = 0
 
-        # ---- init (the paper's "init." column) ----
-        t0 = time.perf_counter()
-        n_iter0 = 0
-        if resume is not None:
+        common = dict(train_mask=masks[h], C=ds.C, max_iter=max_iter,
+                      after=prev_lane)
+        if resume is not None and h == start_fold:
             alpha0, f0, n_iter0, _ = resume
-            resume = None
+            base_counts[h] = (n_iter0 // chunk_iters
+                              if chunk_iters is not None else 0)
+            plan.lane(h, alpha0=alpha0, f0=f0, n_iter0=n_iter0, **common)
         elif seed_from < 0:
-            alpha0 = jnp.zeros(n, K.dtype)
-            f0 = -y
+            plan.lane(h, alpha0=zeros, f0=-y, **common)
         else:
             S_idx, R_idx, T_idx = _transition_idx(chunks, seed_from, h)
-            alpha0 = seeder(K, y, ds.C, results[seed_from], S_idx, R_idx, T_idx)
-            f0 = init_f(K, y, alpha0)
-        jax.block_until_ready((alpha0, f0))
-        init_time = time.perf_counter() - t0
+            plan.lane(h, dep=seed_from, transform="fold",
+                      params=dict(method=method, S_idx=S_idx, R_idx=R_idx,
+                                  T_idx=T_idx), **common)
+        done_folds.append(h)
+        prev_lane = h
 
-        # ---- solve (chunked dispatch doubles as the mid-fold snapshotter) ----
-        on_chunk = None
-        if checkpoint_manager is not None and chunk_iters is not None:
-            # seed the chunk counter from the restored n_iter so step numbers
-            # reflect ABSOLUTE fold progress: a resumed run's snapshots must
-            # outnumber the pre-crash ones, or latest_step()/retention-GC
-            # would keep resurrecting the stale pre-crash snapshot forever
-            counter = {"c": n_iter0 // chunk_iters}
+    # ---- checkpoint hooks: run_cv keeps its own record formats ----
+    on_lane_chunk = None
+    if checkpoint_manager is not None and chunk_iters is not None:
+        # seed the chunk counter from the restored n_iter so step numbers
+        # reflect ABSOLUTE fold progress: a resumed run's snapshots must
+        # outnumber the pre-crash ones, or latest_step()/retention-GC
+        # would keep resurrecting the stale pre-crash snapshot forever
+        counters = dict(base_counts)
 
-            def on_chunk(state, h=h, seed_from=seed_from, counter=counter):
-                counter["c"] += 1
-                if counter["c"] % checkpoint_every:
-                    return
-                step = h * _FOLD_STRIDE + min(counter["c"], _FOLD_STRIDE - 2) + 1
-                # mid snapshots GC separately from done records: they are
-                # frequent and superseded by the next one, and must never
-                # evict the done records the resume path depends on
-                checkpoint_manager.save(
-                    step, {"alpha": state.alpha, "f": state.f,
-                           "n_iter": state.n_iter},
-                    extra_meta={"phase": "mid", "fold": h,
-                                "seed_from": seed_from, "method": method,
-                                "k": k, "dataset": ds.name, "seed": seed},
-                    blocking=False, retain_class="mid")
+        def on_lane_chunk(h, state):
+            counters[h] += 1
+            if counters[h] % checkpoint_every:
+                return
+            step = h * _FOLD_STRIDE + min(counters[h], _FOLD_STRIDE - 2) + 1
+            # mid snapshots GC separately from done records: they are
+            # frequent and superseded by the next one, and must never
+            # evict the done records the resume path depends on
+            checkpoint_manager.save(
+                step, {"alpha": state.alpha, "f": state.f,
+                       "n_iter": state.n_iter},
+                extra_meta={"phase": "mid", "fold": h,
+                            "seed_from": seed_froms[h], "method": method,
+                            "k": k, "dataset": ds.name, "seed": seed},
+                blocking=False, retain_class="mid")
 
-        t0 = time.perf_counter()
-        res = smo_solve(K, y, train_mask, ds.C, alpha0, f0, tol=tol,
-                        max_iter=max_iter, chunk_iters=chunk_iters,
-                        on_chunk=on_chunk, n_iter0=n_iter0)
-        jax.block_until_ready(res)
-        solve_time = time.perf_counter() - t0
-
-        correct, total, obj = _eval_fold(K, y, chunks, h, res, ds.C)
-        folds.append(FoldStat(
-            fold=h, seed_from=seed_from, n_iter=int(res.n_iter),
-            init_time=init_time, solve_time=solve_time,
-            acc_correct=correct, acc_total=total,
-            objective=obj, converged=bool(res.converged)))
-        results[h] = res
-
-        if checkpoint_manager is not None:
+    on_result = None
+    if checkpoint_manager is not None:
+        def on_result(h, res):
             # strided numbering UNCONDITIONALLY: unchunked runs used to save
             # fold h at step h while every reader assumed (h+1)*_FOLD_STRIDE,
             # so a later resume with chunk_iters set pointed at nonexistent
@@ -331,10 +345,22 @@ def run_cv(ds: SVMDataset, k: int = 10, method: str = "sir",
                 {"alpha": res.alpha, "f": res.f, "n_iter": res.n_iter,
                  "converged": res.converged, "b_up": res.b_up,
                  "b_low": res.b_low},
-                extra_meta={"phase": "done", "fold": h, "seed_from": seed_from,
-                            "method": method, "k": k, "dataset": ds.name,
-                            "seed": seed},
+                extra_meta={"phase": "done", "fold": h,
+                            "seed_from": seed_froms[h], "method": method,
+                            "k": k, "dataset": ds.name, "seed": seed},
                 blocking=False, retain_class="done")
+
+    sres = run_plan(plan, on_result=on_result, on_lane_chunk=on_lane_chunk)
+
+    for h in range(start_fold, k):
+        res = sres.results[h]
+        stat = sres.stats[h]
+        correct, total, obj = _eval_fold(K, y, chunks, h, res, ds.C)
+        folds.append(FoldStat(
+            fold=h, seed_from=seed_froms[h], n_iter=stat.n_iter,
+            init_time=stat.seed_s, solve_time=stat.solve_s,
+            acc_correct=correct, acc_total=total,
+            objective=obj, converged=stat.converged))
 
     if checkpoint_manager is not None:
         checkpoint_manager.wait()
@@ -353,12 +379,13 @@ def run_cv_batched(ds: SVMDataset, k: int = 10, tol: float = 1e-3,
 
     ``schedule`` picks the dispatch strategy:
 
-    * ``"repacked"`` (default, method "cold_batched_repacked") — a
-      ``LaneScheduler`` retires converged folds between chunks, compacts
-      the live batch (bucketed widths) and caps the dispatch width by the
-      backend cost model (``max_width``; on CPU the default is a width-1
+    * ``"repacked"`` (default, method "cold_batched_repacked") — the folds
+      are a k-lane plan executed by ``run_plan`` on the lane pool:
+      converged folds retire between chunks, the live batch is compacted
+      (bucketed widths) and the dispatch width is capped by the backend
+      cost model (``max_width``; on CPU the default is a width-1
       round-robin through the sequential program), so device work tracks
-      ``sum_h n_iter_h`` (DESIGN.md §Lane scheduler);
+      ``sum_h n_iter_h`` (DESIGN.md §Lane scheduler / §Study API);
     * ``"batched"`` (method "cold_batched") — the fixed-width
       ``engine.solve_batched`` batch kept as the repack baseline.
 
@@ -373,9 +400,6 @@ def run_cv_batched(ds: SVMDataset, k: int = 10, tol: float = 1e-3,
     ``phase: "batch_mid"`` record (retain_class "batch"), so a crashed
     mid-batch run resumes each fold's exact iterate sequence regardless of
     how lanes were packed at the crash."""
-    from repro.svm.engine import EngineState, _finalize
-    from repro.svm.scheduler import LaneScheduler
-
     if schedule not in ("repacked", "batched"):
         raise ValueError(f"unknown schedule {schedule!r}")
     if checkpoint_manager is not None and schedule != "repacked":
@@ -416,80 +440,36 @@ def run_cv_batched(ds: SVMDataset, k: int = 10, tol: float = 1e-3,
         return CVReport(dataset=ds.name, method="cold_batched", k=k, n=n,
                         kernel_time=kernel_time, folds=folds)
 
-    # ---- repacked schedule: the CV driver is a thin scheduler client ----
-    restored: dict[int, tuple] = {}   # fold -> (alpha, f, n_iter, done)
-    step0 = 0
-    if checkpoint_manager is not None:
-        latest = checkpoint_manager.latest_step_of_class("batch")
-        if latest is not None:
-            step0, tree, extra = checkpoint_manager.restore(step=latest)
-            # tol and max_iter are part of the run identity: retired lanes
-            # carry fixed points at the snapshot's tolerance/budget, so
-            # resuming under different solver parameters would mix
-            # convergence criteria across lanes (e.g. a lane capped at the
-            # old max_iter frozen beside lanes running to the new one)
-            want = {"phase": "batch_mid", "k": k, "dataset": ds.name,
-                    "seed": seed, "tol": tol, "max_iter": max_iter}
-            got = {key: extra.get(key) for key in want}
-            if got != want:
-                raise ValueError(
-                    f"batch snapshot at step {step0} belongs to run {got}, "
-                    f"cannot resume it as {want}; point the manager at a "
-                    "fresh directory or delete the stale checkpoints")
-            for i, h in enumerate(extra["lane_ids"]):
-                restored[h] = (jnp.asarray(tree["alpha"][i]),
-                               jnp.asarray(tree["f"][i]),
-                               int(tree["n_iter"][i]), bool(tree["done"][i]))
-
-    on_snapshot = None
-    if checkpoint_manager is not None:
-        counter = {"c": max(step0, _BATCH_BASE)}
-
-        def on_snapshot(sched):
-            counter["c"] += 1
-            lane_ids, tree = sched.snapshot_lanes()
-            checkpoint_manager.save(
-                counter["c"], tree,
-                extra_meta={"phase": "batch_mid", "lane_ids": lane_ids,
-                            "k": k, "dataset": ds.name, "seed": seed,
-                            "tol": tol, "max_iter": max_iter,
-                            "method": "cold_batched_repacked"},
-                blocking=False, retain_class="batch")
-
-    sched = LaneScheduler(DenseKernel(K), y, tol=tol,
-                          chunk_iters=chunk_iters, lane_quantum=lane_quantum,
-                          max_width=max_width, on_snapshot=on_snapshot,
-                          snapshot_every=checkpoint_every)
-    done_at_start: set[int] = set()
+    # ---- repacked schedule: a k-lane cold plan ----
+    plan = Plan(sources={"cv": DenseKernel(K)}, y=y, tol=tol,
+                chunk_iters=chunk_iters, lane_quantum=lane_quantum,
+                max_width=max_width)
+    zeros = jnp.zeros(n, K.dtype)
     for h in range(k):
-        if h in restored:
-            alpha, f, n_iter, done = restored[h]
-            if done:
-                # a retired lane: re-finalize its snapshot state (optimality
-                # is a pure function of alpha/f, so converged/b_up/b_low
-                # come back identical to the pre-crash result)
-                state = EngineState(alpha, f, jnp.asarray(n_iter, jnp.int64),
-                                    jnp.ones((), bool))
-                sched.add_result(h, _finalize(state, y, masks[h], ds.C, tol))
-                done_at_start.add(h)
-            else:
-                sched.add(h, masks[h], ds.C, alpha, f, n_iter0=n_iter,
-                          max_iter=max_iter)
-        else:
-            sched.add(h, masks[h], ds.C, jnp.zeros(n, K.dtype), -y,
-                      max_iter=max_iter)
+        plan.lane(h, train_mask=masks[h], C=ds.C, alpha0=zeros, f0=-y,
+                  max_iter=max_iter)
+
+    checkpoint = None
+    if checkpoint_manager is not None:
+        # tol and max_iter are part of the run identity: retired lanes
+        # carry fixed points at the snapshot's tolerance/budget, so
+        # resuming under different solver parameters would mix convergence
+        # criteria across lanes
+        checkpoint = StudyCheckpoint(
+            manager=checkpoint_manager, every=checkpoint_every,
+            retain_class="batch", phase="batch_mid", base_step=_BATCH_BASE,
+            meta={"k": k, "dataset": ds.name, "seed": seed, "tol": tol,
+                  "max_iter": max_iter, "method": "cold_batched_repacked"})
 
     t0 = time.perf_counter()
-    results = sched.run()
-    jax.block_until_ready([results[h].alpha for h in results])
+    sres = run_plan(plan, checkpoint=checkpoint)
     solve_time = time.perf_counter() - t0
-    if checkpoint_manager is not None:
-        checkpoint_manager.wait()
 
+    done_at_start = sres.restored
     live = max(k - len(done_at_start), 1)
     folds = []
     for h in range(k):
-        res = results[h]
+        res = sres.results[h]
         correct, total, obj = _eval_fold(K, y, chunks, h, res, ds.C)
         folds.append(FoldStat(
             fold=h, seed_from=-1, n_iter=int(res.n_iter),
@@ -499,7 +479,7 @@ def run_cv_batched(ds: SVMDataset, k: int = 10, tol: float = 1e-3,
             converged=bool(res.converged), restored=h in done_at_start))
     return CVReport(dataset=ds.name, method="cold_batched_repacked", k=k,
                     n=n, kernel_time=kernel_time, folds=folds,
-                    occupancy=sched.occupancy)
+                    occupancy=sres.occupancy)
 
 
 def _result_from_tree(tree):
@@ -512,11 +492,21 @@ def _result_from_tree(tree):
 
 
 def run_loo(ds: SVMDataset, method: str = "sir", rounds: int | None = None,
-            tol: float = 1e-3, max_iter: int = 2_000_000,
-            seed: int = 0) -> dict:
+            tol: float = 1e-3, max_iter: int = 2_000_000, seed: int = 0,
+            chunk_iters: int = 4096, max_width: int | None = None,
+            checkpoint_manager=None, checkpoint_every: int = 1) -> dict:
     """Leave-one-out CV (paper suppl. Fig. 2). AVG/TOP seed every round from
     the full-data SVM; ATO/MIR/SIR chain round h from round h-1 (T = the
-    instance returned, R = the instance removed); cold starts from zero."""
+    instance returned, R = the instance removed); cold starts from zero.
+
+    The protocol is one plan: the full-data solve is a lane, chain rounds
+    are dependency edges carrying the ``"fold"`` transform, and AVG/TOP
+    rounds all depend on the full lane only — so those fan out through the
+    pool's repacked dispatch instead of the old sequential-only loop, and
+    a checkpoint manager gives mid-study resume (plan-keyed ``"study"``
+    records) for free."""
+    if method not in ("cold", "avg", "top", "ato", "mir", "sir"):
+        raise ValueError(f"unknown LOO method {method!r}")
     X = jnp.asarray(ds.X)
     y = jnp.asarray(ds.y, jnp.float64)
     n = ds.n
@@ -524,43 +514,47 @@ def run_loo(ds: SVMDataset, method: str = "sir", rounds: int | None = None,
 
     t_start = time.perf_counter()
     K = kernel_matrix(X, X, kind="rbf", gamma=ds.gamma)
-    # full-data SVM (shared by AVG/TOP; also round -1 for the chain methods)
-    full = smo_solve(K, y, jnp.ones(n, bool), ds.C, jnp.zeros(n, K.dtype),
-                     -y, tol=tol, max_iter=max_iter)
-    base_iters = int(full.n_iter)
 
-    total_iters, correct = 0, 0
-    prev = full
-    prev_t = None  # index held out in the previous round (chain methods)
-    order = np.arange(rounds)
-    for t in order:
-        t_j = jnp.asarray(t)
-        mask = jnp.ones(n, bool).at[t_j].set(False)
+    plan = Plan(sources={"loo": DenseKernel(K)}, y=y, tol=tol,
+                chunk_iters=chunk_iters, max_width=max_width)
+    zeros = jnp.zeros(n, K.dtype)
+    # full-data SVM (shared by AVG/TOP; also round -1 for the chain methods)
+    plan.lane("full", train_mask=jnp.ones(n, bool), C=ds.C, alpha0=zeros,
+              f0=-y, max_iter=max_iter)
+    for t in range(rounds):
+        mask = jnp.ones(n, bool).at[t].set(False)
+        common = dict(train_mask=mask, C=ds.C, max_iter=max_iter)
         if method == "cold":
-            alpha0, f0 = jnp.zeros(n, K.dtype), -y
+            plan.lane(t, alpha0=zeros, f0=-y, **common)
         elif method in ("avg", "top"):
-            fn = seeding.avg_seed_loo if method == "avg" else seeding.top_seed_loo
-            alpha0 = fn(K, y, ds.C, full.alpha, t_j)
-            f0 = init_f(K, y, alpha0)
-        else:  # chain: ato / mir / sir
-            if prev_t is None:
-                # first round: remove t from the full SVM (AVG-style entry)
-                alpha0 = seeding.avg_seed_loo(K, y, ds.C, full.alpha, t_j)
-            else:
-                S = jnp.asarray(np.delete(np.arange(n), [prev_t, t]))
-                alpha0 = seeding.SEEDERS[method](
-                    K, y, ds.C, prev, S, jnp.asarray([t]),
-                    jnp.asarray([prev_t]))
-            f0 = init_f(K, y, alpha0)
-        res = smo_solve(K, y, mask, ds.C, alpha0, f0, tol=tol,
-                        max_iter=max_iter)
-        total_iters += int(res.n_iter)
-        b = bias_from_solution(res, y, mask, ds.C)
-        pred = predict(K[t_j][None, :], y, res.alpha, b)
-        correct += int(pred[0] == y[t_j])
-        prev, prev_t = res, t
+            plan.lane(t, dep="full", transform=f"loo_{method}",
+                      params={"t": t}, **common)
+        elif t == 0:
+            # first round: remove t from the full SVM (AVG-style entry)
+            plan.lane(0, dep="full", transform="loo_avg", params={"t": 0},
+                      **common)
+        else:
+            S = np.delete(np.arange(n), [t - 1, t])
+            plan.lane(t, dep=t - 1, transform="fold",
+                      params=dict(method=method, S_idx=jnp.asarray(S),
+                                  R_idx=jnp.asarray([t]),
+                                  T_idx=jnp.asarray([t - 1])), **common)
+        plan.evaluate(t, np.asarray([t]))
+
+    checkpoint = None
+    if checkpoint_manager is not None:
+        checkpoint = StudyCheckpoint(
+            manager=checkpoint_manager, every=checkpoint_every,
+            meta={"bench": "loo", "dataset": ds.name, "method": method,
+                  "rounds": rounds, "seed": seed, "tol": tol,
+                  "max_iter": max_iter})
+
+    sres = run_plan(plan, checkpoint=checkpoint)
+    total_iters = sum(sres.stats[t].n_iter for t in range(rounds))
+    correct = sum(sres.evals[t][0] for t in range(rounds))
     elapsed = time.perf_counter() - t_start
     return {"dataset": ds.name, "method": method, "rounds": rounds,
-            "base_iterations": base_iters, "iterations": total_iters,
+            "base_iterations": sres.stats["full"].n_iter,
+            "iterations": total_iters,
             "elapsed_s": round(elapsed, 4),
             "accuracy": round(correct / rounds, 4)}

@@ -1,46 +1,50 @@
 """(C, gamma) hyper-parameter grid search over alpha-seeded k-fold CV.
 
 The paper warm-starts fold h+1 from fold h. A hyper-parameter grid has two
-more warm-start axes, and one big reuse axis, which this driver exploits on
-top of the unified engine:
+more warm-start axes, and one big reuse axis, which this driver exploits as
+ONE Study plan (``repro.core.study``):
 
 * **kernel reuse** — the RBF kernel matrix depends on gamma only, so every
   C cell (and every fold) of a gamma row shares one ``kernel_matrix`` call;
+  each gamma's matrix is one *kernel source* of the plan;
 * **C-adjacent seeding** (``seed_across_C=True``) — fold 0 of cell
-  (C_m, gamma) warm-starts from fold 0 of (C_{m-1}, gamma) via
-  ``seeding.scale_seed_C`` (bounded-SV alphas scale ~linearly with C);
-* **lane-scheduled concurrency** — every (cell, fold) solve is one lane in
-  a ``LaneScheduler`` (DESIGN.md §Lane scheduler). Fold-chain edges are
-  lane *dependencies* carrying the seed transform (SIR/MIR via ``SEEDERS``,
-  ATO via the jittable ramp, ``scale_seed_C`` along the C axis), so the
-  row no longer barriers at each fold: cell A proceeds to fold h+1 the
-  moment its own fold h retires, while cell B still iterates on fold h.
-  Converged lanes retire between chunks and the live batch is repacked,
-  so device work tracks the sum of per-lane iterations. For
-  ``method="cold"`` every lane is independent (k * n_C cold lanes).
+  (C_m, gamma) warm-starts from fold 0 of (C_{m-1}, gamma) via the
+  ``"scale_C"`` transform (bounded-SV alphas scale ~linearly with C);
+* **cross-gamma pooling** (``pool="cross_gamma"``, the default) — every
+  (gamma, cell, fold) solve is one lane of a single multi-source
+  ``LanePool``: lanes carry their gamma's source key, packing buckets by
+  (source, width), and admission is shared across sources. A straggler
+  cell no longer bounds its gamma row's wall-clock — cells from OTHER
+  gammas fill the schedule while it converges. ``pool="per_gamma"`` keeps
+  the PR 3 row-scheduler baseline (one pool per gamma row; the
+  ``grid_pooled`` benchmark row compares the two), and per-lane results
+  are bit-identical either way — a lane's iterate sequence depends only on
+  its own (source, mask, C, state).
 
 The fold chain inside a cell stays sequential — that is the paper's
-algorithm — but the grid turns its breadth axes into scheduler lanes.
+algorithm — but the grid turns its breadth axes into scheduler lanes:
+lane (gi, ci, h) depends on (gi, ci, h-1) through the method's ``"fold"``
+transform, so cells advance through their fold chains independently.
 
-Per-row evaluation is vectorized: one jitted vmap computes every lane's
-held-out correct-count (bias + predict) on device, and a single transfer
-brings back (correct, n_iter, converged) for the whole row — the old
-per-(cell, fold) ``int(...)`` round trips are gone.
+Per-lane evaluation is declared as plan ``EvalSpec``s: one jitted vmap per
+(gamma, test-size) group computes every lane's held-out correct-count on
+device, and a single transfer brings the counts back.
+
+With a checkpoint manager (cross-gamma pool only), the whole grid
+checkpoints as one study (plan-keyed ``"study"`` records, lane ids stable
+under resume): a killed grid resumes every cell's exact iterate sequence.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import seeding
 from repro.core.cv import _fold_masks, _transition_idx
+from repro.core.study import Plan, StudyCheckpoint, run_plan
 from repro.data.svm_suite import SVMDataset, kfold_chunks
-from repro.svm import (DenseKernel, LaneScheduler, bias_from_solution,
-                       init_f, kernel_matrix, predict)
+from repro.svm import DenseKernel, kernel_matrix
 
 
 @dataclasses.dataclass
@@ -67,7 +71,9 @@ class GridReport:
     seed_time: float
     solve_time: float
     cells: list[GridCell]
-    #: aggregated LaneScheduler width stats across gamma rows
+    #: LanePool width stats; the cross-gamma pool reports ``per_source``
+    #: live widths (one entry per gamma), the per-gamma baseline aggregates
+    #: its row pools
     occupancy: dict | None = None
 
     @property
@@ -83,19 +89,6 @@ class GridReport:
                  "iterations": c.iterations,
                  "accuracy": round(c.accuracy, 4),
                  "converged": c.converged} for c in self.cells]
-
-
-@jax.jit
-def _eval_lanes_jit(K, y, test_idx, train_masks, Cs, res):
-    """Held-out correct-count for a batch of lanes — the same
-    bias_from_solution + predict pipeline as the sequential CV path,
-    vmapped so the whole gamma row is ONE device program."""
-    def one(ti, mask, C, r):
-        b = bias_from_solution(r, y, mask, C)
-        pred = predict(K[ti], y, r.alpha, b)
-        return jnp.sum(pred == y[ti])
-
-    return jax.vmap(one)(test_idx, train_masks, Cs, res)
 
 
 def _merge_occupancy(rows: list[dict]) -> dict | None:
@@ -116,11 +109,42 @@ def _merge_occupancy(rows: list[dict]) -> dict | None:
     }
 
 
+def _row_lanes(plan: Plan, gi: int, Cs, masks, transitions, method: str,
+               seed_across_C: bool, max_iter: int, zeros, y, chunks) -> None:
+    """Declare one gamma row's lane sub-graph (cells x folds) plus its
+    evaluations on ``plan``; lane ids are (gamma index, C index, fold)."""
+    k = masks.shape[0]
+    for ci, C in enumerate(Cs):
+        if method != "cold" and seed_across_C and ci > 0:
+            plan.lane((gi, ci, 0), source=gi, train_mask=masks[0], C=C,
+                      dep=(gi, ci - 1, 0), transform="scale_C",
+                      params=dict(C_old=Cs[ci - 1], train_mask=masks[0]),
+                      max_iter=max_iter)
+        else:
+            plan.lane((gi, ci, 0), source=gi, train_mask=masks[0], C=C,
+                      alpha0=zeros, f0=-y, max_iter=max_iter)
+        for h in range(1, k):
+            if method == "cold":
+                plan.lane((gi, ci, h), source=gi, train_mask=masks[h], C=C,
+                          alpha0=zeros, f0=-y, max_iter=max_iter)
+            else:
+                S_idx, R_idx, T_idx = transitions[h]
+                plan.lane((gi, ci, h), source=gi, train_mask=masks[h], C=C,
+                          dep=(gi, ci, h - 1), transform="fold",
+                          params=dict(method=method, S_idx=S_idx,
+                                      R_idx=R_idx, T_idx=T_idx),
+                          max_iter=max_iter)
+        for h in range(k):
+            plan.evaluate((gi, ci, h), chunks[h])
+
+
 def run_grid(ds: SVMDataset, Cs, gammas, k: int = 10, method: str = "sir",
              tol: float = 1e-3, max_iter: int = 5_000_000, seed: int = 0,
              seed_across_C: bool = False, chunk_iters: int = 4096,
              kernel_backend: str = "jnp", lane_quantum: int = 4,
-             max_width: int | None = None) -> GridReport:
+             max_width: int | None = None, pool: str = "cross_gamma",
+             checkpoint_manager=None,
+             checkpoint_every: int = 1) -> GridReport:
     """Cross-validate every (C, gamma) cell; returns per-cell accuracy and
     iteration counts (``GridReport.best()`` picks the winner).
 
@@ -130,12 +154,22 @@ def run_grid(ds: SVMDataset, Cs, gammas, k: int = 10, method: str = "sir",
     trades fold-0 concurrency for warm starts, which wins when C values
     are dense (adjacent cells share most of their support vectors).
 
-    Each gamma row is one LaneScheduler run: lane (ci, h) depends on
-    (ci, h-1) through the method's seed transform, so cells advance
-    through their fold chains independently — no per-fold row barrier —
-    and per-cell results match ``run_cv`` on the same hyper-parameters
-    (same seeders, same engine, bit-identical solves).
+    ``pool`` picks the schedule: ``"cross_gamma"`` (default) runs the whole
+    grid as ONE multi-source lane pool — no per-row barrier, one study
+    checkpoint; ``"per_gamma"`` runs one pool per gamma row (the historical
+    schedule, kept as the benchmark baseline). Per-cell results match
+    ``run_cv`` on the same hyper-parameters under either pool (same
+    seeders, same engine, bit-identical solves).
+
+    Note the cross-gamma pool materializes every gamma's kernel matrix up
+    front (len(gammas) * n^2 * 8 bytes); at memory-bound scale, fall back
+    to ``pool="per_gamma"`` or shard the gamma axis across studies.
     """
+    if pool not in ("cross_gamma", "per_gamma"):
+        raise ValueError(f"unknown pool {pool!r}")
+    if checkpoint_manager is not None and pool != "cross_gamma":
+        raise ValueError("grid checkpointing is plan-keyed and needs the "
+                         "cross-gamma pool (one study = one record stream)")
     Cs = sorted(float(c) for c in Cs)
     gammas = [float(g) for g in gammas]
     m = len(Cs)
@@ -149,78 +183,61 @@ def run_grid(ds: SVMDataset, Cs, gammas, k: int = 10, method: str = "sir",
     transitions = {} if method == "cold" else \
         {h: _transition_idx(chunks, h - 1, h) for h in range(1, k)}
 
-    kernel_time = seed_time = solve_time = 0.0
-    cells: list[GridCell] = []
-    occupancies: list[dict] = []
-
-    for gamma in gammas:
+    kernel_time = 0.0
+    sources = {}
+    for gi, gamma in enumerate(gammas):
         t0 = time.perf_counter()
         K = kernel_matrix(X, X, kind="rbf", gamma=gamma,
                           backend=kernel_backend)[:n][:, :n]
         K.block_until_ready()
         kernel_time += time.perf_counter() - t0
+        sources[gi] = DenseKernel(K)
+    zeros = jnp.zeros(n, jnp.float64)
 
-        sched = LaneScheduler(DenseKernel(K), y, tol=tol,
-                              chunk_iters=chunk_iters,
-                              lane_quantum=lane_quantum,
-                              max_width=max_width)
-        zeros = jnp.zeros(n, K.dtype)
-        seeder = seeding.SEEDERS[method]
-        for ci, C in enumerate(Cs):
-            if method != "cold" and seed_across_C and ci > 0:
-                def c_seed(prev, C_old=Cs[ci - 1], C_new=C):
-                    a0 = seeding.scale_seed_C(prev.alpha, y, C_old, C_new,
-                                              masks[0])
-                    return a0, init_f(K, y, a0)
-                sched.add((ci, 0), masks[0], C, dep=(ci - 1, 0),
-                          seed_fn=c_seed, max_iter=max_iter)
-            else:
-                sched.add((ci, 0), masks[0], C, zeros, -y, max_iter=max_iter)
-            for h in range(1, k):
-                if method == "cold":
-                    sched.add((ci, h), masks[h], C, zeros, -y,
-                              max_iter=max_iter)
-                    continue
-                S_idx, R_idx, T_idx = transitions[h]
+    def make_plan(keys) -> Plan:
+        plan = Plan(sources={gi: sources[gi] for gi in keys}, y=y, tol=tol,
+                    chunk_iters=chunk_iters, lane_quantum=lane_quantum,
+                    max_width=max_width)
+        for gi in keys:
+            _row_lanes(plan, gi, Cs, masks, transitions, method,
+                       seed_across_C, max_iter, zeros, y, chunks)
+        return plan
 
-                def fold_seed(prev, C=C, S=S_idx, R=R_idx, T=T_idx):
-                    a0 = seeder(K, y, C, prev, S, R, T)
-                    return a0, init_f(K, y, a0)
-                sched.add((ci, h), masks[h], C, dep=(ci, h - 1),
-                          seed_fn=fold_seed, max_iter=max_iter)
+    if pool == "cross_gamma":
+        checkpoint = None
+        if checkpoint_manager is not None:
+            checkpoint = StudyCheckpoint(
+                manager=checkpoint_manager, every=checkpoint_every,
+                meta={"bench": "grid", "dataset": ds.name, "method": method,
+                      "k": k, "seed": seed, "tol": tol, "max_iter": max_iter,
+                      "Cs": Cs, "gammas": gammas,
+                      "seed_across_C": seed_across_C})
+        study_results = [run_plan(make_plan(range(len(gammas))),
+                                  checkpoint=checkpoint)]
+        occupancy = study_results[0].occupancy
+    else:
+        study_results = [run_plan(make_plan([gi]))
+                         for gi in range(len(gammas))]
+        occupancy = _merge_occupancy([s.occupancy for s in study_results])
 
-        t0 = time.perf_counter()
-        results = sched.run()
-        jax.block_until_ready([r.alpha for r in results.values()])
-        row_time = time.perf_counter() - t0
-        seed_time += sched.seed_time
-        solve_time += row_time - sched.seed_time
-        occupancies.append(sched.occupancy)
+    seed_time = sum(s.seed_time for s in study_results)
+    solve_time = sum(s.solve_time for s in study_results)
+    stats = {lid: st for s in study_results for lid, st in s.stats.items()}
+    evals = {lid: ev for s in study_results for lid, ev in s.evals.items()}
 
-        # ---- one batched on-device evaluation + a single transfer ----
-        lane_ids = [(ci, h) for ci in range(m) for h in range(k)]
-        res_row = jax.tree.map(lambda *xs: jnp.stack(xs),
-                               *[results[lid] for lid in lane_ids])
-        hs = np.asarray([h for _, h in lane_ids])
-        test_idx = jnp.asarray(chunks[hs])            # (m*k, n//k)
-        row_masks = masks[jnp.asarray(hs)]
-        row_Cs = jnp.asarray([Cs[ci] for ci, _ in lane_ids], jnp.float64)
-        correct_dev = _eval_lanes_jit(K, y, test_idx, row_masks, row_Cs,
-                                      res_row)
-        correct, iters, conv = jax.device_get(
-            (correct_dev, res_row.n_iter, res_row.converged))
-
-        t_sz = chunks.shape[1]
+    t_sz = chunks.shape[1]
+    cells: list[GridCell] = []
+    for gi, gamma in enumerate(gammas):
         for ci in range(m):
-            sel = slice(ci * k, (ci + 1) * k)
+            lids = [(gi, ci, h) for h in range(k)]
             cells.append(GridCell(
                 C=Cs[ci], gamma=gamma,
-                iterations=int(iters[sel].sum()),
-                acc_correct=int(correct[sel].sum()),
+                iterations=int(sum(stats[lid].n_iter for lid in lids)),
+                acc_correct=int(sum(evals[lid][0] for lid in lids)),
                 acc_total=int(t_sz * k),
-                converged=bool(conv[sel].all())))
+                converged=all(stats[lid].converged for lid in lids)))
 
     return GridReport(dataset=ds.name, method=method, k=k, n=n,
                       kernel_time=kernel_time, seed_time=seed_time,
                       solve_time=solve_time, cells=cells,
-                      occupancy=_merge_occupancy(occupancies))
+                      occupancy=occupancy)

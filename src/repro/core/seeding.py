@@ -576,3 +576,61 @@ def top_seed_loo(K, y, C, alpha, t: jnp.ndarray):
 
 SEEDERS = {"cold": cold_seed, "ato": ato_seed, "ato_ref": ato_seed_ref,
            "mir": mir_seed, "sir": sir_seed}
+
+
+# --------------------------------------------------------------------------
+# named seed transforms — the Study API's admission vocabulary
+# --------------------------------------------------------------------------
+#
+# A transform maps a retired lane's ``SMOResult`` to the next lane's start
+# point under one shared contract::
+#
+#     alpha0 = TRANSFORMS[name](K, y, C, prev, **params)
+#
+# where (K, y) come from the depending lane's kernel source, C is ITS box
+# bound, and ``params`` are the plan-declared keyword arguments (index
+# sets, the neighbour C, the held-out instance...). Plans reference
+# transforms BY NAME (plus params) instead of closures, so a lane graph is
+# data: it can be rebuilt identically on resume, and the same edge
+# description works for fold chains, C-adjacent grid warm starts and LOO
+# rounds. ``repro.core.study`` finishes the admission by computing
+# ``f0 = init_f(K, y, alpha0)``.
+
+TRANSFORMS: dict[str, callable] = {}
+
+
+def register_transform(name: str):
+    """Register a seed transform under ``name`` (see TRANSFORMS above)."""
+    def deco(fn):
+        TRANSFORMS[name] = fn
+        return fn
+    return deco
+
+
+@register_transform("fold")
+def fold_transform(K, y, C, prev, *, method, S_idx, R_idx, T_idx):
+    """The paper's fold-transition seeders by name: ``method`` picks the
+    SEEDERS entry (ato / ato_ref / mir / sir / cold), the index sets
+    describe the h-1 -> h transition (module docstring)."""
+    return SEEDERS[method](K, y, C, prev, S_idx, R_idx, T_idx)
+
+
+@register_transform("scale_C")
+def scale_C_transform(K, y, C, prev, *, C_old, train_mask):
+    """C-adjacent grid warm start: scale the (C_old, gamma) solution of the
+    SAME fold to this lane's C (``scale_seed_C``)."""
+    return scale_seed_C(prev.alpha, y, C_old, C, train_mask)
+
+
+@register_transform("loo_avg")
+def loo_avg_transform(K, y, C, prev, *, t):
+    """LOO round entry (DeCoste & Wagstaff AVG): remove instance ``t`` from
+    ``prev``'s solution, spreading its mass over the free set."""
+    return avg_seed_loo(K, y, C, prev.alpha, jnp.asarray(t))
+
+
+@register_transform("loo_top")
+def loo_top_transform(K, y, C, prev, *, t):
+    """LOO round entry (Lee et al. TOP): spill instance ``t``'s mass by
+    descending kernel similarity."""
+    return top_seed_loo(K, y, C, prev.alpha, jnp.asarray(t))

@@ -1,0 +1,339 @@
+"""Study API: one declarative lane-graph entry point over a multi-source
+scheduler pool.
+
+The paper's speedups come from chaining solves through seed transforms
+(alpha seeding across folds); Joulani et al. frame incremental-learning CV
+as one dependency structure over reusable partial solutions. This module
+says that structure ONCE, declaratively: a ``Plan`` is a graph of
+``LaneSpec``s (train mask, C, kernel-source key, seed dependency +
+transform name) plus ``EvalSpec``s, and ``run_plan`` executes it on a
+multi-source ``LanePool`` (DESIGN.md §Study API). ``run_cv``,
+``run_cv_batched``, ``run_loo`` and ``run_grid`` are thin plan builders
+over this entry point — bit-identical to their pre-redesign outputs under
+every schedule.
+
+Plan grammar (each lane is exactly one of):
+
+* **start lane** — ``alpha0``/``f0`` (+ optional ``n_iter0`` when resuming
+  a snapshot): dispatched immediately, or held by an ``after`` ordering
+  edge (sequential protocols, e.g. the paper's fold chain, express their
+  order without faking a seed dependency);
+* **dependent lane** — ``dep`` (another lane id) + ``transform`` (a name
+  in ``seeding.TRANSFORMS``) + ``params``: admitted the moment the
+  dependency retires, started at ``transform(K, y, C, dep_result,
+  **params)``. Dependencies may cross kernel sources;
+* **given lane** — ``result``: an already-solved ``SMOResult`` (a restored
+  fold) that participates as a seed dependency but never dispatches.
+
+Because transforms are referenced by NAME + params instead of closures,
+the lane graph is data: the caller rebuilds the identical plan on resume,
+and the checkpoint only has to persist per-lane (alpha, f, n_iter, done)
+keyed by lane id (``StudyCheckpoint``; records default to
+``retain_class="study"``, lane ids are stable under resume, and a snapshot
+written under one schedule shape restores under any other).
+
+``EvalSpec``s declare held-out evaluations; ``run_plan`` batches them into
+one jitted program per (source, test-size) group — a whole study's
+evaluation is a handful of device calls.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import seeding
+from repro.svm.engine import EngineState, finalize
+from repro.svm.scheduler import LanePool
+from repro.svm.smo import init_f
+from repro.svm.svc import bias_from_solution, predict
+
+#: study records live above every run_cv fold step (< _FOLD_STRIDE * k)
+#: and every run_cv_batched batch step (_FOLD_STRIDE**2 + chunks), so all
+#: three record kinds can share one checkpoint directory without step
+#: collisions (``save`` replaces an existing step dir).
+STUDY_BASE = 2 * 1_000_000 ** 2
+
+
+@dataclasses.dataclass
+class LaneSpec:
+    """One node of the lane graph. See the module docstring for which
+    field combinations are legal; ``source`` may be omitted in a
+    single-source plan."""
+    id: Any
+    source: Any = None
+    train_mask: Any = None
+    C: float | None = None
+    alpha0: Any = None
+    f0: Any = None
+    n_iter0: int = 0
+    max_iter: int = 10_000_000
+    dep: Any = None
+    transform: str | None = None
+    params: dict = dataclasses.field(default_factory=dict)
+    after: Any = None
+    result: Any = None
+
+
+@dataclasses.dataclass
+class EvalSpec:
+    """Held-out evaluation of one lane: correct-count of ``predict`` over
+    ``test_idx`` rows of the lane's kernel source."""
+    lane: Any
+    test_idx: Any
+
+
+@dataclasses.dataclass
+class Plan:
+    """A declarative study: kernel sources, the lane graph, evaluations,
+    and the schedule knobs forwarded to the ``LanePool``."""
+    sources: dict
+    y: Any                                # shared labels, or {source_key: y}
+    lanes: list = dataclasses.field(default_factory=list)
+    evals: list = dataclasses.field(default_factory=list)
+    tol: float = 1e-3
+    wss: str = "2"
+    chunk_iters: int = 4096
+    lane_quantum: int = 4
+    max_width: int | None = None
+
+    def lane(self, id, **kwargs) -> LaneSpec:
+        spec = LaneSpec(id=id, **kwargs)
+        self.lanes.append(spec)
+        return spec
+
+    def evaluate(self, lane, test_idx) -> None:
+        self.evals.append(EvalSpec(lane, test_idx))
+
+    def source_key_of(self, spec: LaneSpec) -> Any:
+        if spec.source is not None:
+            return spec.source
+        if len(self.sources) == 1:
+            return next(iter(self.sources))
+        raise ValueError(f"lane {spec.id!r} needs a source key in a "
+                         "multi-source plan")
+
+    def y_of(self, key) -> jnp.ndarray:
+        return self.y[key] if isinstance(self.y, dict) else self.y
+
+
+@dataclasses.dataclass
+class StudyCheckpoint:
+    """Checkpoint wiring for ``run_plan``: every ``every``-th chunk, all
+    admitted lanes' (alpha, f, n_iter, done) are saved stacked in lane-id
+    order under ``retain_class`` at steps counting up from ``base_step``.
+    ``meta`` is the plan identity — verified on resume, so a snapshot from
+    a different study (or different solver parameters, which are part of
+    the run identity: retired lanes carry fixed points at the snapshot's
+    tolerance/budget) is rejected instead of silently mixed in."""
+    manager: Any
+    every: int = 1
+    retain_class: str = "study"
+    phase: str = "study_mid"
+    base_step: int = STUDY_BASE
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class LaneStat:
+    """Per-lane execution account: iterations, convergence, the admission
+    transform's wall time (the paper's "init."), the lane's share of its
+    dispatch chunks, and whether it was restored pre-solved."""
+    n_iter: int
+    converged: bool
+    seed_s: float
+    solve_s: float
+    restored: bool = False
+
+
+@dataclasses.dataclass
+class StudyResult:
+    results: dict                         # lane id -> SMOResult
+    stats: dict                           # lane id -> LaneStat
+    evals: dict                           # lane id -> (correct, total)
+    occupancy: dict
+    seed_time: float
+    solve_time: float                     # pool wall time minus seed_time
+    restored: frozenset                   # lanes already done at pool start
+
+
+@jax.jit
+def _eval_lanes_jit(K, y, test_idx, train_masks, Cs, res):
+    """Held-out correct-count for a batch of lanes — the same
+    bias_from_solution + predict pipeline as the sequential CV path,
+    vmapped so a whole eval group is ONE device program."""
+    def one(ti, mask, C, r):
+        b = bias_from_solution(r, y, mask, C)
+        pred = predict(K[ti], y, r.alpha, b)
+        return jnp.sum(pred == y[ti])
+
+    return jax.vmap(one)(test_idx, train_masks, Cs, res)
+
+
+def _freeze(x):
+    """JSON round-trips tuples as lists; lane ids are hashable keys, so
+    freeze them back on restore."""
+    return tuple(_freeze(v) for v in x) if isinstance(x, list) else x
+
+
+def _make_seed_fn(plan: Plan, spec: LaneSpec):
+    if spec.transform not in seeding.TRANSFORMS:
+        raise ValueError(f"lane {spec.id!r}: unknown transform "
+                         f"{spec.transform!r} (have "
+                         f"{sorted(seeding.TRANSFORMS)})")
+    fn = seeding.TRANSFORMS[spec.transform]
+    key = plan.source_key_of(spec)
+    source = plan.sources[key]
+    K = getattr(source, "K", None)
+    if K is None:
+        raise ValueError(f"lane {spec.id!r}: seed transforms need a dense "
+                         f"kernel source (source {key!r} has no K)")
+    y, C, params = plan.y_of(key), spec.C, dict(spec.params)
+
+    def seed(prev):
+        alpha0 = fn(K, y, C, prev, **params)
+        return alpha0, init_f(K, y, alpha0)
+
+    return seed
+
+
+def run_plan(plan: Plan, *, checkpoint: StudyCheckpoint | None = None,
+             on_result=None, on_lane_chunk=None) -> StudyResult:
+    """Execute a ``Plan`` on one multi-source ``LanePool``.
+
+    ``on_result(lane_id, result)`` streams each lane's ``SMOResult`` the
+    moment it retires (long studies consume results without waiting for
+    the pool to drain); ``on_lane_chunk(lane_id, state)`` observes every
+    live lane between its chunks (the per-lane checkpoint hook legacy
+    drivers use for their own record formats).
+
+    With ``checkpoint``, the newest committed study record is restored
+    first (identity verified against ``checkpoint.meta``): lanes found
+    ``done`` re-enter as results, live lanes resume their exact iterate
+    sequence, and pending lanes re-derive their seeds from the restored
+    results — bit-identical to the uninterrupted run, under ANY schedule
+    shape on either side of the crash.
+    """
+    specs: dict[Any, LaneSpec] = {}
+    for spec in plan.lanes:
+        if spec.id in specs:
+            raise ValueError(f"duplicate lane id {spec.id!r}")
+        specs[spec.id] = spec
+
+    restored: dict[Any, tuple] = {}
+    step0 = 0
+    if checkpoint is not None:
+        snap = checkpoint.manager.restore_latest_of_class(
+            checkpoint.retain_class)
+        if snap is not None:
+            step0, tree, extra = snap
+            want = {"phase": checkpoint.phase, **checkpoint.meta}
+            got = {key: extra.get(key) for key in want}
+            if got != want:
+                raise ValueError(
+                    f"checkpoint at step {step0} belongs to run {got}, "
+                    f"cannot resume it as {want}; point the manager at a "
+                    "fresh directory or delete the stale checkpoints")
+            for i, lid in enumerate(extra["lane_ids"]):
+                restored[_freeze(lid)] = (
+                    jnp.asarray(tree["alpha"][i]), jnp.asarray(tree["f"][i]),
+                    int(tree["n_iter"][i]), bool(tree["done"][i]))
+
+    on_snapshot = None
+    if checkpoint is not None:
+        counter = {"c": max(step0, checkpoint.base_step)}
+
+        def on_snapshot(pool):
+            counter["c"] += 1
+            lane_ids, tree = pool.snapshot_lanes()
+            checkpoint.manager.save(
+                counter["c"], tree,
+                extra_meta={"phase": checkpoint.phase, "lane_ids": lane_ids,
+                            **checkpoint.meta},
+                blocking=False, retain_class=checkpoint.retain_class)
+
+    pool = LanePool(plan.sources, plan.y, tol=plan.tol, wss=plan.wss,
+                    chunk_iters=plan.chunk_iters,
+                    lane_quantum=plan.lane_quantum, max_width=plan.max_width,
+                    on_snapshot=on_snapshot,
+                    snapshot_every=checkpoint.every if checkpoint else 1,
+                    on_result=on_result, on_lane_chunk=on_lane_chunk)
+
+    pre_done: set = set()
+    for spec in plan.lanes:
+        key = plan.source_key_of(spec) if spec.result is None else None
+        if spec.result is not None:
+            pool.add_result(spec.id, spec.result)
+            pre_done.add(spec.id)
+        elif spec.id in restored:
+            alpha, f, n_it, done = restored[spec.id]
+            if done:
+                # a retired lane: re-finalize its snapshot state (optimality
+                # is a pure function of alpha/f, so converged/b_up/b_low
+                # come back identical to the pre-crash result)
+                state = EngineState(alpha, f, jnp.asarray(n_it, jnp.int64),
+                                    jnp.ones((), bool))
+                pool.add_result(spec.id, finalize(
+                    state, plan.y_of(key), spec.train_mask, spec.C, plan.tol))
+                pre_done.add(spec.id)
+            else:
+                # mid-flight at the crash: it was already admitted, so its
+                # plan-declared edges are history — resume the state as-is
+                pool.add(spec.id, spec.train_mask, spec.C, alpha, f,
+                         source=key, n_iter0=n_it, max_iter=spec.max_iter)
+        elif spec.dep is not None:
+            pool.add(spec.id, spec.train_mask, spec.C, source=key,
+                     dep=spec.dep, seed_fn=_make_seed_fn(plan, spec),
+                     max_iter=spec.max_iter, after=spec.after)
+        else:
+            pool.add(spec.id, spec.train_mask, spec.C, spec.alpha0, spec.f0,
+                     source=key, n_iter0=spec.n_iter0,
+                     max_iter=spec.max_iter, after=spec.after)
+
+    t0 = time.perf_counter()
+    results = pool.run()
+    jax.block_until_ready([results[s.id].alpha for s in plan.lanes])
+    wall = time.perf_counter() - t0
+    if checkpoint is not None:
+        checkpoint.manager.wait()
+
+    stats = {}
+    for spec in plan.lanes:
+        res = results[spec.id]
+        seed_s, solve_s = pool.lane_times(spec.id)
+        stats[spec.id] = LaneStat(
+            n_iter=int(res.n_iter), converged=bool(res.converged),
+            seed_s=seed_s, solve_s=solve_s, restored=spec.id in pre_done)
+
+    # ---- evaluations: one jitted program per (source, test-size) group ----
+    evals: dict[Any, tuple[int, int]] = {}
+    groups: dict[tuple, list[EvalSpec]] = {}
+    for ev in plan.evals:
+        spec = specs[ev.lane]
+        t_sz = int(np.asarray(ev.test_idx).shape[0])
+        groups.setdefault((plan.source_key_of(spec), t_sz), []).append(ev)
+    for (key, t_sz), evs in groups.items():
+        source, y = plan.sources[key], plan.y_of(key)
+        if getattr(source, "K", None) is None:
+            raise ValueError(f"EvalSpec on lane {evs[0].lane!r}: evaluation "
+                             f"needs a dense kernel source (source {key!r} "
+                             "has no K)")
+        res = jax.tree.map(lambda *xs: jnp.stack(xs),
+                           *[results[ev.lane] for ev in evs])
+        test_idx = jnp.asarray(np.stack([np.asarray(ev.test_idx)
+                                         for ev in evs]))
+        masks = jnp.stack([specs[ev.lane].train_mask for ev in evs])
+        Cs = jnp.asarray([specs[ev.lane].C for ev in evs], jnp.float64)
+        correct = jax.device_get(
+            _eval_lanes_jit(source.K, y, test_idx, masks, Cs, res))
+        for ev, c in zip(evs, correct):
+            evals[ev.lane] = (int(c), t_sz)
+
+    return StudyResult(results=results, stats=stats, evals=evals,
+                       occupancy=pool.occupancy, seed_time=pool.seed_time,
+                       solve_time=wall - pool.seed_time,
+                       restored=frozenset(pre_done))

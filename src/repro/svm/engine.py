@@ -417,14 +417,16 @@ def smo_chunk(source, y, train_mask, C, state: EngineState, *,
 
 
 @functools.partial(jax.jit, static_argnames=("n_iters", "wss"))
-def _chunk_jit(source, y, train_mask, C, tol, it_cap, state, n_iters, wss):
+def chunk_jit(source, y, train_mask, C, tol, it_cap, state, n_iters, wss):
+    """Jitted single-lane chunk — the dispatch unit of ``solve`` and the
+    lane pool's width-1 (sequential-program) path."""
     return smo_chunk(source, y, train_mask, C, state, n_iters=n_iters,
                      wss=wss, tol=tol, it_cap=it_cap)
 
 
 @functools.partial(jax.jit, static_argnames=("n_iters", "wss"))
-def _chunk_batched_jit(source, y, train_masks, Cs, tol, it_caps, states,
-                       n_iters, wss):
+def chunk_batched_jit(source, y, train_masks, Cs, tol, it_caps, states,
+                      n_iters, wss):
     """One chunk over a batch of folds: a single top-level while_loop whose
     body vmaps ``_step`` over (train_mask, C, it_cap, state); source and y
     are shared across the batch. Per-fold convergence masking comes from the
@@ -467,10 +469,21 @@ def init_state(source, y, train_mask, alpha0, f0,
                        jnp.asarray(n_iter0, jnp.int64), jnp.zeros((), bool))
 
 
-def _finalize(state: EngineState, y, train_mask, C, tol) -> SMOResult:
+def finalize(state: EngineState, y, train_mask, C, tol) -> SMOResult:
+    """Close an ``EngineState`` into an ``SMOResult``: optimality is a pure
+    function of (alpha, f), so finalizing a restored snapshot reproduces the
+    pre-crash result exactly (the lane pool and the Study resume rely on
+    this)."""
     b_up, b_low, gap = optimality(state.alpha, state.f, y, train_mask, C)
     return SMOResult(alpha=state.alpha, f=state.f, n_iter=state.n_iter,
                      converged=gap <= tol, b_up=b_up, b_low=b_low)
+
+
+# historical private names, kept for callers/tests written before the lane
+# pool made these part of the public dispatch vocabulary
+_chunk_jit = chunk_jit
+_chunk_batched_jit = chunk_batched_jit
+_finalize = finalize
 
 
 def solve(source, y, train_mask, C, alpha0, f0, *, tol: float = 1e-3,

@@ -1,51 +1,63 @@
-"""Lane scheduler: repacked batched dispatch with incremental admission.
+"""Lane pool: multi-source repacked batched dispatch with incremental
+admission.
 
 The engine's batched driver (``engine.solve_batched``) advances every lane
 of a fixed-width batch until the LAST lane converges — converged lanes
 freeze but still flow through the vmapped body, so on CPU the batch was
 measured slower than the sequential fold loop (DESIGN.md §Batched folds).
-This module replaces the fixed batch with a **schedule**:
+This module replaces the fixed batch with a **schedule** over a pool of
+lanes that may span SEVERAL kernel sources (e.g. one RBF matrix per gamma
+of a hyper-parameter grid):
 
 * **repacking** — between chunks, converged lanes are *retired* (their
-  state finalized into an ``SMOResult`` and scattered back to the caller's
-  slot by original lane id) and the live lanes gathered into a compact
-  batch, so device work tracks ``sum_h n_iter_h`` instead of
-  ``width * max_h n_iter_h``;
-* **bucketing** — the packed width is rounded up to a multiple of
-  ``lane_quantum`` (widths 1 and 2 stay exact), padding with inert
+  state finalized into an ``SMOResult`` keyed by original lane id) and the
+  live lanes gathered into a compact batch, so device work tracks
+  ``sum_h n_iter_h`` instead of ``width * max_h n_iter_h``;
+* **source bucketing** — every lane carries a *source key*; the selected
+  lanes are grouped by source and ONE batched program is dispatched per
+  (source, width) bucket. Lanes of different sources never share a
+  program (their kernel operands differ), but they share the pool's
+  admission, width budget and fairness accounting — this is what
+  dissolves the per-gamma row barrier in ``run_grid``;
+* **width bucketing** — a group's packed width is rounded up to a multiple
+  of ``lane_quantum`` (widths 1 and 2 stay exact), padding with inert
   ``done`` lanes, so distinct jit programs stay O(peak_width / quantum)
-  instead of one retrace per live-width;
-* **degradation** — a dispatch width of 1 uses the *single-lane*
-  sequential program (the same ``_chunk_jit`` the scalar ``solve`` path
-  uses), so a straggler tail costs sequential-solver time, not a vmapped
-  batch of one;
-* **width capping** (``max_width``) — the dispatch width is bounded by a
-  backend cost model: XLA CPU pays a ~1.5-2x per-lane-iteration penalty
-  for ANY vmapped width (a thread-pool fork/join per parallel fusion, the
-  (w, n) state leaving L2) — measured flat from width 2 up — so on CPU the
-  only schedule at parity with the sequential fold loop is width 1: the
-  scheduler round-robins lanes through the sequential program at chunk
-  granularity (total device work still tracks ``sum_h n_iter_h``; lanes
-  beyond the cap park for one chunk, least-served first). Accelerator
-  backends amortize dispatch overhead across lanes and default to
-  unbounded width;
+  per source shape instead of one retrace per live-width;
+* **degradation** — a group of 1 uses the *single-lane* sequential
+  program (the same ``chunk_jit`` the scalar ``solve`` path uses), so a
+  straggler tail costs sequential-solver time, not a vmapped batch of one;
+* **width capping** (``max_width``) — the TOTAL dispatch width per chunk
+  is bounded by a backend cost model: XLA CPU pays a ~1.5-2x
+  per-lane-iteration penalty for ANY vmapped width (measured flat from
+  width 2 up), so on CPU the default is width-1 round-robin through the
+  sequential program (total device work still tracks
+  ``sum_h n_iter_h``). The capped rotation is **source-sticky**: the most
+  recently dispatched source keeps the width budget while it has live
+  lanes (its kernel matrix stays cache-hot; a per-chunk rotation across
+  sources restreams a cold ~n^2 operand every chunk — measured ~5%
+  slower), least-served lanes first within it. Accelerator backends
+  amortize dispatch overhead across lanes and default to unbounded width;
 * **admission** — a lane may be added with a *dependency* on another
   lane's result plus a seed transform (``seed_fn(prev_result) ->
-  (alpha0, f0)``, e.g. a ``SEEDERS`` entry + ``init_f``). It is admitted
-  into the live batch the moment its dependency retires — so the CV grid's
-  per-cell fold chains interleave instead of barriering a whole row at
-  each fold (cell A solves fold h+1 while cell B still iterates fold h).
+  (alpha0, f0)``), and/or a pure *ordering* edge (``after``) that holds an
+  explicitly-started lane until another lane retires. Dependencies may
+  cross sources (a gamma-row cell seeding from its C-neighbour in another
+  bucket is legal); a lane is admitted the moment its edges retire.
 
 Because each lane's iterate sequence depends only on its own
-(mask, C, state) — the engine body freezes ``done`` lanes and ``vmap``
-keeps lanes independent — per-lane results are **bit-identical** to
-sequential ``engine.solve`` runs regardless of the packing schedule
-(covered by tests/test_scheduler.py).
+(source, mask, C, state) — the engine body freezes ``done`` lanes, lanes of
+one program share one source, and ``vmap`` keeps lanes independent —
+per-lane results are **bit-identical** to sequential ``engine.solve`` runs
+regardless of the packing schedule and of which sources share the pool
+(covered by tests/test_scheduler.py and tests/test_study.py).
 
 Checkpointing: ``snapshot_lanes()`` serializes every admitted lane's
 (alpha, f, n_iter, done) stacked **in lane-id order**, not packed
 position, so a mid-batch snapshot survives any repack/resume boundary;
-``core/cv.py:run_cv_batched`` wires it to the checkpoint manager.
+``core/study.py:run_plan`` wires it to the checkpoint manager.
+
+``LaneScheduler`` remains as the single-source facade (one source, one
+label vector) used by callers predating the pool.
 """
 from __future__ import annotations
 
@@ -57,8 +69,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.svm.engine import (EngineState, SMOResult, _chunk_batched_jit,
-                              _chunk_jit, _finalize, init_state)
+from repro.svm.engine import (EngineState, SMOResult, chunk_batched_jit,
+                              chunk_jit, finalize, init_state)
 
 
 def bucket_width(w: int, quantum: int = 4) -> int:
@@ -75,61 +87,104 @@ def bucket_width(w: int, quantum: int = 4) -> int:
 @dataclasses.dataclass
 class _Lane:
     id: Any
+    source: Any                           # key into the pool's sources
     train_mask: jnp.ndarray
     C: float
     max_iter: int
     state: EngineState | None = None      # admitted, not yet retired
     dep: Any = None                       # lane id this lane seeds from
     seed_fn: Callable | None = None       # SMOResult -> (alpha0, f0)
+    after: Any = None                     # ordering-only admission edge
+    alpha0: Any = None                    # deferred start (held by ``after``)
+    f0: Any = None
+    n_iter0: int = 0
     result: SMOResult | None = None       # set at retirement
     served: int = 0                       # chunks dispatched (park fairness)
+    seed_s: float = 0.0                   # admission-transform wall time
+    solve_s: float = 0.0                  # dispatch wall time attributed here
 
 
-class LaneScheduler:
-    """Queue of independent solve lanes driven to convergence by repacked,
-    bucketed, incrementally-admitted chunk dispatch over one shared kernel
-    source. See the module docstring for the scheduling policy; per-lane
-    results are bit-identical to sequential solves."""
+class LanePool:
+    """Queue of independent solve lanes over MULTIPLE kernel sources,
+    driven to convergence by repacked, source-bucketed, incrementally-
+    admitted chunk dispatch. See the module docstring for the scheduling
+    policy; per-lane results are bit-identical to sequential solves.
 
-    def __init__(self, source, y, *, tol: float = 1e-3, wss: str = "2",
+    ``sources`` maps a source key to a kernel source; ``y`` is the label
+    vector shared by every source, or a dict keyed like ``sources`` when
+    sources carry different instance sets. ``on_result(lane_id, result)``
+    streams retirements (long studies consume results as they land);
+    ``on_lane_chunk(lane_id, state)`` observes every still-live lane after
+    each of its chunks (the per-lane mid-checkpoint hook).
+    """
+
+    def __init__(self, sources, y, *, tol: float = 1e-3, wss: str = "2",
                  chunk_iters: int = 2048, lane_quantum: int = 4,
                  max_width: int | None = None,
-                 on_snapshot=None, snapshot_every: int = 1):
-        if source.fused and wss == "2":
-            raise ValueError("fused kernel sources require WSS-1 (wss='1')")
+                 on_snapshot=None, snapshot_every: int = 1,
+                 on_result=None, on_lane_chunk=None):
+        if not isinstance(sources, dict) or not sources:
+            raise ValueError("sources must be a non-empty {key: source} dict")
+        for key, src in sources.items():
+            if src.fused and wss == "2":
+                raise ValueError(
+                    f"source {key!r} is fused and requires WSS-1 (wss='1')")
         if max_width is None:
             # backend cost model (see module docstring): CPU's vmapped
             # batch loses at every width > 1, accelerators want full width
             max_width = 1 if jax.default_backend() == "cpu" else 0
         self.max_width = int(max_width)   # 0 = unbounded
-        self.source = source
-        self.y = y
+        self.sources = dict(sources)
+        self._ys = {k: (y[k] if isinstance(y, dict) else y)
+                    for k in self.sources}
         self.tol = tol
         self.wss = wss
         self.chunk_iters = int(chunk_iters)
         self.lane_quantum = int(lane_quantum)
         self.on_snapshot = on_snapshot
         self.snapshot_every = max(int(snapshot_every), 1)
+        self.on_result = on_result
+        self.on_lane_chunk = on_lane_chunk
         self._lanes: dict[Any, _Lane] = {}
         self._order: list[Any] = []       # insertion order = packing order
         self.results: dict[Any, SMOResult] = {}
         self.seed_time = 0.0              # admission transforms (paper "init.")
         self.chunk_count = 0
-        self._width_log: list[tuple[int, int]] = []   # (live, packed)/chunk
-        # packed-batch cache: rebuilt only when the live set changes
-        self._packed_ids: tuple | None = None
-        self._packed: tuple | None = None  # (masks, Cs, it_caps, states)
+        self._width_log: list[tuple[int, int]] = []   # (live, dispatched)
+        self._programs: set[tuple] = set()            # (source, width) seen
+        self._src_live: dict[Any, list] = {}          # key -> [sum, n, peak]
+        self._sticky: Any = None          # last dispatched source (affinity)
+        # packed-batch cache per source: rebuilt when a group's membership
+        # changes (the previous pack is evicted — states written back — so
+        # no progress is ever lost to a stale ``lane.state``)
+        self._packed: dict[Any, tuple] = {}  # key -> (ids, payload)
+
+    def y_of(self, source_key) -> jnp.ndarray:
+        return self._ys[source_key]
+
+    def _source_key(self, source) -> Any:
+        if source is not None:
+            if source not in self.sources:
+                raise ValueError(f"unknown source key {source!r}")
+            return source
+        if len(self.sources) == 1:
+            return next(iter(self.sources))
+        raise ValueError("a multi-source pool needs an explicit source key "
+                         "per lane")
 
     # ---------------------------------------------------------- lane intake
 
     def add(self, lane_id, train_mask, C, alpha0=None, f0=None, *,
-            n_iter0: int = 0, max_iter: int = 10_000_000,
-            dep=None, seed_fn=None) -> None:
+            source=None, n_iter0: int = 0, max_iter: int = 10_000_000,
+            dep=None, seed_fn=None, after=None) -> None:
         """Register a lane. Either give its start point (``alpha0``/``f0``,
         optionally ``n_iter0`` when resuming a snapshot) or a dependency
         (``dep`` = another lane id, ``seed_fn`` mapping that lane's
         ``SMOResult`` to this lane's (alpha0, f0)) — the lane is then
-        admitted when the dependency retires."""
+        admitted when the dependency retires. ``after`` adds a pure
+        ordering edge: the lane (even an explicitly-started one) is held
+        until that lane retires — sequential protocols (the paper's fold
+        chain) express their ordering without faking a seed dependency."""
         if lane_id in self._lanes:
             raise ValueError(f"duplicate lane id {lane_id!r}")
         if (dep is None) == (alpha0 is None):
@@ -139,11 +194,17 @@ class LaneScheduler:
                              "(f0 = init_f(K, y, alpha0))")
         if dep is not None and seed_fn is None:
             raise ValueError("a dependent lane needs a seed_fn")
-        lane = _Lane(id=lane_id, train_mask=train_mask, C=C,
-                     max_iter=int(max_iter), dep=dep, seed_fn=seed_fn)
+        key = self._source_key(source)
+        lane = _Lane(id=lane_id, source=key, train_mask=train_mask, C=C,
+                     max_iter=int(max_iter), dep=dep, seed_fn=seed_fn,
+                     after=after)
         if alpha0 is not None:
-            lane.state = init_state(self.source, self.y, train_mask,
-                                    alpha0, f0, n_iter0=n_iter0)
+            if after is None:
+                lane.state = init_state(self.sources[key], self._ys[key],
+                                        train_mask, alpha0, f0,
+                                        n_iter0=n_iter0)
+            else:   # held: built at admission, when ``after`` retires
+                lane.alpha0, lane.f0, lane.n_iter0 = alpha0, f0, int(n_iter0)
         self._lanes[lane_id] = lane
         self._order.append(lane_id)
 
@@ -152,29 +213,44 @@ class LaneScheduler:
         it participates as a seed dependency but is never dispatched."""
         if lane_id in self._lanes:
             raise ValueError(f"duplicate lane id {lane_id!r}")
-        lane = _Lane(id=lane_id, train_mask=None, C=None, max_iter=0,
-                     result=result)
+        lane = _Lane(id=lane_id, source=None, train_mask=None, C=None,
+                     max_iter=0, result=result)
         self._lanes[lane_id] = lane
         self._order.append(lane_id)
         self.results[lane_id] = result
 
+    def lane_times(self, lane_id) -> tuple[float, float]:
+        """(seed_s, solve_s) wall time attributed to one lane: its admission
+        transform, and its share of every chunk it was dispatched in."""
+        lane = self._lanes[lane_id]
+        return lane.seed_s, lane.solve_s
+
     # ------------------------------------------------------------ scheduling
 
     def _admit(self) -> None:
-        """Admit every pending lane whose dependency has retired: run its
-        seed transform (timed as init/seed work) and build its state."""
+        """Admit every pending lane whose edges have retired: run its seed
+        transform (timed as init/seed work) and build its state."""
         for lane_id in self._order:
             lane = self._lanes[lane_id]
             if lane.state is not None or lane.result is not None:
+                continue
+            if lane.after is not None and lane.after not in self.results:
+                continue
+            src, y = self.sources[lane.source], self._ys[lane.source]
+            if lane.dep is None:          # explicit start held by ``after``
+                lane.state = init_state(src, y, lane.train_mask, lane.alpha0,
+                                        lane.f0, n_iter0=lane.n_iter0)
+                lane.alpha0 = lane.f0 = None
                 continue
             if lane.dep not in self.results:
                 continue
             t0 = time.perf_counter()
             alpha0, f0 = lane.seed_fn(self.results[lane.dep])
             jax.block_until_ready((alpha0, f0))
-            self.seed_time += time.perf_counter() - t0
-            lane.state = init_state(self.source, self.y, lane.train_mask,
-                                    alpha0, f0)
+            dt = time.perf_counter() - t0
+            lane.seed_s += dt
+            self.seed_time += dt
+            lane.state = init_state(src, y, lane.train_mask, alpha0, f0)
 
     def _live(self) -> list[_Lane]:
         return [self._lanes[i] for i in self._order
@@ -182,15 +258,17 @@ class LaneScheduler:
                 and self._lanes[i].result is None]
 
     def _retire(self, lane: _Lane) -> None:
-        lane.result = _finalize(lane.state, self.y, lane.train_mask,
-                                lane.C, self.tol)
+        lane.result = finalize(lane.state, self._ys[lane.source],
+                               lane.train_mask, lane.C, self.tol)
         self.results[lane.id] = lane.result
+        if self.on_result is not None:
+            self.on_result(lane.id, lane.result)
 
-    def _pack(self, live: list[_Lane]) -> None:
-        """Gather the live lanes into a compact batch of bucketed width;
-        pad positions replicate lane 0 with ``done`` set (inert: the engine
-        body passes done lanes through untouched, and the while_loop's
-        ``any(~done)`` ignores them)."""
+    def _pack(self, key, live: list[_Lane]) -> None:
+        """Gather a source group's live lanes into a compact batch of
+        bucketed width; pad positions replicate lane 0 with ``done`` set
+        (inert: the engine body passes done lanes through untouched, and
+        the while_loop's ``any(~done)`` ignores them)."""
         width = bucket_width(len(live), self.lane_quantum)
         states = [ln.state for ln in live]
         masks = [ln.train_mask for ln in live]
@@ -202,18 +280,20 @@ class LaneScheduler:
             masks.append(live[0].train_mask)
             Cs.append(live[0].C)
             caps.append(0)
-        self._packed_ids = tuple(ln.id for ln in live)
-        self._packed = (jnp.stack(masks),
-                        jnp.asarray(Cs, self.source.dtype),
-                        jnp.asarray(caps, jnp.int64),
-                        EngineState.stack(states))
+        payload = (jnp.stack(masks),
+                   jnp.asarray(Cs, self.sources[key].dtype),
+                   jnp.asarray(caps, jnp.int64),
+                   EngineState.stack(states))
+        self._packed[key] = (tuple(ln.id for ln in live), payload)
 
-    def _unpack(self, live: list[_Lane]) -> None:
-        states = self._packed[3]
-        for i, lane in enumerate(live):
-            lane.state = states.lane(i)
-        self._packed_ids = None
-        self._packed = None
+    def _evict(self, key) -> None:
+        """Write a source's packed states back into its lanes and drop the
+        cache — required before the group's membership changes (retire,
+        park rotation, admission) or a member dispatches solo."""
+        ids, payload = self._packed.pop(key)
+        states = payload[3]
+        for i, lane_id in enumerate(ids):
+            self._lanes[lane_id].state = states.lane(i)
 
     def run(self) -> dict[Any, SMOResult]:
         """Drive every lane to retirement; returns {lane_id: SMOResult}."""
@@ -228,24 +308,62 @@ class LaneScheduler:
                         f"lanes {pending} wait on dependencies that never "
                         "retire (missing or cyclic dep)")
                 break
-            selected, parked = live, False
+            selected = live
             if self.max_width and len(live) > self.max_width:
-                # park the overflow for one chunk, least-served lanes first
-                # (stable sort: insertion order breaks ties), so every lane
-                # keeps advancing at chunk granularity
-                selected = sorted(live, key=lambda ln: ln.served)
-                selected = selected[:self.max_width]
-                parked = True
+                # park the overflow for one chunk. Selection is
+                # SOURCE-STICKY: the most recently dispatched source keeps
+                # the width budget while it has live lanes — its kernel
+                # operands stay cache-hot, where a per-chunk rotation
+                # across sources was measured ~5% slower on CPU (each
+                # chunk restreamed a cold ~n^2 kernel matrix). Within the
+                # sticky source (and for any leftover width), least-served
+                # lanes go first (stable sort: insertion order breaks
+                # ties), so every lane of the serving source keeps
+                # advancing at chunk granularity; other sources advance
+                # when the sticky one drains or leaves width to spare.
+                sticky = [ln for ln in live if ln.source == self._sticky]
+                rest = [ln for ln in live if ln.source != self._sticky]
+                ordered = sorted(sticky, key=lambda ln: ln.served) + \
+                    sorted(rest, key=lambda ln: ln.served)
+                selected = ordered[:self.max_width]
             for lane in selected:
                 lane.served += 1
-            width = (1 if len(selected) == 1
-                     else bucket_width(len(selected), self.lane_quantum))
-            self._width_log.append((len(live), width))
-            if len(selected) == 1:
-                self._step_single(selected[0])
-            else:
-                self._step_batched(selected, flush=parked)
+            groups: dict[Any, list[_Lane]] = {}
+            for lane in selected:
+                groups.setdefault(lane.source, []).append(lane)
+            if len(self.sources) > 1:
+                counts: dict[Any, int] = {}
+                for lane in live:
+                    counts[lane.source] = counts.get(lane.source, 0) + 1
+                for key, c in counts.items():
+                    rec = self._src_live.setdefault(key, [0, 0, 0])
+                    rec[0] += c
+                    rec[1] += 1
+                    rec[2] = max(rec[2], c)
+            # affinity follows the chunk's PRIMARY group (selected[0]'s
+            # source) — not the last group dispatched, which under a split
+            # selection would hand stickiness to the overflow source
+            self._sticky = selected[0].source
+            dispatched = 0
+            for key, lanes in groups.items():
+                width = (1 if len(lanes) == 1
+                         else bucket_width(len(lanes), self.lane_quantum))
+                dispatched += width
+                self._programs.add((key, width))
+                t0 = time.perf_counter()
+                if len(lanes) == 1:
+                    self._step_single(lanes[0])
+                else:
+                    self._step_batched(key, lanes)
+                dt = time.perf_counter() - t0
+                for lane in lanes:
+                    lane.solve_s += dt / len(lanes)
+            self._width_log.append((len(live), dispatched))
             self.chunk_count += 1
+            if self.on_lane_chunk is not None:
+                for lane in selected:
+                    if lane.result is None:
+                        self.on_lane_chunk(lane.id, self._lane_state(lane))
             if self.on_snapshot is not None and \
                     self.chunk_count % self.snapshot_every == 0:
                 self.on_snapshot(self)
@@ -255,29 +373,37 @@ class LaneScheduler:
         """Dispatch width 1: the sequential single-lane program
         (bit-identical to ``engine.solve``'s chunks) — no vmap overhead on
         a straggler or a width-capped round-robin schedule."""
-        lane.state = _chunk_jit(self.source, self.y, lane.train_mask, lane.C,
-                                self.tol, jnp.asarray(lane.max_iter, jnp.int64),
-                                lane.state, n_iters=self.chunk_iters,
-                                wss=self.wss)
+        cached = self._packed.get(lane.source)
+        if cached is not None and lane.id in cached[0]:
+            self._evict(lane.source)
+        src, y = self.sources[lane.source], self._ys[lane.source]
+        lane.state = chunk_jit(src, y, lane.train_mask, lane.C,
+                               self.tol, jnp.asarray(lane.max_iter, jnp.int64),
+                               lane.state, n_iters=self.chunk_iters,
+                               wss=self.wss)
         if bool(lane.state.done):
             self._retire(lane)
 
-    def _step_batched(self, live: list[_Lane], flush: bool = False) -> None:
-        """One chunk over the selected lanes. ``flush`` forces the packed
-        states back into the lanes afterwards — required whenever the next
-        chunk may select a different lane set (parking rotation), or the
-        stale ``lane.state`` would be repacked and progress lost."""
-        if self._packed_ids != tuple(ln.id for ln in live):
-            self._pack(live)
-        masks, Cs, caps, states = self._packed
-        states = _chunk_batched_jit(self.source, self.y, masks, Cs, self.tol,
-                                    caps, states, n_iters=self.chunk_iters,
-                                    wss=self.wss)
-        self._packed = (masks, Cs, caps, states)
-        done = np.asarray(states.done[:len(live)])   # one (w,) transfer
-        if done.any() or flush:
-            self._unpack(live)
-            for flag, lane in zip(done, live):
+    def _step_batched(self, key, lanes: list[_Lane]) -> None:
+        """One chunk over one source's selected lanes. A membership change
+        (vs the cached pack) first evicts the cache — packed states flow
+        back into the lanes — so repacking always starts from the freshest
+        state."""
+        ids = tuple(ln.id for ln in lanes)
+        cached = self._packed.get(key)
+        if cached is None or cached[0] != ids:
+            if cached is not None:
+                self._evict(key)
+            self._pack(key, lanes)
+        masks, Cs, caps, states = self._packed[key][1]
+        states = chunk_batched_jit(self.sources[key], self._ys[key], masks,
+                                   Cs, self.tol, caps, states,
+                                   n_iters=self.chunk_iters, wss=self.wss)
+        self._packed[key] = (ids, (masks, Cs, caps, states))
+        done = np.asarray(states.done[:len(lanes)])   # one (w,) transfer
+        if done.any():
+            self._evict(key)
+            for flag, lane in zip(done, lanes):
                 if flag:
                     self._retire(lane)
 
@@ -285,8 +411,9 @@ class LaneScheduler:
 
     def _lane_state(self, lane: _Lane) -> EngineState:
         """Current state of a live lane, reading through the packed cache."""
-        if self._packed_ids is not None and lane.id in self._packed_ids:
-            return self._packed[3].lane(self._packed_ids.index(lane.id))
+        cached = self._packed.get(lane.source)
+        if cached is not None and lane.id in cached[0]:
+            return cached[1][3].lane(cached[0].index(lane.id))
         return lane.state
 
     def snapshot_lanes(self):
@@ -318,18 +445,46 @@ class LaneScheduler:
     def occupancy(self) -> dict:
         """Schedule shape over the run. ``mean_live_width`` counts
         *runnable* lanes per chunk (the demand); ``mean_packed_width`` /
-        ``peak_width`` count the *dispatched* program width (after width
-        capping and pad bucketing). live >> packed is the width-capped
-        round-robin regime (CPU); live == packed == peak means retirement
-        never compacted the batch (lanes converged together)."""
+        ``peak_width`` count the *dispatched* program width summed over the
+        chunk's source groups (after width capping and pad bucketing).
+        live >> packed is the width-capped round-robin regime (CPU);
+        live == packed == peak means retirement never compacted the batch
+        (lanes converged together). Multi-source pools additionally report
+        ``per_source`` live-width stats — the per-gamma demand profile that
+        makes a straggler row visible in artifact diffs."""
         if not self._width_log:
             return {"chunks": 0, "mean_live_width": 0.0,
                     "mean_packed_width": 0.0, "peak_width": 0,
                     "programs": 0}
         lives = [w for w, _ in self._width_log]
         packed = [p for _, p in self._width_log]
-        return {"chunks": len(self._width_log),
-                "mean_live_width": round(sum(lives) / len(lives), 3),
-                "mean_packed_width": round(sum(packed) / len(packed), 3),
-                "peak_width": max(packed),
-                "programs": len(set(packed))}
+        occ = {"chunks": len(self._width_log),
+               "mean_live_width": round(sum(lives) / len(lives), 3),
+               "mean_packed_width": round(sum(packed) / len(packed), 3),
+               "peak_width": max(packed),
+               "programs": len(self._programs)}
+        if len(self.sources) > 1:
+            occ["per_source"] = {
+                str(key): {"chunks": n,
+                           "mean_live_width": round(s / max(n, 1), 3),
+                           "peak_live_width": peak}
+                for key, (s, n, peak) in self._src_live.items()}
+        return occ
+
+
+class LaneScheduler(LanePool):
+    """Single-source facade over ``LanePool`` — the historical interface
+    (one kernel source, one label vector); lanes omit the source key."""
+
+    _SOLO = "_solo"
+
+    def __init__(self, source, y, **kwargs):
+        super().__init__({self._SOLO: source}, y, **kwargs)
+
+    @property
+    def source(self):
+        return self.sources[self._SOLO]
+
+    @property
+    def y(self):
+        return self._ys[self._SOLO]

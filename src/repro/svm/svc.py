@@ -1,5 +1,13 @@
-"""Classifier-facing helpers: bias recovery, decision function, accuracy."""
+"""Classifier-facing API: the ``SVC`` estimator facade plus the bias /
+decision-function / accuracy helpers it is built from.
+
+``SVC`` is the intended public entry point for single-model use — fit /
+predict / cross_validate over the Study API — so the low-level
+``bias_from_solution``/``predict`` pair stops being the de-facto public
+interface (they remain exported for the drivers and for power users)."""
 from __future__ import annotations
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -33,3 +41,95 @@ def predict(K_test_train, y_train, alpha, b):
 
 def accuracy(pred: jnp.ndarray, y_true: jnp.ndarray) -> jnp.ndarray:
     return jnp.mean((pred == y_true).astype(jnp.float64))
+
+
+class SVC:
+    """Small estimator facade over the Study API (scikit-learn-flavoured).
+
+    ``fit`` declares the single training solve as a one-lane plan and runs
+    it through ``repro.core.study.run_plan`` — the same engine, pool and
+    evaluation machinery the CV/grid drivers use — then stores the dual
+    solution and recovered bias. ``cross_validate`` forwards to the
+    ``run_cv`` plan builder on the fitted hyper-parameters.
+
+    Labels may be any two values; they are mapped to {-1, +1} by sorted
+    order and mapped back in ``predict``.
+    """
+
+    def __init__(self, C: float = 1.0, gamma: float | str = "scale",
+                 kind: str = "rbf", tol: float = 1e-3,
+                 max_iter: int = 10_000_000, kernel_backend: str = "jnp"):
+        self.C = float(C)
+        self.gamma = gamma
+        self.kind = kind
+        self.tol = float(tol)
+        self.max_iter = int(max_iter)
+        self.kernel_backend = kernel_backend
+
+    def _resolve_gamma(self, X) -> float:
+        if self.gamma == "scale":   # sklearn convention: 1 / (d * Var[X])
+            return float(1.0 / (X.shape[1] * max(float(jnp.var(X)), 1e-12)))
+        return float(self.gamma)
+
+    def _encode(self, y) -> jnp.ndarray:
+        y = np.asarray(y)
+        self.classes_ = np.unique(y)
+        if self.classes_.shape[0] != 2:
+            raise ValueError(f"SVC is binary; got classes {self.classes_}")
+        return jnp.asarray(np.where(y == self.classes_[1], 1.0, -1.0),
+                           jnp.float64)
+
+    def fit(self, X, y) -> "SVC":
+        from repro.core.study import Plan, run_plan
+        from repro.svm.kernels import kernel_matrix
+
+        X = jnp.asarray(X, jnp.float64)
+        y_pm = self._encode(y)
+        n = X.shape[0]
+        self.gamma_ = self._resolve_gamma(X)
+        K = kernel_matrix(X, X, kind=self.kind, gamma=self.gamma_,
+                          backend=self.kernel_backend)
+        from repro.svm.engine import DenseKernel
+        plan = Plan(sources={"fit": DenseKernel(K)}, y=y_pm, tol=self.tol)
+        plan.lane("fit", train_mask=jnp.ones(n, bool), C=self.C,
+                  alpha0=jnp.zeros(n, K.dtype), f0=-y_pm,
+                  max_iter=self.max_iter)
+        sres = run_plan(plan)
+        res = sres.results["fit"]
+        self.X_ = X
+        self.y_ = y_pm
+        self.result_ = res
+        self.b_ = bias_from_solution(res, y_pm, jnp.ones(n, bool), self.C)
+        self.n_iter_ = int(res.n_iter)
+        self.converged_ = bool(res.converged)
+        return self
+
+    def decision_function(self, X) -> jnp.ndarray:
+        from repro.svm.kernels import kernel_matrix
+        Kt = kernel_matrix(jnp.asarray(X, jnp.float64), self.X_,
+                           kind=self.kind, gamma=self.gamma_,
+                           backend=self.kernel_backend)
+        return decision_function(Kt, self.y_, self.result_.alpha, self.b_)
+
+    def predict(self, X) -> np.ndarray:
+        pm = np.asarray(self.decision_function(X)) >= 0
+        return np.where(pm, self.classes_[1], self.classes_[0])
+
+    def score(self, X, y) -> float:
+        return float(np.mean(self.predict(X) == np.asarray(y)))
+
+    def cross_validate(self, X, y, k: int = 10, method: str = "sir", **kw):
+        """Alpha-seeded k-fold CV of THIS estimator's hyper-parameters on
+        (X, y): builds the dataset record and forwards to the ``run_cv``
+        plan builder (all its knobs — checkpointing, chunking, straggler
+        policy — pass through ``**kw``). Returns the ``CVReport``."""
+        from repro.core.cv import run_cv
+        from repro.data.svm_suite import SVMDataset
+
+        X = np.asarray(X, np.float64)
+        y_pm = np.asarray(self._encode(y), np.int64)
+        ds = SVMDataset(name="svc", X=X, y=y_pm, C=self.C,
+                        gamma=self._resolve_gamma(jnp.asarray(X)))
+        kw.setdefault("kernel_backend", self.kernel_backend)
+        return run_cv(ds, k=k, method=method, tol=self.tol,
+                      max_iter=self.max_iter, **kw)
