@@ -73,6 +73,20 @@ def _write_bench_table1(rows: list[dict], quick: bool) -> None:
                       "mean": round(rec["live"] / max(rec["chunks"], 1), 3),
                       "peak": rec["peak"]}
                 for key, rec in sorted(per_source.items())}
+    # kernel-source LRU aggregate (grid_pooled_lru rows): peak resident
+    # kernels/bytes across datasets and total materializations — a memory
+    # ceiling regression (budget not holding, or eviction thrash showing
+    # up as runaway materialization counts) is a one-line artifact diff
+    lru = [r["peak_resident"] for r in rows
+           if r.get("method") == "grid_pooled_lru" and "peak_resident" in r]
+    kernel_cache = None
+    if lru:
+        kernel_cache = {
+            "peak_resident_sources": max(b["sources"] for b in lru),
+            "peak_resident_bytes": max(b["bytes"] for b in lru),
+            "materializations": sum(b["materializations"] for b in lru),
+            "kernel_s": round(sum(b["kernel_s"] for b in lru), 4),
+        }
     payload = {
         "bench": "table1_kfold",
         "quick": quick,
@@ -81,6 +95,7 @@ def _write_bench_table1(rows: list[dict], quick: bool) -> None:
         "python": platform.python_version(),
         "per_method": per_method,
         "scheduler": scheduler,
+        "kernel_cache": kernel_cache,
         "rows": rows,
     }
     out = os.path.join(_REPO_ROOT, "BENCH_table1.json")

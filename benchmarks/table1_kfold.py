@@ -33,7 +33,12 @@ Beyond the paper's columns:
   pooled row carries the pool occupancy incl. per-source (per-gamma) live
   widths, so the straggler-row win — and any regression of it — stays
   visible in the BENCH_table1.json artifact diff. Acceptance: pooled is no
-  slower in aggregate.
+  slower in aggregate;
+* ``grid_pooled_lru`` — the same cross-gamma pool under a 2-resident-kernel
+  LRU budget (``max_resident=GRID_LRU_BUDGET``, DESIGN.md §Kernel-source
+  cache): bit-identical cells, a ``peak_resident`` block (resident
+  kernels/bytes, materialization count, kernel seconds) tracking the
+  memory ceiling, and wall-clock required within ~10% of ``grid_pooled``.
 """
 from __future__ import annotations
 
@@ -65,23 +70,35 @@ ATO_ROW_C = (0.01, 1.0, 100.0)
 GRID_C = (0.25, 1.0, 4.0)
 GRID_GAMMA = (0.5, 1.0, 2.0)
 GRID_K = 5
+#: the grid_pooled_lru residency budget: 2 of the 3 gamma kernels resident
+#: at once — peak kernel bytes must read ~2/3 of the unbounded pool while
+#: per-cell results stay bit-identical
+GRID_LRU_BUDGET = 2
 
 
 def _grid_rows(name: str, reps: int) -> list[dict]:
-    """Time the same (C, gamma) grid under the cross-gamma pool and the
-    per-gamma-row baseline. Per-cell results are bit-identical (asserted in
-    tests/test_study.py); the rows exist to track the schedule's
-    wall-clock and occupancy shape."""
+    """Time the same (C, gamma) grid under the cross-gamma pool (unbounded
+    residency), the cross-gamma pool under a 2-kernel LRU budget
+    (``grid_pooled_lru``), and the per-gamma-row baseline. Per-cell results
+    are bit-identical across all three (asserted in tests/test_study.py and
+    tests/test_sources.py); the rows track the schedules' wall-clock,
+    occupancy shape and — for the LRU row — the ``peak_resident`` block
+    (resident kernels/bytes and materialization count): peak bytes must
+    read ~len(gammas)/GRID_LRU_BUDGET x below the unbounded pool, and
+    wall-clock must stay within ~10% of ``grid_pooled``."""
     from repro.core.grid import run_grid
     ds = make_dataset(name, n_override=SIZES[name])
     Cs = [m * ds.C for m in GRID_C]
     gammas = [m * ds.gamma for m in GRID_GAMMA]
     rows = []
-    for method_name, pool in (("grid_pooled", "cross_gamma"),
-                              ("grid_rows", "per_gamma")):
-        def runner(pool=pool):
+    for method_name, kw in (
+            ("grid_pooled", dict(pool="cross_gamma")),
+            ("grid_pooled_lru", dict(pool="cross_gamma",
+                                     max_resident=GRID_LRU_BUDGET)),
+            ("grid_rows", dict(pool="per_gamma"))):
+        def runner(kw=kw):
             return run_grid(ds, Cs=Cs, gammas=gammas, k=GRID_K,
-                            method="sir", pool=pool)
+                            method="sir", **kw)
         runner()                                 # warm the jit caches
         rep = min((runner() for _ in range(reps)),
                   key=lambda r: r.solve_time)
@@ -96,6 +113,14 @@ def _grid_rows(name: str, reps: int) -> list[dict]:
                    1e6 * rep.solve_time / max(rep.total_iterations, 1), 2)}
         if rep.occupancy is not None:
             row["occupancy"] = rep.occupancy
+        # the memory-ceiling signal belongs to the budgeted row only — the
+        # unbudgeted pools' residency stats are trivial (all resident)
+        if method_name == "grid_pooled_lru" and rep.resident is not None:
+            row["peak_resident"] = {
+                "sources": rep.resident["peak_resident"],
+                "bytes": rep.resident["peak_resident_bytes"],
+                "materializations": rep.resident["materializations"],
+                "kernel_s": round(rep.kernel_time, 4)}
         rows.append(row)
     return rows
 
@@ -107,10 +132,12 @@ def _ato_bucketed_row(name: str, k: int, reps: int) -> dict:
     ds = make_dataset(name, n_override=SIZES[name])
     X = jnp.asarray(ds.X)
     y = jnp.asarray(ds.y, jnp.float64)
-    K = kernel_matrix(X, X, kind="rbf", gamma=ds.gamma)
     chunks = kfold_chunks(ds.n, k, seed=0)
     n = chunks.size
-    K, y = K[:n][:, :n], y[:n]
+    # slice before the kernel call (same fix as core/cv.py: the full
+    # (N, N) kernel wastes O(N^2 - n^2) work for the truncated folds)
+    K = kernel_matrix(X[:n], X[:n], kind="rbf", gamma=ds.gamma)
+    y = y[:n]
     masks = jnp.asarray(_fold_masks(chunks))
     Cs = jnp.asarray([m * ds.C for m in ATO_ROW_C], jnp.float64)
     m = Cs.shape[0]

@@ -180,15 +180,18 @@ def run_cv(ds: SVMDataset, k: int = 10, method: str = "sir",
     X = jnp.asarray(ds.X)
     y = jnp.asarray(ds.y, jnp.float64)
 
+    chunks = kfold_chunks(ds.n, k, seed=seed)
+    n = chunks.size  # padded n (multiple of k)
+    # slice X to the k-fold truncation BEFORE the kernel call — computing
+    # the full (N, N) matrix and slicing after wastes O(N^2 - n^2) work,
+    # and run_grid's KernelSpec sources build their kernels this way (the
+    # two slice orders differ in final bits at some shapes, and grid cells
+    # must stay bit-identical to run_cv)
     t0 = time.perf_counter()
-    K = kernel_matrix(X, X, kind="rbf", gamma=ds.gamma,
+    K = kernel_matrix(X[:n], X[:n], kind="rbf", gamma=ds.gamma,
                       backend=kernel_backend)
     K.block_until_ready()
     kernel_time = time.perf_counter() - t0
-
-    chunks = kfold_chunks(ds.n, k, seed=seed)
-    n = chunks.size  # padded n (multiple of k)
-    K = K[:n][:, :n]
     y = y[:n]
     masks = jnp.asarray(_fold_masks(chunks))
 
@@ -408,15 +411,15 @@ def run_cv_batched(ds: SVMDataset, k: int = 10, tol: float = 1e-3,
     X = jnp.asarray(ds.X)
     y = jnp.asarray(ds.y, jnp.float64)
 
+    chunks = kfold_chunks(ds.n, k, seed=seed)
+    n = chunks.size
+    # slice before the kernel call (see run_cv): no wasted (N, N) compute,
+    # bit-aligned with run_grid's KernelSpec sources
     t0 = time.perf_counter()
-    K = kernel_matrix(X, X, kind="rbf", gamma=ds.gamma,
+    K = kernel_matrix(X[:n], X[:n], kind="rbf", gamma=ds.gamma,
                       backend=kernel_backend)
     K.block_until_ready()
     kernel_time = time.perf_counter() - t0
-
-    chunks = kfold_chunks(ds.n, k, seed=seed)
-    n = chunks.size
-    K = K[:n][:, :n]
     y = y[:n]
     masks = jnp.asarray(_fold_masks(chunks))
 

@@ -5,8 +5,12 @@ more warm-start axes, and one big reuse axis, which this driver exploits as
 ONE Study plan (``repro.core.study``):
 
 * **kernel reuse** — the RBF kernel matrix depends on gamma only, so every
-  C cell (and every fold) of a gamma row shares one ``kernel_matrix`` call;
-  each gamma's matrix is one *kernel source* of the plan;
+  C cell (and every fold) of a gamma row shares one kernel; each gamma is
+  one *kernel source* of the plan, declared as a compute-on-demand
+  ``KernelSpec`` factory and materialized through the pool's LRU cache
+  under the ``max_resident``/``cache_bytes`` budget (DESIGN.md
+  §Kernel-source cache) — grid memory scales with the budget, not
+  ``len(gammas)``;
 * **C-adjacent seeding** (``seed_across_C=True``) — fold 0 of cell
   (C_m, gamma) warm-starts from fold 0 of (C_{m-1}, gamma) via the
   ``"scale_C"`` transform (bounded-SV alphas scale ~linearly with C);
@@ -37,14 +41,13 @@ under resume): a killed grid resumes every cell's exact iterate sequence.
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import jax.numpy as jnp
 
 from repro.core.cv import _fold_masks, _transition_idx
 from repro.core.study import Plan, StudyCheckpoint, run_plan
 from repro.data.svm_suite import SVMDataset, kfold_chunks
-from repro.svm import DenseKernel, kernel_matrix
+from repro.svm import KernelSpec
 
 
 @dataclasses.dataclass
@@ -75,6 +78,10 @@ class GridReport:
     #: live widths (one entry per gamma), the per-gamma baseline aggregates
     #: its row pools
     occupancy: dict | None = None
+    #: kernel-source cache account (materializations, kernel wall time,
+    #: peak resident sources/bytes) summed over the grid's studies — the
+    #: memory-ceiling signal the ``grid_pooled_lru`` bench row publishes
+    resident: dict | None = None
 
     @property
     def total_iterations(self) -> int:
@@ -92,12 +99,17 @@ class GridReport:
 
 
 def _merge_occupancy(rows: list[dict]) -> dict | None:
+    """Aggregate per-pool occupancy dicts into one report. ``programs`` is
+    SUMMED — each pool compiled its own distinct programs, and the stat
+    exists to bound total compiled-program count (the old ``max`` silently
+    undercounted it). ``per_source`` blocks are merged by source key
+    (chunk-weighted mean live width, max peak) instead of being dropped."""
     if not rows:
         return None
     chunks = sum(r["chunks"] for r in rows)
     if chunks == 0:
         return {"chunks": 0, "mean_live_width": 0.0, "peak_width": 0}
-    return {
+    merged = {
         "chunks": chunks,
         "mean_live_width": round(
             sum(r["mean_live_width"] * r["chunks"] for r in rows) / chunks, 3),
@@ -105,8 +117,22 @@ def _merge_occupancy(rows: list[dict]) -> dict | None:
             sum(r["mean_packed_width"] * r["chunks"] for r in rows) / chunks,
             3),
         "peak_width": max(r["peak_width"] for r in rows),
-        "programs": max(r["programs"] for r in rows),
+        "programs": sum(r["programs"] for r in rows),
     }
+    per_source: dict[str, list] = {}
+    for r in rows:
+        for key, s in (r.get("per_source") or {}).items():
+            rec = per_source.setdefault(key, [0.0, 0, 0])  # [sum, n, peak]
+            rec[0] += s["mean_live_width"] * s["chunks"]
+            rec[1] += s["chunks"]
+            rec[2] = max(rec[2], s["peak_live_width"])
+    if per_source:
+        merged["per_source"] = {
+            key: {"chunks": n,
+                  "mean_live_width": round(s / max(n, 1), 3),
+                  "peak_live_width": peak}
+            for key, (s, n, peak) in per_source.items()}
+    return merged
 
 
 def _row_lanes(plan: Plan, gi: int, Cs, masks, transitions, method: str,
@@ -143,6 +169,7 @@ def run_grid(ds: SVMDataset, Cs, gammas, k: int = 10, method: str = "sir",
              seed_across_C: bool = False, chunk_iters: int = 4096,
              kernel_backend: str = "jnp", lane_quantum: int = 4,
              max_width: int | None = None, pool: str = "cross_gamma",
+             max_resident: int = 0, cache_bytes: int = 0,
              checkpoint_manager=None,
              checkpoint_every: int = 1) -> GridReport:
     """Cross-validate every (C, gamma) cell; returns per-cell accuracy and
@@ -161,9 +188,17 @@ def run_grid(ds: SVMDataset, Cs, gammas, k: int = 10, method: str = "sir",
     ``run_cv`` on the same hyper-parameters under either pool (same
     seeders, same engine, bit-identical solves).
 
-    Note the cross-gamma pool materializes every gamma's kernel matrix up
-    front (len(gammas) * n^2 * 8 bytes); at memory-bound scale, fall back
-    to ``pool="per_gamma"`` or shard the gamma axis across studies.
+    Kernels are declared as factories (one ``KernelSpec`` per gamma) and
+    materialize on demand through the pool's source cache.
+    ``max_resident`` / ``cache_bytes`` (0 = unbounded) bound how many
+    kernel matrices stay resident at once: under a budget, the scheduler
+    drains each resident gamma's lanes before paying for the next kernel,
+    evicting by schedule distance — memory scales with the budget instead
+    of ``len(gammas) * n^2 * 8`` bytes, and per-cell results stay
+    bit-identical under every budget (re-materialization is a pure
+    function of (X, gamma)). ``kernel_time`` counts every materialization,
+    including re-materializations after eviction or a mid-study resume;
+    ``GridReport.resident`` carries the cache account.
     """
     if pool not in ("cross_gamma", "per_gamma"):
         raise ValueError(f"unknown pool {pool!r}")
@@ -183,21 +218,24 @@ def run_grid(ds: SVMDataset, Cs, gammas, k: int = 10, method: str = "sir",
     transitions = {} if method == "cold" else \
         {h: _transition_idx(chunks, h - 1, h) for h in range(1, k)}
 
-    kernel_time = 0.0
-    sources = {}
-    for gi, gamma in enumerate(gammas):
-        t0 = time.perf_counter()
-        K = kernel_matrix(X, X, kind="rbf", gamma=gamma,
-                          backend=kernel_backend)[:n][:, :n]
-        K.block_until_ready()
-        kernel_time += time.perf_counter() - t0
-        sources[gi] = DenseKernel(K)
-    zeros = jnp.zeros(n, jnp.float64)
+    # one DECLARED kernel per gamma — nothing is computed here. The spec
+    # slices X to the k-fold truncation BEFORE the kernel call (the old
+    # kernel_matrix(X, X)[:n][:, :n] computed and then threw away
+    # O(N^2 - n^2) work per gamma, inflating kernel_time); core/cv.py
+    # builds its kernel the same way, which keeps grid cells bit-identical
+    # to run_cv (the two slice orders differ in final bits at some shapes)
+    sources = {gi: KernelSpec(X=X, gamma=gamma, kind="rbf",
+                              backend=kernel_backend, n=n)
+               for gi, gamma in enumerate(gammas)}
+    # cold-start alphas in the KERNEL dtype (KernelSpec answers it without
+    # materializing), matching run_cv's jnp.zeros(n, K.dtype)
+    zeros = jnp.zeros(n, sources[0].dtype if sources else jnp.float64)
 
     def make_plan(keys) -> Plan:
         plan = Plan(sources={gi: sources[gi] for gi in keys}, y=y, tol=tol,
                     chunk_iters=chunk_iters, lane_quantum=lane_quantum,
-                    max_width=max_width)
+                    max_width=max_width, max_resident=max_resident,
+                    cache_bytes=cache_bytes)
         for gi in keys:
             _row_lanes(plan, gi, Cs, masks, transitions, method,
                        seed_across_C, max_iter, zeros, y, chunks)
@@ -222,6 +260,22 @@ def run_grid(ds: SVMDataset, Cs, gammas, k: int = 10, method: str = "sir",
 
     seed_time = sum(s.seed_time for s in study_results)
     solve_time = sum(s.solve_time for s in study_results)
+    # kernel_time is attributed per MATERIALIZATION: each gamma's first
+    # use, plus any re-materialization after eviction or a cold-cache
+    # resume — the honest cost of the compute-on-demand schedule
+    kernel_time = sum(s.source_stats.get("kernel_time", 0.0)
+                      for s in study_results)
+    resident = {
+        "materializations": sum(s.source_stats.get("materializations", 0)
+                                for s in study_results),
+        "evictions": sum(s.source_stats.get("evictions", 0)
+                         for s in study_results),
+        "peak_resident": max(s.source_stats.get("peak_resident", 0)
+                             for s in study_results),
+        "peak_resident_bytes": max(
+            s.source_stats.get("peak_resident_bytes", 0)
+            for s in study_results),
+    }
     stats = {lid: st for s in study_results for lid, st in s.stats.items()}
     evals = {lid: ev for s in study_results for lid, ev in s.evals.items()}
 
@@ -240,4 +294,4 @@ def run_grid(ds: SVMDataset, Cs, gammas, k: int = 10, method: str = "sir",
     return GridReport(dataset=ds.name, method=method, k=k, n=n,
                       kernel_time=kernel_time, seed_time=seed_time,
                       solve_time=solve_time, cells=cells,
-                      occupancy=occupancy)
+                      occupancy=occupancy, resident=resident)

@@ -35,6 +35,16 @@ written under one schedule shape restores under any other).
 ``EvalSpec``s declare held-out evaluations; ``run_plan`` batches them into
 one jitted program per (source, test-size) group — a whole study's
 evaluation is a handful of device calls.
+
+Plan sources may be **factories** (``svm/sources.py:KernelSpec``) instead
+of dense matrices: the pool materializes them on demand under the plan's
+``max_resident``/``cache_bytes`` budget (schedule-distance eviction —
+DESIGN.md §Kernel-source cache). Seed transforms and eval groups resolve
+their K through the same cache, so a study's memory scales with the
+budget, not the source count. The whole lane graph (edge targets,
+transform names, source keys, dep/after acyclicity) is validated at
+``run_plan`` entry — a typo'd edge fails by name immediately instead of
+surfacing as a drain-time RuntimeError hours into a large study.
 """
 from __future__ import annotations
 
@@ -49,6 +59,7 @@ import numpy as np
 from repro.core import seeding
 from repro.svm.engine import EngineState, finalize
 from repro.svm.scheduler import LanePool
+from repro.svm.sources import is_factory
 from repro.svm.smo import init_f
 from repro.svm.svc import bias_from_solution, predict
 
@@ -100,6 +111,12 @@ class Plan:
     chunk_iters: int = 4096
     lane_quantum: int = 4
     max_width: int | None = None
+    #: kernel-source residency budget (0 = unbounded): sources declared as
+    #: factories (svm/sources.py:KernelSpec) materialize on demand and at
+    #: most ``max_resident`` kernels / ``cache_bytes`` bytes stay resident
+    #: (schedule-distance eviction — DESIGN.md §Kernel-source cache)
+    max_resident: int = 0
+    cache_bytes: int = 0
 
     def lane(self, id, **kwargs) -> LaneSpec:
         spec = LaneSpec(id=id, **kwargs)
@@ -159,6 +176,9 @@ class StudyResult:
     seed_time: float
     solve_time: float                     # pool wall time minus seed_time
     restored: frozenset                   # lanes already done at pool start
+    #: kernel-source cache account: materialization count/wall-time and
+    #: peak residency (sources, bytes) — all zeros for all-dense plans
+    source_stats: dict = dataclasses.field(default_factory=dict)
 
 
 @jax.jit
@@ -180,25 +200,96 @@ def _freeze(x):
     return tuple(_freeze(v) for v in x) if isinstance(x, list) else x
 
 
-def _make_seed_fn(plan: Plan, spec: LaneSpec):
-    if spec.transform not in seeding.TRANSFORMS:
-        raise ValueError(f"lane {spec.id!r}: unknown transform "
-                         f"{spec.transform!r} (have "
-                         f"{sorted(seeding.TRANSFORMS)})")
+def _make_seed_fn(plan: Plan, spec: LaneSpec, resolve):
+    """Build the pool-facing seed closure for a dependent lane. ``resolve``
+    maps a source key to a USABLE source at call time (the pool's residency
+    cache) — K is looked up lazily, at admission, so factory sources only
+    materialize when a lane of theirs actually seeds."""
     fn = seeding.TRANSFORMS[spec.transform]
     key = plan.source_key_of(spec)
-    source = plan.sources[key]
-    K = getattr(source, "K", None)
-    if K is None:
-        raise ValueError(f"lane {spec.id!r}: seed transforms need a dense "
-                         f"kernel source (source {key!r} has no K)")
     y, C, params = plan.y_of(key), spec.C, dict(spec.params)
 
     def seed(prev):
+        source = resolve(key)
+        K = getattr(source, "K", None)
+        if K is None:
+            raise ValueError(f"lane {spec.id!r}: seed transforms need a "
+                             f"dense kernel source (source {key!r} has "
+                             "no K)")
         alpha0 = fn(K, y, C, prev, **params)
         return alpha0, init_f(K, y, alpha0)
 
     return seed
+
+
+def _check_dense(plan: Plan, lane_id, key, what: str) -> None:
+    """Seed transforms and evaluations need a dense K. For an
+    already-materialized (pinned) source that is checkable AT ENTRY — a
+    non-dense source must not fail only after its dependency solved for
+    hours. Factory entries stay deferred (their product is unknowable
+    without computing it); the lazy resolution re-checks them."""
+    entry = plan.sources[key]
+    if not is_factory(entry) and getattr(entry, "K", None) is None:
+        raise ValueError(f"lane {lane_id!r}: {what} a dense kernel "
+                         f"source (source {key!r} has no K)")
+
+
+def _validate_plan(plan: Plan, specs: dict) -> None:
+    """Fail fast, by name, on a malformed lane graph. A typo'd ``dep`` /
+    ``after`` edge or an unknown source key used to surface only at drain
+    time, as ``LanePool.run``'s "missing or cyclic dep" RuntimeError
+    listing EVERY pending lane — after hours of solving on a large study.
+    Here every edge target, transform name and source key is checked at
+    ``run_plan`` entry, and dep/after cycles are reported as the cycle."""
+    for spec in plan.lanes:
+        if spec.source is not None and spec.source not in plan.sources:
+            raise ValueError(f"lane {spec.id!r}: unknown source key "
+                             f"{spec.source!r} (plan has "
+                             f"{sorted(map(repr, plan.sources))})")
+        for edge, target in (("dep", spec.dep), ("after", spec.after)):
+            if target is not None and target not in specs:
+                raise ValueError(
+                    f"lane {spec.id!r}: {edge} edge targets undeclared "
+                    f"lane {target!r}")
+        if spec.dep is not None:
+            if spec.transform not in seeding.TRANSFORMS:
+                raise ValueError(f"lane {spec.id!r}: unknown transform "
+                                 f"{spec.transform!r} (have "
+                                 f"{sorted(seeding.TRANSFORMS)})")
+            _check_dense(plan, spec.id, plan.source_key_of(spec),
+                         "seed transforms need")
+    for ev in plan.evals:
+        if ev.lane not in specs:
+            raise ValueError(f"EvalSpec targets undeclared lane {ev.lane!r}")
+        _check_dense(plan, ev.lane, plan.source_key_of(specs[ev.lane]),
+                     "evaluation needs")
+    # cycle check over the admission edges (given lanes are pre-resolved
+    # and cannot be part of a cycle): iterative three-color DFS
+    edges = {spec.id: [t for t in (spec.dep, spec.after)
+                       if t is not None and specs[t].result is None]
+             for spec in plan.lanes if spec.result is None}
+    state: dict = {}                       # id -> "on_path" | "done"
+    for root in edges:
+        if root in state:
+            continue
+        stack = [(root, iter(edges.get(root, ())))]
+        state[root] = "on_path"
+        while stack:
+            node, it = stack[-1]
+            for target in it:
+                if state.get(target) == "on_path":
+                    path = [n for n, _ in stack]
+                    cycle = path[path.index(target):] + [target]
+                    raise ValueError(
+                        "lane graph has a dep/after cycle: "
+                        + " -> ".join(repr(n) for n in cycle))
+                if target not in state:
+                    state[target] = "on_path"
+                    stack.append((target, iter(edges.get(target, ()))))
+                    break
+            else:
+                state[node] = "done"
+                stack.pop()
 
 
 def run_plan(plan: Plan, *, checkpoint: StudyCheckpoint | None = None,
@@ -223,6 +314,7 @@ def run_plan(plan: Plan, *, checkpoint: StudyCheckpoint | None = None,
         if spec.id in specs:
             raise ValueError(f"duplicate lane id {spec.id!r}")
         specs[spec.id] = spec
+    _validate_plan(plan, specs)
 
     restored: dict[Any, tuple] = {}
     step0 = 0
@@ -259,6 +351,8 @@ def run_plan(plan: Plan, *, checkpoint: StudyCheckpoint | None = None,
     pool = LanePool(plan.sources, plan.y, tol=plan.tol, wss=plan.wss,
                     chunk_iters=plan.chunk_iters,
                     lane_quantum=plan.lane_quantum, max_width=plan.max_width,
+                    max_resident=plan.max_resident,
+                    cache_bytes=plan.cache_bytes,
                     on_snapshot=on_snapshot,
                     snapshot_every=checkpoint.every if checkpoint else 1,
                     on_result=on_result, on_lane_chunk=on_lane_chunk)
@@ -287,7 +381,8 @@ def run_plan(plan: Plan, *, checkpoint: StudyCheckpoint | None = None,
                          source=key, n_iter0=n_it, max_iter=spec.max_iter)
         elif spec.dep is not None:
             pool.add(spec.id, spec.train_mask, spec.C, source=key,
-                     dep=spec.dep, seed_fn=_make_seed_fn(plan, spec),
+                     dep=spec.dep,
+                     seed_fn=_make_seed_fn(plan, spec, pool.resolve_source),
                      max_iter=spec.max_iter, after=spec.after)
         else:
             pool.add(spec.id, spec.train_mask, spec.C, spec.alpha0, spec.f0,
@@ -295,9 +390,12 @@ def run_plan(plan: Plan, *, checkpoint: StudyCheckpoint | None = None,
                      max_iter=spec.max_iter, after=spec.after)
 
     t0 = time.perf_counter()
+    kt0 = pool.cache.kernel_time
     results = pool.run()
     jax.block_until_ready([results[s.id].alpha for s in plan.lanes])
-    wall = time.perf_counter() - t0
+    # kernel materializations during the run are attributed to the cache's
+    # kernel_time (source_stats), not to seed or solve time
+    wall = (time.perf_counter() - t0) - (pool.cache.kernel_time - kt0)
     if checkpoint is not None:
         checkpoint.manager.wait()
 
@@ -316,8 +414,17 @@ def run_plan(plan: Plan, *, checkpoint: StudyCheckpoint | None = None,
         spec = specs[ev.lane]
         t_sz = int(np.asarray(ev.test_idx).shape[0])
         groups.setdefault((plan.source_key_of(spec), t_sz), []).append(ev)
-    for (key, t_sz), evs in groups.items():
-        source, y = plan.sources[key], plan.y_of(key)
+    # same-source groups run back-to-back, resident sources first, so a
+    # budgeted cache re-materializes each remaining source at most once
+    # here (the residency snapshot is taken before any eval materializes)
+    order0 = {}
+    for key, _ in groups:
+        order0.setdefault(key, len(order0))
+    key_rank = {key: (not pool.cache.resident(key), order0[key])
+                for key in order0}
+    for (key, t_sz), evs in sorted(groups.items(),
+                                   key=lambda kv: key_rank[kv[0][0]]):
+        source, y = pool.resolve_source(key), plan.y_of(key)
         if getattr(source, "K", None) is None:
             raise ValueError(f"EvalSpec on lane {evs[0].lane!r}: evaluation "
                              f"needs a dense kernel source (source {key!r} "
@@ -336,4 +443,5 @@ def run_plan(plan: Plan, *, checkpoint: StudyCheckpoint | None = None,
     return StudyResult(results=results, stats=stats, evals=evals,
                        occupancy=pool.occupancy, seed_time=pool.seed_time,
                        solve_time=wall - pool.seed_time,
-                       restored=frozenset(pre_done))
+                       restored=frozenset(pre_done),
+                       source_stats=pool.cache.stats)

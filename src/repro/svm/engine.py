@@ -14,7 +14,12 @@ update, and the duality-gap logic exactly once; ``smo.smo_solve`` and
 KernelSource protocol
 ---------------------
 A kernel source answers "give me kernel row i" for the engine, plus the
-scalar read / scatter-update idioms that match how the row is produced:
+scalar read / scatter-update idioms that match how the row is produced.
+Sources also answer the *residency* half of the protocol — ``dtype``,
+``fused`` and ``nbytes`` — which must stay cheap (no kernel compute): the
+lane pool's source cache (``svm/sources.py``) types and sizes lanes from
+those alone, and a ``KernelSpec`` factory answers them for a kernel that
+has not been materialized yet:
 
 * ``DenseKernel``  — precomputed K; direct indexing (the LibSVM-parity path).
 * ``OnDemandRBF``  — recompute K[:, i] from X each iteration
@@ -193,6 +198,12 @@ class DenseKernel:
     @property
     def dtype(self):
         return self.K.dtype
+
+    @property
+    def nbytes(self) -> int:
+        """Bytes held resident by this source — what the kernel-source
+        cache (svm/sources.py) accounts against its byte budget."""
+        return int(self.K.nbytes)
 
     def diag(self):
         return jnp.diagonal(self.K)

@@ -42,7 +42,21 @@ of a hyper-parameter grid):
   (alpha0, f0)``), and/or a pure *ordering* edge (``after``) that holds an
   explicitly-started lane until another lane retires. Dependencies may
   cross sources (a gamma-row cell seeding from its C-neighbour in another
-  bucket is legal); a lane is admitted the moment its edges retire.
+  bucket is legal); a lane is admitted the moment its edges retire;
+* **kernel residency** — a source may be declared as a *factory*
+  (``svm/sources.py:KernelSpec``) instead of a dense matrix: the pool's
+  ``SourceCache`` materializes it on the first dispatch that needs it,
+  under a ``max_resident``/``cache_bytes`` budget, evicting the resident
+  source with the fewest remaining unretired lanes (schedule distance;
+  the sticky source only as a last resort). Eviction writes the source's
+  packed batch back to its lanes first. Selection is budget-aware at
+  every width: a chunk dispatches at most budget-many managed sources
+  (sticky/resident preferred) even when ``max_width=0`` selects all live
+  lanes, and width-capped selection prefers lanes whose source is already
+  resident — so a budgeted pool drains each kernel before paying for the
+  next one instead of thrashing. Re-materialization is bit-identical (a
+  spec is a pure function of its inputs), preserving the bit-parity
+  invariant below.
 
 Because each lane's iterate sequence depends only on its own
 (source, mask, C, state) — the engine body freezes ``done`` lanes, lanes of
@@ -71,6 +85,7 @@ import numpy as np
 
 from repro.svm.engine import (EngineState, SMOResult, chunk_batched_jit,
                               chunk_jit, finalize, init_state)
+from repro.svm.sources import SourceCache, is_factory
 
 
 def bucket_width(w: int, quantum: int = 4) -> int:
@@ -110,10 +125,16 @@ class LanePool:
     admitted chunk dispatch. See the module docstring for the scheduling
     policy; per-lane results are bit-identical to sequential solves.
 
-    ``sources`` maps a source key to a kernel source; ``y`` is the label
-    vector shared by every source, or a dict keyed like ``sources`` when
-    sources carry different instance sets. ``on_result(lane_id, result)``
-    streams retirements (long studies consume results as they land);
+    ``sources`` maps a source key to a kernel source, or to a *factory*
+    (e.g. ``sources.KernelSpec``) that declares one without computing it:
+    factory entries materialize on demand through the pool's
+    :class:`~repro.svm.sources.SourceCache` under the
+    ``max_resident``/``cache_bytes`` budget and are evicted by schedule
+    distance (DESIGN.md §Kernel-source cache), so pool memory scales with
+    the budget instead of the source count. ``y`` is the label vector
+    shared by every source, or a dict keyed like ``sources`` when sources
+    carry different instance sets. ``on_result(lane_id, result)`` streams
+    retirements (long studies consume results as they land);
     ``on_lane_chunk(lane_id, state)`` observes every still-live lane after
     each of its chunks (the per-lane mid-checkpoint hook).
     """
@@ -121,14 +142,11 @@ class LanePool:
     def __init__(self, sources, y, *, tol: float = 1e-3, wss: str = "2",
                  chunk_iters: int = 2048, lane_quantum: int = 4,
                  max_width: int | None = None,
+                 max_resident: int = 0, cache_bytes: int = 0,
                  on_snapshot=None, snapshot_every: int = 1,
                  on_result=None, on_lane_chunk=None):
         if not isinstance(sources, dict) or not sources:
             raise ValueError("sources must be a non-empty {key: source} dict")
-        for key, src in sources.items():
-            if src.fused and wss == "2":
-                raise ValueError(
-                    f"source {key!r} is fused and requires WSS-1 (wss='1')")
         if max_width is None:
             # backend cost model (see module docstring): CPU's vmapped
             # batch loses at every width > 1, accelerators want full width
@@ -137,6 +155,14 @@ class LanePool:
         self.sources = dict(sources)
         self._ys = {k: (y[k] if isinstance(y, dict) else y)
                     for k in self.sources}
+        if on_snapshot is not None and \
+                len({np.shape(yv) for yv in self._ys.values()}) > 1:
+            # snapshot_lanes stacks every lane's (alpha, f) into one (L, n)
+            # tree — fail at construction, not at the first checkpoint
+            raise ValueError(
+                "snapshotting requires every source to share one instance "
+                "set (homogeneous y shapes); got "
+                f"{sorted({np.shape(yv) for yv in self._ys.values()})}")
         self.tol = tol
         self.wss = wss
         self.chunk_iters = int(chunk_iters)
@@ -158,9 +184,73 @@ class LanePool:
         # changes (the previous pack is evicted — states written back — so
         # no progress is ever lost to a stale ``lane.state``)
         self._packed: dict[Any, tuple] = {}  # key -> (ids, payload)
+        # kernel residency: factory entries materialize on demand under the
+        # cache budget and are evicted by schedule distance (fewest
+        # remaining lanes first, the sticky source last); dense entries are
+        # pinned — see svm/sources.py and DESIGN.md §Kernel-source cache.
+        # Evicting a source also drops its packed-batch cache (states are
+        # written back to the lanes first, so no progress is lost).
+        self.cache = SourceCache(
+            self.sources, max_resident=max_resident, cache_bytes=cache_bytes,
+            wss=wss, distance=self._source_distance,
+            sticky=lambda: self._sticky, on_evict=self._on_source_evict)
+        for key, entry in self.sources.items():
+            # pinned (dense) entries are inspectable now; factory entries
+            # (e.g. sources.KernelSpec) can't be inspected without
+            # computing the kernel, so their check runs the SAME rule at
+            # materialization
+            if not is_factory(entry):
+                self.cache.check_fused(key, entry)
 
     def y_of(self, source_key) -> jnp.ndarray:
         return self._ys[source_key]
+
+    def resolve_source(self, source_key):
+        """The usable kernel source for ``source_key``, materialized through
+        the residency cache (the pool's own dispatch, the study's seed
+        transforms and its eval groups all read kernels through here)."""
+        return self.cache.get(source_key)
+
+    def _source_distance(self, source_key) -> int:
+        """Schedule distance of a resident source = how many of its lanes
+        are still unretired (live or pending admission). The source with
+        the FEWEST remaining lanes is the one the schedule needs least —
+        it is evicted first."""
+        return sum(1 for lane in self._lanes.values()
+                   if lane.source == source_key and lane.result is None)
+
+    def _on_source_evict(self, source_key) -> None:
+        """A source's kernel is about to be dropped: flush its packed-batch
+        cache back into the lanes so no solver progress rides on the
+        evicted operand."""
+        if source_key in self._packed:
+            self._writeback(source_key)
+
+    def _budget_sources(self, lanes) -> set:
+        """The sources allowed to dispatch this chunk under the residency
+        budget: pinned sources always, managed sources in sticky >
+        resident > cold priority (stable: insertion order breaks ties),
+        truncated to the budget. Without this, an unbounded-width schedule
+        would dispatch EVERY live source's group each chunk and a budget
+        below the live source count would re-materialize kernels every
+        chunk — with it, the pool drains resident kernels first and
+        materialization count tracks the source count, not the chunk
+        count, under every width policy."""
+        srcs = list(dict.fromkeys(ln.source for ln in lanes))
+        if not self.cache.budgeted or len(srcs) <= 1:
+            return set(srcs)
+        allowed = {s for s in srcs if self.cache.pinned(s)}
+        managed = sorted((s for s in srcs if s not in allowed),
+                         key=lambda s: (s != self._sticky,
+                                        not self.cache.resident(s)))
+        taken, used = [], 0
+        for s in managed:
+            nb = self.cache.nbytes_of(s)
+            if taken and not self.cache.fits(len(taken) + 1, used + nb):
+                break
+            taken.append(s)
+            used += nb
+        return allowed | set(taken)
 
     def _source_key(self, source) -> Any:
         if source is not None:
@@ -200,7 +290,9 @@ class LanePool:
                      after=after)
         if alpha0 is not None:
             if after is None:
-                lane.state = init_state(self.sources[key], self._ys[key],
+                # cache.meta answers dtype without materializing a factory
+                # source — intake must not force kernels into residency
+                lane.state = init_state(self.cache.meta(key), self._ys[key],
                                         train_mask, alpha0, f0,
                                         n_iter0=n_iter0)
             else:   # held: built at admission, when ``after`` retires
@@ -236,21 +328,26 @@ class LanePool:
                 continue
             if lane.after is not None and lane.after not in self.results:
                 continue
-            src, y = self.sources[lane.source], self._ys[lane.source]
+            meta, y = self.cache.meta(lane.source), self._ys[lane.source]
             if lane.dep is None:          # explicit start held by ``after``
-                lane.state = init_state(src, y, lane.train_mask, lane.alpha0,
+                lane.state = init_state(meta, y, lane.train_mask, lane.alpha0,
                                         lane.f0, n_iter0=lane.n_iter0)
                 lane.alpha0 = lane.f0 = None
                 continue
             if lane.dep not in self.results:
                 continue
+            # a seed transform may materialize its kernel through the cache
+            # (lazy K resolution, core/study.py); that wall time is KERNEL
+            # time, not seed time — subtract the cache's delta so the
+            # paper's "init." column stays a seeding measurement
             t0 = time.perf_counter()
+            k0 = self.cache.kernel_time
             alpha0, f0 = lane.seed_fn(self.results[lane.dep])
             jax.block_until_ready((alpha0, f0))
-            dt = time.perf_counter() - t0
+            dt = (time.perf_counter() - t0) - (self.cache.kernel_time - k0)
             lane.seed_s += dt
             self.seed_time += dt
-            lane.state = init_state(src, y, lane.train_mask, alpha0, f0)
+            lane.state = init_state(meta, y, lane.train_mask, alpha0, f0)
 
     def _live(self) -> list[_Lane]:
         return [self._lanes[i] for i in self._order
@@ -281,15 +378,16 @@ class LanePool:
             Cs.append(live[0].C)
             caps.append(0)
         payload = (jnp.stack(masks),
-                   jnp.asarray(Cs, self.sources[key].dtype),
+                   jnp.asarray(Cs, self.cache.meta(key).dtype),
                    jnp.asarray(caps, jnp.int64),
                    EngineState.stack(states))
         self._packed[key] = (tuple(ln.id for ln in live), payload)
 
-    def _evict(self, key) -> None:
+    def _writeback(self, key) -> None:
         """Write a source's packed states back into its lanes and drop the
-        cache — required before the group's membership changes (retire,
-        park rotation, admission) or a member dispatches solo."""
+        packed cache — required before the group's membership changes
+        (retire, park rotation, admission), a member dispatches solo, or
+        the source's kernel is evicted from residency."""
         ids, payload = self._packed.pop(key)
         states = payload[3]
         for i, lane_id in enumerate(ids):
@@ -309,7 +407,15 @@ class LanePool:
                         "retire (missing or cyclic dep)")
                 break
             selected = live
-            if self.max_width and len(live) > self.max_width:
+            if len(self.sources) > 1 and self.cache.budgeted:
+                # residency budget first: only budget-many managed sources
+                # dispatch per chunk (sticky/resident preferred), so even
+                # an unbounded-width schedule drains kernels instead of
+                # thrashing the cache
+                allowed = self._budget_sources(live)
+                if len(allowed) < len({ln.source for ln in live}):
+                    selected = [ln for ln in live if ln.source in allowed]
+            if self.max_width and len(selected) > self.max_width:
                 # park the overflow for one chunk. Selection is
                 # SOURCE-STICKY: the most recently dispatched source keeps
                 # the width budget while it has live lanes — its kernel
@@ -321,10 +427,22 @@ class LanePool:
                 # ties), so every lane of the serving source keeps
                 # advancing at chunk granularity; other sources advance
                 # when the sticky one drains or leaves width to spare.
-                sticky = [ln for ln in live if ln.source == self._sticky]
-                rest = [ln for ln in live if ln.source != self._sticky]
+                # Leftover width is RESIDENCY-AWARE: lanes whose kernel is
+                # already materialized beat lanes that would force a
+                # materialization (and, under a budget, an eviction) — a
+                # budgeted pool drains each resident source before paying
+                # for the next kernel, so materialization count tracks the
+                # source count, not the chunk count. Dense (pinned)
+                # sources are always resident, so single-matrix pools keep
+                # the exact pre-cache ordering.
+                sticky = [ln for ln in selected if ln.source == self._sticky]
+                near = [ln for ln in selected if ln.source != self._sticky
+                        and self.cache.resident(ln.source)]
+                far = [ln for ln in selected if ln.source != self._sticky
+                       and not self.cache.resident(ln.source)]
                 ordered = sorted(sticky, key=lambda ln: ln.served) + \
-                    sorted(rest, key=lambda ln: ln.served)
+                    sorted(near, key=lambda ln: ln.served) + \
+                    sorted(far, key=lambda ln: ln.served)
                 selected = ordered[:self.max_width]
             for lane in selected:
                 lane.served += 1
@@ -350,12 +468,16 @@ class LanePool:
                          else bucket_width(len(lanes), self.lane_quantum))
                 dispatched += width
                 self._programs.add((key, width))
+                # dispatch may materialize the group's kernel through the
+                # cache; that delta is kernel time, not solve time
                 t0 = time.perf_counter()
+                k0 = self.cache.kernel_time
                 if len(lanes) == 1:
                     self._step_single(lanes[0])
                 else:
                     self._step_batched(key, lanes)
-                dt = time.perf_counter() - t0
+                dt = (time.perf_counter() - t0) \
+                    - (self.cache.kernel_time - k0)
                 for lane in lanes:
                     lane.solve_s += dt / len(lanes)
             self._width_log.append((len(live), dispatched))
@@ -375,8 +497,8 @@ class LanePool:
         a straggler or a width-capped round-robin schedule."""
         cached = self._packed.get(lane.source)
         if cached is not None and lane.id in cached[0]:
-            self._evict(lane.source)
-        src, y = self.sources[lane.source], self._ys[lane.source]
+            self._writeback(lane.source)
+        src, y = self.resolve_source(lane.source), self._ys[lane.source]
         lane.state = chunk_jit(src, y, lane.train_mask, lane.C,
                                self.tol, jnp.asarray(lane.max_iter, jnp.int64),
                                lane.state, n_iters=self.chunk_iters,
@@ -393,16 +515,19 @@ class LanePool:
         cached = self._packed.get(key)
         if cached is None or cached[0] != ids:
             if cached is not None:
-                self._evict(key)
+                self._writeback(key)
             self._pack(key, lanes)
+        # resolve BEFORE reading the pack: materializing this source may
+        # evict another source (flushing ITS pack), never this group's
+        src = self.resolve_source(key)
         masks, Cs, caps, states = self._packed[key][1]
-        states = chunk_batched_jit(self.sources[key], self._ys[key], masks,
+        states = chunk_batched_jit(src, self._ys[key], masks,
                                    Cs, self.tol, caps, states,
                                    n_iters=self.chunk_iters, wss=self.wss)
         self._packed[key] = (ids, (masks, Cs, caps, states))
         done = np.asarray(states.done[:len(lanes)])   # one (w,) transfer
         if done.any():
-            self._evict(key)
+            self._writeback(key)
             for flag, lane in zip(done, lanes):
                 if flag:
                     self._retire(lane)
@@ -483,7 +608,7 @@ class LaneScheduler(LanePool):
 
     @property
     def source(self):
-        return self.sources[self._SOLO]
+        return self.resolve_source(self._SOLO)
 
     @property
     def y(self):

@@ -1,0 +1,255 @@
+"""Kernel-source factories and the compute-on-demand LRU cache.
+
+The grid's reuse axis (one RBF matrix per gamma, shared by every C cell
+and fold) used to force the cross-gamma pool to materialize ALL
+``len(gammas) * n^2 * 8`` bytes up front. Joulani et al. frame CV as a
+dependency structure over reusable partial solutions — our lane graph IS
+that structure, so the schedule itself knows which kernel a chunk needs
+next and which resident kernel is furthest from being needed. This module
+makes kernel matrices **residency-managed operands**:
+
+* a :class:`KernelSpec` *declares* a kernel source — ``(kind, gamma, X,
+  backend)`` plus an optional row truncation — without computing it. A
+  spec satisfies the cheap half of the engine's kernel-source protocol
+  (``dtype``, ``fused``, ``nbytes``) so schedulers can type/size lanes
+  without materializing, and ``materialize()`` produces the dense source
+  on demand;
+* a :class:`SourceCache` fronts a ``{key: source-or-spec}`` dict:
+  already-dense entries are *pinned* (always resident, exactly the
+  pre-cache behaviour), spec entries materialize through the cache under
+  a ``max_resident`` / ``cache_bytes`` budget and are **evicted by
+  schedule distance** — the resident source with the fewest remaining
+  unretired lanes goes first (it is the one the schedule needs least),
+  the *sticky* (currently serving) source only as a last resort, ties
+  broken least-recently-used.
+
+Eviction drops only the materialized array. Because a spec is a pure
+function of ``(X, kind, gamma, backend, n)``, re-materialization rebuilds
+the bit-identical matrix, and a lane's iterate sequence depends only on
+its own (source, mask, C, state) — so any eviction/re-materialization
+schedule preserves the pool's bit-parity invariant (covered by
+tests/test_sources.py). The scheduler's packed-batch cache for an evicted
+source is written back to the lanes *before* the kernel is dropped
+(``on_evict``), so no solver progress is ever lost to eviction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+from repro.svm.engine import DenseKernel
+from repro.svm.kernels import kernel_matrix
+
+
+def is_factory(entry) -> bool:
+    """True when a sources-dict entry is a factory (declares a kernel and
+    materializes on demand) rather than an already-usable kernel source —
+    factories expose ``materialize()``, sources expose ``row()``."""
+    return callable(getattr(entry, "materialize", None)) and \
+        not callable(getattr(entry, "row", None))
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """A declared-but-not-computed dense kernel source.
+
+    ``n`` truncates to the first ``n`` instances (the k-fold padding
+    truncation). The slice is applied to ``X`` *before* the kernel call —
+    computing the full ``(N, N)`` matrix and slicing after wastes
+    O(N² − n²) compute and memory per materialization (and the two are
+    not bit-identical at every shape, so callers that need parity with a
+    truncated kernel must build it this way too, see ``core/cv.py``).
+    """
+    X: Any
+    gamma: float = 1.0
+    kind: str = "rbf"
+    backend: str = "jnp"
+    n: int | None = None
+
+    #: specs always materialize a plain dense source; the fused/WSS check
+    #: is re-run against the materialized source anyway (deferred check)
+    fused = False
+
+    @property
+    def dtype(self):
+        return self.X.dtype
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.X.shape[0] if self.n is None else self.n)
+
+    @property
+    def nbytes(self) -> int:
+        """Size of the materialized kernel matrix — what the cache budget
+        accounts, known without computing anything."""
+        return self.n_rows * self.n_rows * self.X.dtype.itemsize
+
+    def materialize(self) -> DenseKernel:
+        X = self.X if self.n is None else self.X[: self.n]
+        K = kernel_matrix(X, X, kind=self.kind, gamma=self.gamma,
+                          backend=self.backend)
+        K.block_until_ready()
+        return DenseKernel(K)
+
+
+def _source_nbytes(src) -> int:
+    nb = getattr(src, "nbytes", None)
+    if nb is not None:
+        return int(nb)
+    K = getattr(src, "K", None)
+    return int(K.nbytes) if K is not None else 0
+
+
+class SourceCache:
+    """Residency manager for a pool's ``{key: source-or-spec}`` dict.
+
+    * ``get(key)`` returns a usable kernel source, materializing a spec
+      entry on demand. Before a materialization that would exceed the
+      budget (``max_resident`` managed sources and/or ``cache_bytes``
+      managed bytes; 0 = unbounded), resident managed sources are evicted
+      in *schedule-distance* order: fewest remaining lanes first
+      (``distance(key)``, supplied by the scheduler), the sticky source
+      (``sticky()``) only if nothing else can be evicted, ties broken
+      least-recently-used. ``on_evict(key)`` fires before the array is
+      dropped — the scheduler writes its packed batch back there.
+    * ``meta(key)`` answers the cheap protocol questions (``dtype``,
+      ``fused``) without materializing: the resident source when there is
+      one, else the entry itself (specs carry ``dtype``/``fused``).
+    * pinned entries (already-materialized sources) are always resident,
+      never evicted, and not counted against the budget — a pool built
+      from dense matrices behaves exactly as before the cache existed.
+
+    The fused/WSS-1 compatibility check runs at materialization time
+    (``wss`` is the pool's selection mode): a factory's product cannot be
+    inspected at pool construction, so the check is *deferred* — it fires
+    on the first dispatch that would actually mis-drive the source.
+    """
+
+    def __init__(self, entries: dict, *, max_resident: int = 0,
+                 cache_bytes: int = 0, wss: str = "2",
+                 distance: Callable[[Any], int] | None = None,
+                 sticky: Callable[[], Any] | None = None,
+                 on_evict: Callable[[Any], None] | None = None):
+        self._entries = dict(entries)
+        self.max_resident = int(max_resident)
+        self.cache_bytes = int(cache_bytes)
+        self.wss = wss
+        self._distance = distance or (lambda key: 0)
+        self._sticky = sticky or (lambda: None)
+        self.on_evict = on_evict
+        self._resident: dict[Any, Any] = {}     # managed key -> source (LRU)
+        self._pinned: dict[Any, Any] = {
+            k: v for k, v in entries.items() if not is_factory(v)}
+        # accounting (the grid's kernel_time and the bench peak_resident
+        # block read these)
+        self.kernel_time = 0.0
+        self.materializations = 0
+        self.evictions = 0
+        self.peak_resident = len(self._pinned)
+        self.peak_resident_bytes = sum(
+            _source_nbytes(s) for s in self._pinned.values())
+
+    # ------------------------------------------------------------- queries
+
+    def resident(self, key) -> bool:
+        return key in self._pinned or key in self._resident
+
+    def pinned(self, key) -> bool:
+        return key in self._pinned
+
+    def nbytes_of(self, key) -> int:
+        """Resident footprint of ``key`` — from the materialized source if
+        resident, else the spec's estimate; never materializes."""
+        return _source_nbytes(self.meta(key))
+
+    @property
+    def budgeted(self) -> bool:
+        return bool(self.max_resident or self.cache_bytes)
+
+    def fits(self, count: int, nbytes: int) -> bool:
+        """True when ``count`` managed sources totalling ``nbytes`` bytes
+        fit the budget (0 = unbounded). The ONE place the budget rule
+        lives: eviction (``_evict_for``) and the scheduler's per-chunk
+        source selection (``LanePool._budget_sources``) both defer here,
+        so they cannot desynchronize."""
+        if self.max_resident and count > self.max_resident:
+            return False
+        return not (self.cache_bytes and nbytes > self.cache_bytes)
+
+    def meta(self, key):
+        """The entry for protocol questions that must not materialize
+        (``dtype``, ``fused``): the resident source if there is one, else
+        the spec itself."""
+        if key in self._pinned:
+            return self._pinned[key]
+        return self._resident.get(key, self._entries[key])
+
+    @property
+    def resident_bytes(self) -> int:
+        return sum(_source_nbytes(s) for s in self._resident.values())
+
+    @property
+    def stats(self) -> dict:
+        return {"materializations": self.materializations,
+                "evictions": self.evictions,
+                "kernel_time": round(self.kernel_time, 4),
+                "peak_resident": self.peak_resident,
+                "peak_resident_bytes": self.peak_resident_bytes}
+
+    # ------------------------------------------------------ materialization
+
+    def check_fused(self, key, src) -> None:
+        """The one fused/WSS-1 compatibility rule: the pool applies it to
+        pinned entries at construction, the cache to factory products at
+        materialization."""
+        if getattr(src, "fused", False) and self.wss == "2":
+            raise ValueError(
+                f"source {key!r} is fused and requires WSS-1 (wss='1')")
+
+    def _evict_for(self, incoming_bytes: int) -> None:
+        """Evict managed residents until the budget admits ``incoming_bytes``
+        more. Victim order: non-sticky before sticky, then ascending
+        schedule distance (fewest remaining lanes = needed least), then
+        least-recently-used (dict order = recency)."""
+        # the `self._resident` guard keeps a single over-budget kernel
+        # admissible when there is nothing left to evict
+        while self._resident and not self.fits(
+                len(self._resident) + 1,
+                self.resident_bytes + incoming_bytes):
+            sticky = self._sticky()
+            keys = list(self._resident)   # dict order = recency (LRU first)
+            victim = min(keys, key=lambda k: (k == sticky,
+                                              self._distance(k),
+                                              keys.index(k)))
+            if self.on_evict is not None:
+                self.on_evict(victim)
+            del self._resident[victim]
+            self.evictions += 1
+
+    def get(self, key):
+        """Return a usable kernel source for ``key``, materializing (and
+        evicting per the budget) on demand."""
+        if key in self._pinned:
+            return self._pinned[key]
+        src = self._resident.pop(key, None)
+        if src is not None:                    # hit: refresh recency
+            self._resident[key] = src
+            return src
+        spec = self._entries[key]
+        self._evict_for(_source_nbytes(spec))
+        t0 = time.perf_counter()
+        src = spec.materialize()
+        self.kernel_time += time.perf_counter() - t0
+        self.materializations += 1
+        self.check_fused(key, src)
+        self._resident[key] = src
+        self.peak_resident = max(
+            self.peak_resident, len(self._pinned) + len(self._resident))
+        self.peak_resident_bytes = max(
+            self.peak_resident_bytes,
+            self.resident_bytes
+            + sum(_source_nbytes(s) for s in self._pinned.values()))
+        return src

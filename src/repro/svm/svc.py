@@ -126,6 +126,12 @@ class SVC:
         from repro.core.cv import run_cv
         from repro.data.svm_suite import SVMDataset
 
+        if self.kind != "rbf":
+            # run_cv computes an RBF kernel; silently cross-validating a
+            # different kernel than fit() trains would score the wrong model
+            raise ValueError(
+                f"cross_validate supports kind='rbf' only (estimator has "
+                f"kind={self.kind!r}); run_cv's kernel is RBF")
         X = np.asarray(X, np.float64)
         y_pm = np.asarray(self._encode(y), np.int64)
         ds = SVMDataset(name="svc", X=X, y=y_pm, C=self.C,
