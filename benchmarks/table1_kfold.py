@@ -38,7 +38,18 @@ Beyond the paper's columns:
   LRU budget (``max_resident=GRID_LRU_BUDGET``, DESIGN.md §Kernel-source
   cache): bit-identical cells, a ``peak_resident`` block (resident
   kernels/bytes, materialization count, kernel seconds) tracking the
-  memory ceiling, and wall-clock required within ~10% of ``grid_pooled``.
+  memory ceiling, and wall-clock required within ~10% of ``grid_pooled``;
+* ``cold_pallas`` / ``grid_pooled_pallas`` — the matrix-free rows
+  (DESIGN.md §Pallas sources): cold folds / a cold budgeted grid over
+  row-streaming ``PallasRBF`` sources, never materializing an n² kernel.
+  Each row carries an ``hbm_per_iter`` block — the analytic per-iteration
+  HBM traffic of the dense vs fused-streaming source and the roofline
+  service time of the pallas stream (``launch/roofline.py`` bandwidth
+  model) — the accelerator-side signal these rows exist to track; on this
+  CPU container the interpret-mode kernels make their wall-clock an
+  emulation artifact, so they time one rep on a reduced grid
+  (``PALLAS_GRID``) and their ``peak_resident.bytes`` (X bytes, not n²)
+  is the load-bearing CPU-side number.
 """
 from __future__ import annotations
 
@@ -51,13 +62,14 @@ from benchmarks.bench_lib import emit
 from repro.core import seeding
 from repro.core.cv import _fold_masks, _transition_idx, run_cv, run_cv_batched
 from repro.data.svm_suite import kfold_chunks, make_dataset
+from repro.launch.roofline import roofline_terms
 from repro.svm import (bias_from_solution, init_f, kernel_matrix, predict,
                        smo_solve_batched)
 
 SIZES = {"adult": 1000, "heart": 270, "madelon": 1200, "mnist": 1000,
          "webdata": 1000}
-METHODS = ("cold", "cold_batched", "cold_batched_repacked", "ato", "ato_ref",
-           "mir", "sir")
+METHODS = ("cold", "cold_batched", "cold_batched_repacked", "cold_pallas",
+           "ato", "ato_ref", "mir", "sir")
 #: C multipliers of the ato_bucketed row — a wide spread (a grid row's
 #: realistic range) so lanes land in different free-set cap buckets on
 #: every suite dataset (the case bucketing exists for); the middle lane is
@@ -74,6 +86,28 @@ GRID_K = 5
 #: at once — peak kernel bytes must read ~2/3 of the unbounded pool while
 #: per-cell results stay bit-identical
 GRID_LRU_BUDGET = 2
+#: the grid_pooled_pallas sizing: cold WSS-1 folds through interpret-mode
+#: pallas cost 5-50x a compiled dense iteration on CPU, so the matrix-free
+#: row runs a 2x2 grid corner — enough cells to exercise multi-source
+#: residency accounting without dominating the bench wall-clock
+PALLAS_GRID = 2
+
+
+def _hbm_iter_estimate(n: int, d: int) -> dict:
+    """Analytic per-SMO-iteration HBM traffic (f64): the dense source
+    streams two (n,) kernel rows plus the solver state (f read+write,
+    alpha update); the fused pallas step streams X once (n*d) plus the
+    same state — one HBM pass per iteration regardless of n². memory_s is
+    the roofline service time of the pallas stream at the accelerator
+    bandwidth model's HBM_BW; with the MXU cross-term FLOPs alongside it
+    shows which side of the ridge a fused iteration sits on."""
+    state = 3 * n * 8
+    dense = 2 * n * 8 + state
+    pallas = n * d * 8 + state
+    flops = 2.0 * n * d + 8.0 * n
+    rf = roofline_terms(flops, pallas, 0.0)
+    return {"dense_bytes": dense, "pallas_bytes": pallas,
+            "memory_s": rf["memory_s"], "dominant": rf["dominant"]}
 
 
 def _grid_rows(name: str, reps: int) -> list[dict]:
@@ -95,12 +129,18 @@ def _grid_rows(name: str, reps: int) -> list[dict]:
             ("grid_pooled", dict(pool="cross_gamma")),
             ("grid_pooled_lru", dict(pool="cross_gamma",
                                      max_resident=GRID_LRU_BUDGET)),
-            ("grid_rows", dict(pool="per_gamma"))):
+            ("grid_rows", dict(pool="per_gamma")),
+            ("grid_pooled_pallas", dict(
+                pool="cross_gamma", method="cold",
+                source_backend="pallas_rbf", max_resident=GRID_LRU_BUDGET,
+                Cs=Cs[:PALLAS_GRID], gammas=gammas[:PALLAS_GRID]))):
         def runner(kw=kw):
-            return run_grid(ds, Cs=Cs, gammas=gammas, k=GRID_K,
-                            method="sir", **kw)
+            return run_grid(ds, **{"Cs": Cs, "gammas": gammas, "k": GRID_K,
+                                   "method": "sir", **kw})
         runner()                                 # warm the jit caches
-        rep = min((runner() for _ in range(reps)),
+        # interpret-mode pallas rows time a single rep (see module doc)
+        r_eff = 1 if method_name == "grid_pooled_pallas" else reps
+        rep = min((runner() for _ in range(r_eff)),
                   key=lambda r: r.solve_time)
         row = {"dataset": name, "method": method_name, "k": GRID_K,
                "iterations": rep.total_iterations,
@@ -113,14 +153,17 @@ def _grid_rows(name: str, reps: int) -> list[dict]:
                    1e6 * rep.solve_time / max(rep.total_iterations, 1), 2)}
         if rep.occupancy is not None:
             row["occupancy"] = rep.occupancy
-        # the memory-ceiling signal belongs to the budgeted row only — the
+        # the memory-ceiling signal belongs to the budgeted rows only — the
         # unbudgeted pools' residency stats are trivial (all resident)
-        if method_name == "grid_pooled_lru" and rep.resident is not None:
+        if (method_name in ("grid_pooled_lru", "grid_pooled_pallas")
+                and rep.resident is not None):
             row["peak_resident"] = {
                 "sources": rep.resident["peak_resident"],
                 "bytes": rep.resident["peak_resident_bytes"],
                 "materializations": rep.resident["materializations"],
                 "kernel_s": round(rep.kernel_time, 4)}
+        if method_name == "grid_pooled_pallas":
+            row["hbm_per_iter"] = _hbm_iter_estimate(rep.n, ds.X.shape[1])
         rows.append(row)
     return rows
 
@@ -218,13 +261,18 @@ def run(k: int = 10, quick: bool = False, reps: int = 3):
                 runner = lambda: run_cv_batched(ds, k=k, schedule="batched")
             elif method == "cold_batched_repacked":
                 runner = lambda: run_cv_batched(ds, k=k, schedule="repacked")
+            elif method == "cold_pallas":
+                runner = lambda: run_cv_batched(
+                    ds, k=k, source_backend="pallas_rbf")
             else:
                 runner = lambda m=method: run_cv(ds, k=k, method=m)
             runner()                                # warm the jit caches
             # min-of-reps: solver timings on shared CPUs are noisy (and the
             # near-degenerate suites hit denormal-heavy kernels); the min is
-            # the standard low-variance estimator for the true cost
-            rep = min((runner() for _ in range(reps)),
+            # the standard low-variance estimator for the true cost — except
+            # the interpret-mode pallas row, which times one rep (module doc)
+            r_eff = 1 if method == "cold_pallas" else reps
+            rep = min((runner() for _ in range(r_eff)),
                       key=lambda r: r.total_solve_time)
             row = rep.row()
             row["us_per_iteration"] = round(
@@ -232,6 +280,9 @@ def run(k: int = 10, quick: bool = False, reps: int = 3):
                 / max(rep.total_iterations, 1), 2)
             if rep.occupancy is not None:
                 row["occupancy"] = rep.occupancy
+            if method == "cold_pallas":
+                row["hbm_per_iter"] = _hbm_iter_estimate(rep.n,
+                                                         ds.X.shape[1])
             rows.append(row)
         rows.append(_ato_bucketed_row(name, k, reps))
         rows.extend(_grid_rows(name, reps))

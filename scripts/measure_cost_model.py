@@ -1,0 +1,162 @@
+#!/usr/bin/env python
+"""Measure the lane scheduler's dispatch-width cost model.
+
+The pool's ``max_width`` verdict ("how many lanes may share one vmapped
+chunk program before per-lane cost degrades") used to be hard-coded in
+``svm/scheduler.py``. This harness measures it with the pool itself: for
+each source kind (dense matrix vs row-streaming pallas) it runs a
+``LanePool`` of heterogeneous lanes (spread C values, distinct fold-like
+masks — so convergence is staggered, exactly the workload the scheduler
+repacks for) at each forced ``max_width`` and divides wall-clock by the
+total *useful* iterations ``sum_h n_iter_h``. That metric charges the
+batched program for its real overheads — frozen mid-chunk lanes, padded
+widths, batched gathers — not just raw vmap throughput.
+
+Verdict per (backend, kind):
+
+    max_width = 1     when width-1 is within SLACK (10%) of the best
+                      width — the sequential program is preferred at
+                      marginal differences (per-lane retirement
+                      granularity, O(n) packed state, and the spread at
+                      these chunk durations is near timing noise)
+    best width        when a bounded width wins by more than SLACK
+    0 (unbounded)     when the largest measured width is the winner
+
+The verdict lands in ``results/cost_model.json`` (see
+``svm/cost_model.py`` for the schema), which ``LanePool`` loads at
+construction. CI runs ``--quick`` and asserts the file parses with a CPU
+entry; on this container the full run reproduces the historical width-1
+CPU verdict for both kinds.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import platform
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.svm import cost_model
+from repro.svm.engine import DenseKernel, PallasRBF
+from repro.svm.kernels import kernel_matrix
+from repro.svm.scheduler import LanePool
+
+#: width-1 keeps the cap unless a batched width beats it by this factor
+SLACK = 1.10
+
+#: staggered-convergence lane spread (grid-like C heterogeneity)
+C_SPREAD = (0.25, 0.5, 1.0, 2.0, 4.0, 1.0, 0.5, 2.0)
+
+
+def _problem(n: int, d: int, gamma: float, n_lanes: int):
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.normal(size=(n, d)))
+    y = jnp.asarray(np.where(rng.random(n) < 0.5, -1.0, 1.0))
+    masks = [jnp.asarray(np.random.default_rng(10 + h).random(n) < 0.85)
+             for h in range(n_lanes)]
+    Cs = [C_SPREAD[h % len(C_SPREAD)] for h in range(n_lanes)]
+    sources = {"dense": DenseKernel(kernel_matrix(X, X, gamma=gamma)),
+               "pallas_rbf": PallasRBF(X, gamma)}
+    return sources, y, masks, Cs
+
+
+def measure_kind(kind: str, source, y, masks, Cs, *, widths, chunk_iters,
+                 reps: int) -> dict:
+    """us per useful lane-iteration at each forced ``max_width``."""
+    n = y.shape[0]
+    wss = "1" if getattr(source, "fused", False) else "2"
+
+    def run(width: int):
+        pool = LanePool({kind: source}, y, wss=wss, max_width=width,
+                        chunk_iters=chunk_iters)
+        for h, (mask, C) in enumerate(zip(masks, Cs)):
+            pool.add(h, mask, C, jnp.zeros(n, source.dtype), -y,
+                     source=kind)
+        t0 = time.perf_counter()
+        results = pool.run()
+        dt = time.perf_counter() - t0
+        return dt, sum(int(r.n_iter) for r in results.values())
+
+    run(1)                                  # warm (compile both programs)
+    run(max(widths))
+    cost = {}
+    for w in widths:
+        best = np.inf
+        for _ in range(reps):
+            dt, iters = run(w)
+            best = min(best, dt / max(iters, 1))
+        cost[str(w)] = best * 1e6
+        print(f"  {kind:>10s} width {w:>2d}: "
+              f"{cost[str(w)]:8.2f} us/useful-lane-iter", flush=True)
+    best_w = min(widths, key=lambda w: cost[str(w)])
+    if cost["1"] <= SLACK * cost[str(best_w)]:
+        max_width = 1
+    elif best_w == max(widths):
+        max_width = 0                       # more is better: unbounded
+    else:
+        max_width = best_w
+    return {"max_width": max_width, "us_per_lane_iter": cost}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--n", type=int, default=1000,
+                    help="instances per synthetic lane problem")
+    ap.add_argument("--d", type=int, default=40)
+    ap.add_argument("--chunk-iters", type=int, default=2048,
+                    help="pool dispatch granularity (production default)")
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--widths", type=int, nargs="+", default=[1, 2, 4, 8])
+    ap.add_argument("--out", default=None,
+                    help="output path (default: the loader's path, "
+                         "results/cost_model.json or $REPRO_COST_MODEL)")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizing (small n, widths 1/2, 1 rep)")
+    args = ap.parse_args(argv)
+    if args.quick:
+        args.n, args.chunk_iters, args.reps = 200, 256, 1
+        args.widths = [1, 2]
+    if 1 not in args.widths:
+        ap.error("widths must include 1 (the sequential baseline)")
+
+    backend = jax.default_backend()
+    print(f"backend={backend} n={args.n} d={args.d} "
+          f"chunk_iters={args.chunk_iters} widths={args.widths}", flush=True)
+    sources, y, masks, Cs = _problem(args.n, args.d, gamma=0.5,
+                                     n_lanes=max(args.widths))
+    entries = {kind: measure_kind(kind, src, y, masks, Cs,
+                                  widths=args.widths,
+                                  chunk_iters=args.chunk_iters,
+                                  reps=args.reps)
+               for kind, src in sources.items()}
+
+    out_path = pathlib.Path(args.out) if args.out else cost_model.model_path()
+    try:
+        model = json.loads(out_path.read_text())
+        assert isinstance(model.get("entries"), dict)
+    except (OSError, ValueError, AssertionError):
+        model = {"entries": {}}
+    model["schema"] = 1
+    model.setdefault("meta", {})[backend] = {
+        "n": args.n, "d": args.d, "chunk_iters": args.chunk_iters,
+        "widths": args.widths, "n_lanes": len(masks),
+        "quick": bool(args.quick), "slack": SLACK,
+        "platform": platform.platform(), "jax": jax.__version__,
+    }
+    model["entries"][backend] = entries
+
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(model, indent=2, sort_keys=True) + "\n")
+    for kind, e in entries.items():
+        print(f"{backend}/{kind}: max_width={e['max_width']}")
+    print(f"wrote {out_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -44,8 +44,9 @@ import numpy as np
 from repro.core import seeding
 from repro.core.study import Plan, StudyCheckpoint, run_plan
 from repro.data.svm_suite import SVMDataset, kfold_chunks
-from repro.svm import (DenseKernel, bias_from_solution, dual_objective,
-                       kernel_matrix, predict, smo_solve_batched)
+from repro.svm import (DenseKernel, PallasRBF, bias_from_solution,
+                       dual_objective, kernel_matrix, predict,
+                       smo_solve_batched)
 
 # step numbering inside a checkpoint directory: fold h's mid-fold chunk
 # snapshots live at h*_FOLD_STRIDE + 1 + chunk, its completion record at
@@ -143,6 +144,20 @@ def _eval_fold(K, y, chunks, h, res, C) -> tuple[int, int, float]:
     pred = predict(K[test_idx], y, res.alpha, b)
     return (int(jnp.sum(pred == y[test_idx])), int(test_idx.shape[0]),
             float(dual_objective(K, y, res.alpha)))
+
+
+def _eval_fold_rows(source, y, chunks, h, res, C) -> tuple[int, int, float]:
+    """``_eval_fold`` for row-streaming sources: the test-chunk kernel rows
+    come from ``rows_at`` and the dual objective's quadratic term from the
+    streaming ``matvec`` — no (n, n) matrix is ever resident."""
+    test_idx = jnp.asarray(chunks[h])
+    train_mask = jnp.ones(chunks.size, bool).at[test_idx].set(False)
+    b = bias_from_solution(res, y, train_mask, C)
+    pred = predict(source.rows_at(test_idx), y, res.alpha, b)
+    v = res.alpha * y
+    obj = jnp.sum(res.alpha) - 0.5 * jnp.dot(v, source.matvec(v))
+    return (int(jnp.sum(pred == y[test_idx])), int(test_idx.shape[0]),
+            float(obj))
 
 
 def _fold_masks(chunks: np.ndarray) -> np.ndarray:
@@ -375,7 +390,8 @@ def run_cv_batched(ds: SVMDataset, k: int = 10, tol: float = 1e-3,
                    max_iter: int = 5_000_000, seed: int = 0,
                    kernel_backend: str = "jnp", chunk_iters: int = 4096,
                    schedule: str = "repacked", lane_quantum: int = 4,
-                   max_width: int | None = None, checkpoint_manager=None,
+                   max_width: int | None = None,
+                   source_backend: str = "dense", checkpoint_manager=None,
                    checkpoint_every: int = 1) -> CVReport:
     """Cold k-fold CV with all folds solved concurrently: independent
     solves are a batch, not a loop.
@@ -391,6 +407,17 @@ def run_cv_batched(ds: SVMDataset, k: int = 10, tol: float = 1e-3,
       ``sum_h n_iter_h`` (DESIGN.md §Lane scheduler / §Study API);
     * ``"batched"`` (method "cold_batched") — the fixed-width
       ``engine.solve_batched`` batch kept as the repack baseline.
+
+    ``source_backend="pallas_rbf"`` (repacked schedule only, method
+    "cold_pallas") swaps the dense precomputed matrix for the
+    row-streaming ``PallasRBF`` source: no (n, n) kernel is ever built
+    (``kernel_time`` then covers only the O(n·d) row-norm precompute),
+    the folds solve under WSS-1 with the fused kernel-row + f-update
+    Pallas step, and held-out evaluation streams test-chunk rows via
+    ``rows_at`` / the dual objective via ``matvec``. Alphas match the
+    dense WSS-1 solve bit-for-bit in interpret mode (DESIGN.md §Pallas
+    sources); they differ from the default WSS-2 methods' iterate
+    sequence, as any WSS choice does.
 
     Both produce the same per-fold fixed points as ``run_cv(method="cold")``
     (bit-identical alphas — the engine body is shared); only the schedule
@@ -408,6 +435,12 @@ def run_cv_batched(ds: SVMDataset, k: int = 10, tol: float = 1e-3,
     if checkpoint_manager is not None and schedule != "repacked":
         raise ValueError("mid-batch checkpointing requires the repacked "
                          "schedule (snapshots are keyed by scheduler lane)")
+    if source_backend not in ("dense", "pallas_rbf"):
+        raise ValueError(f"unknown source_backend {source_backend!r}")
+    if source_backend == "pallas_rbf" and schedule != "repacked":
+        raise ValueError("source_backend='pallas_rbf' requires the repacked "
+                         "schedule: the streaming source runs through the "
+                         "lane pool, not engine.solve_batched on a matrix")
     X = jnp.asarray(ds.X)
     y = jnp.asarray(ds.y, jnp.float64)
 
@@ -416,9 +449,15 @@ def run_cv_batched(ds: SVMDataset, k: int = 10, tol: float = 1e-3,
     # slice before the kernel call (see run_cv): no wasted (N, N) compute,
     # bit-aligned with run_grid's KernelSpec sources
     t0 = time.perf_counter()
-    K = kernel_matrix(X[:n], X[:n], kind="rbf", gamma=ds.gamma,
-                      backend=kernel_backend)
-    K.block_until_ready()
+    if source_backend == "pallas_rbf":
+        K = None
+        source = PallasRBF(X[:n], ds.gamma)
+        source.sq_norms.block_until_ready()
+    else:
+        K = kernel_matrix(X[:n], X[:n], kind="rbf", gamma=ds.gamma,
+                          backend=kernel_backend)
+        K.block_until_ready()
+        source = DenseKernel(K)
     kernel_time = time.perf_counter() - t0
     y = y[:n]
     masks = jnp.asarray(_fold_masks(chunks))
@@ -444,10 +483,13 @@ def run_cv_batched(ds: SVMDataset, k: int = 10, tol: float = 1e-3,
                         kernel_time=kernel_time, folds=folds)
 
     # ---- repacked schedule: a k-lane cold plan ----
-    plan = Plan(sources={"cv": DenseKernel(K)}, y=y, tol=tol,
+    method = ("cold_pallas" if source_backend == "pallas_rbf"
+              else "cold_batched_repacked")
+    plan = Plan(sources={"cv": source}, y=y, tol=tol,
+                wss="1" if source_backend == "pallas_rbf" else "2",
                 chunk_iters=chunk_iters, lane_quantum=lane_quantum,
                 max_width=max_width)
-    zeros = jnp.zeros(n, K.dtype)
+    zeros = jnp.zeros(n, source.dtype)
     for h in range(k):
         plan.lane(h, train_mask=masks[h], C=ds.C, alpha0=zeros, f0=-y,
                   max_iter=max_iter)
@@ -462,7 +504,7 @@ def run_cv_batched(ds: SVMDataset, k: int = 10, tol: float = 1e-3,
             manager=checkpoint_manager, every=checkpoint_every,
             retain_class="batch", phase="batch_mid", base_step=_BATCH_BASE,
             meta={"k": k, "dataset": ds.name, "seed": seed, "tol": tol,
-                  "max_iter": max_iter, "method": "cold_batched_repacked"})
+                  "max_iter": max_iter, "method": method})
 
     t0 = time.perf_counter()
     sres = run_plan(plan, checkpoint=checkpoint)
@@ -473,14 +515,16 @@ def run_cv_batched(ds: SVMDataset, k: int = 10, tol: float = 1e-3,
     folds = []
     for h in range(k):
         res = sres.results[h]
-        correct, total, obj = _eval_fold(K, y, chunks, h, res, ds.C)
+        correct, total, obj = (
+            _eval_fold(K, y, chunks, h, res, ds.C) if K is not None
+            else _eval_fold_rows(source, y, chunks, h, res, ds.C))
         folds.append(FoldStat(
             fold=h, seed_from=-1, n_iter=int(res.n_iter),
             init_time=0.0,
             solve_time=0.0 if h in done_at_start else solve_time / live,
             acc_correct=correct, acc_total=total, objective=obj,
             converged=bool(res.converged), restored=h in done_at_start))
-    return CVReport(dataset=ds.name, method="cold_batched_repacked", k=k,
+    return CVReport(dataset=ds.name, method=method, k=k,
                     n=n, kernel_time=kernel_time, folds=folds,
                     occupancy=sres.occupancy)
 

@@ -170,6 +170,7 @@ def run_grid(ds: SVMDataset, Cs, gammas, k: int = 10, method: str = "sir",
              kernel_backend: str = "jnp", lane_quantum: int = 4,
              max_width: int | None = None, pool: str = "cross_gamma",
              max_resident: int = 0, cache_bytes: int = 0,
+             source_backend: str = "dense",
              checkpoint_manager=None,
              checkpoint_every: int = 1) -> GridReport:
     """Cross-validate every (C, gamma) cell; returns per-cell accuracy and
@@ -199,9 +200,19 @@ def run_grid(ds: SVMDataset, Cs, gammas, k: int = 10, method: str = "sir",
     function of (X, gamma)). ``kernel_time`` counts every materialization,
     including re-materializations after eviction or a mid-study resume;
     ``GridReport.resident`` carries the cache account.
+
+    ``source_backend="pallas_rbf"`` resolves every gamma's spec to a
+    row-streaming ``PallasRBF`` source instead of a dense matrix: no lane
+    ever touches an n² kernel (peak resident bytes track X, not n²), WSS-1
+    selection is forced, and evaluations run off row slabs. Requires
+    ``method="cold"`` — the fold-transition seeders slab-index a dense K.
     """
     if pool not in ("cross_gamma", "per_gamma"):
         raise ValueError(f"unknown pool {pool!r}")
+    if source_backend == "pallas_rbf" and method != "cold":
+        raise ValueError("source_backend='pallas_rbf' requires "
+                         "method='cold': fold-transition seeders "
+                         "slab-index a dense kernel matrix")
     if checkpoint_manager is not None and pool != "cross_gamma":
         raise ValueError("grid checkpointing is plan-keyed and needs the "
                          "cross-gamma pool (one study = one record stream)")
@@ -233,9 +244,10 @@ def run_grid(ds: SVMDataset, Cs, gammas, k: int = 10, method: str = "sir",
 
     def make_plan(keys) -> Plan:
         plan = Plan(sources={gi: sources[gi] for gi in keys}, y=y, tol=tol,
+                    wss="1" if source_backend == "pallas_rbf" else "2",
                     chunk_iters=chunk_iters, lane_quantum=lane_quantum,
                     max_width=max_width, max_resident=max_resident,
-                    cache_bytes=cache_bytes)
+                    cache_bytes=cache_bytes, source_backend=source_backend)
         for gi in keys:
             _row_lanes(plan, gi, Cs, masks, transitions, method,
                        seed_across_C, max_iter, zeros, y, chunks)

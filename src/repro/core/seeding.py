@@ -622,6 +622,11 @@ def scale_C_transform(K, y, C, prev, *, C_old, train_mask):
     return scale_seed_C(prev.alpha, y, C_old, C, train_mask)
 
 
+#: scale_C never touches K, so the Study API admits it on K-less
+#: (row-streaming) sources, deriving f0 from the source's streaming matvec
+scale_C_transform.kernel_free = True
+
+
 @register_transform("loo_avg")
 def loo_avg_transform(K, y, C, prev, *, t):
     """LOO round entry (DeCoste & Wagstaff AVG): remove instance ``t`` from

@@ -59,7 +59,7 @@ import numpy as np
 from repro.core import seeding
 from repro.svm.engine import EngineState, finalize
 from repro.svm.scheduler import LanePool
-from repro.svm.sources import is_factory
+from repro.svm.sources import KernelSpec, is_factory
 from repro.svm.smo import init_f
 from repro.svm.svc import bias_from_solution, predict
 
@@ -117,6 +117,12 @@ class Plan:
     #: (schedule-distance eviction — DESIGN.md §Kernel-source cache)
     max_resident: int = 0
     cache_bytes: int = 0
+    #: kernel-source backend for the plan's declared ``KernelSpec``s:
+    #: ``"dense"`` leaves them as declared; ``"pallas_rbf"`` rewrites every
+    #: dense-RBF spec to the row-streaming kind (``svm/engine.py:PallasRBF``
+    #: — nbytes = X bytes, fused, requires ``wss="1"``), so one knob flips
+    #: a whole plan between n²-resident and row-streaming execution
+    source_backend: str = "dense"
 
     def lane(self, id, **kwargs) -> LaneSpec:
         spec = LaneSpec(id=id, **kwargs)
@@ -194,6 +200,19 @@ def _eval_lanes_jit(K, y, test_idx, train_masks, Cs, res):
     return jax.vmap(one)(test_idx, train_masks, Cs, res)
 
 
+@jax.jit
+def _eval_lanes_rows_jit(K_rows, y, test_idx, train_masks, Cs, res):
+    """Row-slab variant for K-less (row-streaming) sources: ``K_rows``
+    (b, t, n) holds each lane's test rows, computed by ``rows_at`` —
+    O(t*n) transient per group, never n² resident."""
+    def one(Kr, ti, mask, C, r):
+        b = bias_from_solution(r, y, mask, C)
+        pred = predict(Kr, y, r.alpha, b)
+        return jnp.sum(pred == y[ti])
+
+    return jax.vmap(one)(K_rows, test_idx, train_masks, Cs, res)
+
+
 def _freeze(x):
     """JSON round-trips tuples as lists; lane ids are hashable keys, so
     freeze them back on restore."""
@@ -213,25 +232,43 @@ def _make_seed_fn(plan: Plan, spec: LaneSpec, resolve):
         source = resolve(key)
         K = getattr(source, "K", None)
         if K is None:
-            raise ValueError(f"lane {spec.id!r}: seed transforms need a "
-                             f"dense kernel source (source {key!r} has "
-                             "no K)")
+            # kernel-free transforms (seeding.py marks them) never touch
+            # K; f0 comes from the source's streaming matvec instead of
+            # the dense init_f
+            if getattr(fn, "kernel_free", False) and \
+                    callable(getattr(source, "matvec", None)):
+                alpha0 = fn(None, y, C, prev, **params)
+                return alpha0, source.matvec(alpha0 * y) - y
+            raise ValueError(f"lane {spec.id!r}: transform "
+                             f"{spec.transform!r} needs a dense kernel "
+                             f"source (source {key!r} has no K)")
         alpha0 = fn(K, y, C, prev, **params)
         return alpha0, init_f(K, y, alpha0)
 
     return seed
 
 
-def _check_dense(plan: Plan, lane_id, key, what: str) -> None:
-    """Seed transforms and evaluations need a dense K. For an
-    already-materialized (pinned) source that is checkable AT ENTRY — a
-    non-dense source must not fail only after its dependency solved for
-    hours. Factory entries stay deferred (their product is unknowable
-    without computing it); the lazy resolution re-checks them."""
+def _check_dense(plan: Plan, lane_id, key, what: str,
+                 transform: str | None = None) -> None:
+    """Seed transforms and evaluations need a dense K — unless the
+    source supports the K-less alternative: kernel-free transforms run
+    off a streaming ``matvec``, evaluations off a ``rows_at`` row slab.
+    For an already-materialized (pinned) source that is checkable AT
+    ENTRY — an incompatible source must not fail only after its
+    dependency solved for hours. Factory entries stay deferred for the
+    capabilities a spec cannot declare; the lazy resolution re-checks."""
     entry = plan.sources[key]
-    if not is_factory(entry) and getattr(entry, "K", None) is None:
-        raise ValueError(f"lane {lane_id!r}: {what} a dense kernel "
-                         f"source (source {key!r} has no K)")
+    if is_factory(entry) or getattr(entry, "K", None) is not None:
+        return
+    if transform is not None:
+        fn = seeding.TRANSFORMS[transform]
+        if getattr(fn, "kernel_free", False) and \
+                callable(getattr(entry, "matvec", None)):
+            return
+    elif callable(getattr(entry, "rows_at", None)):
+        return
+    raise ValueError(f"lane {lane_id!r}: {what} a dense kernel "
+                     f"source (source {key!r} has no K)")
 
 
 def _validate_plan(plan: Plan, specs: dict) -> None:
@@ -257,7 +294,8 @@ def _validate_plan(plan: Plan, specs: dict) -> None:
                                  f"{spec.transform!r} (have "
                                  f"{sorted(seeding.TRANSFORMS)})")
             _check_dense(plan, spec.id, plan.source_key_of(spec),
-                         "seed transforms need")
+                         f"transform {spec.transform!r} needs",
+                         transform=spec.transform)
     for ev in plan.evals:
         if ev.lane not in specs:
             raise ValueError(f"EvalSpec targets undeclared lane {ev.lane!r}")
@@ -309,6 +347,19 @@ def run_plan(plan: Plan, *, checkpoint: StudyCheckpoint | None = None,
     results — bit-identical to the uninterrupted run, under ANY schedule
     shape on either side of the crash.
     """
+    if plan.source_backend not in ("dense", "pallas_rbf"):
+        raise ValueError(f"unknown source_backend {plan.source_backend!r} "
+                         "(have 'dense', 'pallas_rbf')")
+    if plan.source_backend == "pallas_rbf":
+        if plan.wss != "1":
+            raise ValueError("source_backend='pallas_rbf' streams both "
+                             "kernel rows through the fused step kernel "
+                             "and requires WSS-1 (wss='1')")
+        plan = dataclasses.replace(plan, sources={
+            k: (dataclasses.replace(s, kind="pallas_rbf")
+                if isinstance(s, KernelSpec) and s.kind == "rbf" else s)
+            for k, s in plan.sources.items()})
+
     specs: dict[Any, LaneSpec] = {}
     for spec in plan.lanes:
         if spec.id in specs:
@@ -425,7 +476,8 @@ def run_plan(plan: Plan, *, checkpoint: StudyCheckpoint | None = None,
     for (key, t_sz), evs in sorted(groups.items(),
                                    key=lambda kv: key_rank[kv[0][0]]):
         source, y = pool.resolve_source(key), plan.y_of(key)
-        if getattr(source, "K", None) is None:
+        K = getattr(source, "K", None)
+        if K is None and not callable(getattr(source, "rows_at", None)):
             raise ValueError(f"EvalSpec on lane {evs[0].lane!r}: evaluation "
                              f"needs a dense kernel source (source {key!r} "
                              "has no K)")
@@ -435,8 +487,15 @@ def run_plan(plan: Plan, *, checkpoint: StudyCheckpoint | None = None,
                                          for ev in evs]))
         masks = jnp.stack([specs[ev.lane].train_mask for ev in evs])
         Cs = jnp.asarray([specs[ev.lane].C for ev in evs], jnp.float64)
-        correct = jax.device_get(
-            _eval_lanes_jit(source.K, y, test_idx, masks, Cs, res))
+        if K is None:
+            # K-less source: one O(b*t*n) row slab per group instead of K
+            K_rows = source.rows_at(test_idx.reshape(-1)).reshape(
+                test_idx.shape[0], t_sz, -1)
+            correct = jax.device_get(
+                _eval_lanes_rows_jit(K_rows, y, test_idx, masks, Cs, res))
+        else:
+            correct = jax.device_get(
+                _eval_lanes_jit(K, y, test_idx, masks, Cs, res))
         for ev, c in zip(evs, correct):
             evals[ev.lane] = (int(c), t_sz)
 

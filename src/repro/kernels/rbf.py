@@ -21,6 +21,16 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def auto_interpret(interpret: bool | None) -> bool:
+    """Resolve an ``interpret=None`` default: interpret mode (kernel body
+    run in Python) only when the backend has no Mosaic compiler — i.e. the
+    CPU validation path. TPU callers get compiled kernels without passing
+    a flag."""
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return bool(interpret)
+
+
 def _rbf_kernel(xn_ref, zn_ref, x_ref, z_ref, o_ref, acc_ref, *, gamma,
                 n_k_steps):
     k_step = pl.program_id(2)
@@ -42,12 +52,13 @@ def _rbf_kernel(xn_ref, zn_ref, x_ref, z_ref, o_ref, acc_ref, *, gamma,
 @functools.partial(jax.jit,
                    static_argnames=("gamma", "bm", "bn", "bk", "interpret"))
 def rbf_kernel_matrix(X, Z, gamma: float, *, bm: int = 128, bn: int = 128,
-                      bk: int = 512, interpret: bool = True):
+                      bk: int = 512, interpret: bool | None = None):
     """K[i,j] = exp(-gamma * ||X_i - Z_j||^2); X (n,d), Z (m,d) -> (n,m).
 
-    ``interpret=True`` runs the kernel body in Python on CPU (validation
-    mode for this container); on TPU pass interpret=False.
+    ``interpret=None`` auto-detects: the kernel body runs in Python on
+    CPU (validation mode for this container) and compiles elsewhere.
     """
+    interpret = auto_interpret(interpret)
     n, d = X.shape
     m = Z.shape[0]
     pad_n = (-n) % bm

@@ -32,3 +32,12 @@ def flash_attention_ref(q, k, v, *, causal=True, window=None):
 def smo_f_update_ref(f, K_i, K_j, delta):
     """The SMO inner-loop rank-2 indicator update (paper Eq. 2 delta)."""
     return f + delta * (K_i - K_j)
+
+
+def fused_smo_step_ref(f, X, xij, sq_norms, delta, gamma):
+    """Fused pair-rows + rank-2 update: the FusedRBF.rows2 expression."""
+    cross = X @ xij.T
+    d2 = jnp.maximum(sq_norms[:, None] + jnp.sum(xij * xij, 1)[None]
+                     - 2.0 * cross, 0.0)
+    K2 = jnp.exp(-gamma * d2)
+    return f + delta * (K2[:, 0] - K2[:, 1])

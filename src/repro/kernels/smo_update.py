@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.rbf import auto_interpret
+
 
 def _fupdate_kernel(f_ref, ki_ref, kj_ref, delta_ref, o_ref):
     o_ref[...] = f_ref[...] + delta_ref[0, 0] * (ki_ref[...] - kj_ref[...])
@@ -20,8 +22,13 @@ def _fupdate_kernel(f_ref, ki_ref, kj_ref, delta_ref, o_ref):
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def smo_f_update(f, K_i, K_j, delta, *, block: int = 8192,
-                 interpret: bool = True):
-    """f, K_i, K_j: (n,); delta scalar -> updated f."""
+                 interpret: bool | None = None):
+    """f, K_i, K_j: (n,); delta scalar -> updated f.
+
+    ``interpret=None`` auto-detects (Python kernel body on CPU, compiled
+    elsewhere) — see :func:`repro.kernels.rbf.auto_interpret`.
+    """
+    interpret = auto_interpret(interpret)
     n = f.shape[0]
     pad = (-n) % block
     fp = jnp.pad(f, (0, pad))[None, :]

@@ -10,7 +10,7 @@ jax.config.update("jax_enable_x64", True)
 
 from repro.svm.kernels import rbf_kernel, linear_kernel, kernel_matrix  # noqa: E402,F401
 from repro.svm.engine import (  # noqa: E402,F401
-    DenseKernel, EngineState, FusedRBF, OnDemandRBF, ShardedRBF)
+    DenseKernel, EngineState, FusedRBF, OnDemandRBF, PallasRBF, ShardedRBF)
 from repro.svm.sources import KernelSpec, SourceCache  # noqa: E402,F401
 from repro.svm.scheduler import LanePool, LaneScheduler  # noqa: E402,F401
 from repro.svm.smo import (  # noqa: E402,F401

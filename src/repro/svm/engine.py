@@ -27,6 +27,11 @@ has not been materialized yet:
   scalars via one-hot contractions so the instance axis can stay sharded).
 * ``FusedRBF``     — WSS-1 pair selection from f alone, then BOTH kernel
   rows in one pass over X (halves the dominant HBM stream).
+* ``PallasRBF``    — FusedRBF's math as ONE fused Pallas launch per
+  iteration (``kernels/smo_step.py``): kernel-row pair + rank-2 f-update
+  in a single blocked pass over X, never materializing rows in HBM.
+  ``streams_rows = True`` — the engine routes the f-update through
+  ``update_f(f, i, j, delta)`` instead of asking for rows.
 * ``ShardedRBF``   — OnDemandRBF/FusedRBF plus logical-axis sharding
   constraints for the production mesh (the old ``distributed.py`` path).
 
@@ -64,6 +69,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.rbf import auto_interpret
+from repro.kernels.smo_step import fused_smo_step
 from repro.sharding import constrain
 
 _INF = jnp.inf
@@ -188,12 +195,21 @@ class DenseKernel:
     sharded sources use to keep the instance axis distributed) was measured
     ~1.8x slower per batched iteration on CPU — the extra (b, n) masked
     passes cost more than the batched gathers they replace.
+
+    ``fupdate`` selects the rank-2 indicator-update implementation:
+    ``"jnp"`` is the plain expression, ``"pallas"`` routes through the
+    fused ``kernels/smo_update.py`` tile kernel (elementwise, so the two
+    are bit-identical), ``"auto"`` picks pallas off-CPU — the same
+    backend auto-detect the kernels themselves use.
     """
 
     fused = False
 
-    def __init__(self, K):
+    def __init__(self, K, fupdate: str = "auto"):
         self.K = K
+        if fupdate == "auto":
+            fupdate = "jnp" if jax.default_backend() == "cpu" else "pallas"
+        self.fupdate = fupdate
 
     @property
     def dtype(self):
@@ -221,15 +237,21 @@ class DenseKernel:
         alpha = alpha.at[i].add(y_i * delta)
         return alpha.at[j].add(-y_j * delta)
 
+    def update_f(self, f, K_i, K_j, delta):
+        if self.fupdate == "pallas":
+            from repro.kernels.smo_update import smo_f_update
+            return smo_f_update(f, K_i, K_j, delta)
+        return f + delta * (K_i - K_j)
+
     def constrain(self, v):
         return v
 
     def tree_flatten(self):
-        return (self.K,), None
+        return (self.K,), (self.fupdate,)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children)
+        return cls(children[0], fupdate=aux[0])
 
 
 @jax.tree_util.register_pytree_node_class
@@ -299,6 +321,9 @@ class OnDemandRBF:
         alpha = alpha.at[i].add(y_i * delta)
         return alpha.at[j].add(-y_j * delta)
 
+    def update_f(self, f, K_i, K_j, delta):
+        return f + delta * (K_i - K_j)
+
     def constrain(self, v):
         return v
 
@@ -319,6 +344,107 @@ class FusedRBF(OnDemandRBF):
 
     def __init__(self, X, gamma: float, sq_norms=None, impl: str = "onehot_fused"):
         super().__init__(X, gamma, sq_norms, impl="onehot_fused")
+
+
+@jax.tree_util.register_pytree_node_class
+class PallasRBF(OnDemandRBF):
+    """Row-streaming RBF source over the fused Pallas step kernel.
+
+    Holds only X (``nbytes`` = X bytes, not n² kernel bytes): each SMO
+    iteration is one blocked pass over X that computes the WSS-1 pair's
+    kernel rows on the MXU and applies ``f += delta * (K_i - K_j)`` on the
+    VPU in the same launch (``kernels/smo_step.py``) — the rows never hit
+    HBM. ``streams_rows = True`` tells the engine to route the update
+    through ``update_f(f, i, j, delta)`` / ``kij(i, j)`` instead of
+    materializing rows; selection must therefore be WSS-1 (``fused``).
+
+    Interpret-mode contract: on CPU (``interpret=None`` auto) the kernel
+    runs with full-array blocks — no padding, one contraction step — so
+    every op matches ``FusedRBF``'s jnp expression and alpha/f are
+    bit-identical to ``FusedRBF``, solo and vmapped under the lane pool
+    (tests/test_engine.py). Compiled launches use MXU-aligned blocks and
+    carry the usual allclose guarantee only.
+    """
+
+    streams_rows = True
+
+    def __init__(self, X, gamma: float, sq_norms=None,
+                 impl: str = "onehot_fused", *, bm: int | None = None,
+                 bk: int | None = None, interpret: bool | None = None):
+        super().__init__(X, gamma, sq_norms, impl="onehot_fused")
+        self.bm = bm
+        self.bk = bk
+        self.interpret = auto_interpret(interpret)
+
+    @property
+    def nbytes(self) -> int:
+        """Resident bytes are X's — the whole point: the cache budget
+        bounds rows-from-X sources by O(n*d), not O(n^2)."""
+        return int(self.X.nbytes)
+
+    def _pair(self, i, j):
+        """The WSS pair's feature rows (2, d) via the onehot contraction
+        (sharding-friendly, and exactly how ``rows2`` gathers them)."""
+        X = self.X
+        oh2 = jnp.stack([(jnp.arange(X.shape[0]) == i).astype(X.dtype),
+                         (jnp.arange(X.shape[0]) == j).astype(X.dtype)])
+        return oh2 @ X
+
+    def kij(self, i, j):
+        """K[i, j] for the eta denominator without keeping a row around.
+
+        Interpret mode reuses the inherited one-pass ``rows2`` expression
+        so the scalar is bit-identical to FusedRBF's (the parity
+        contract); compiled mode uses the O(d) pair-only evaluation.
+        """
+        if self.interpret:
+            K_i, _ = self.rows2(i, j)
+            return self.read(K_i, j)
+        xij = self._pair(i, j)
+        d2 = jnp.maximum(jnp.sum((xij[0] - xij[1]) ** 2), 0.0)
+        return jnp.exp(-self.gamma * d2)
+
+    def update_f(self, f, i, j, delta):
+        xij = self._pair(i, j)
+        return fused_smo_step(f, self.X, xij, self.sq_norms, delta,
+                              gamma=self.gamma, bm=self.bm, bk=self.bk,
+                              interpret=self.interpret)
+
+    def rows_at(self, idx):
+        """Kernel row slab K[idx, :] -> (t, n) — the evaluation path for
+        K-less sources: O(t*n) transient, never n^2 resident."""
+        Xi = self.X[jnp.asarray(idx)]
+        d2 = jnp.maximum(jnp.sum(Xi * Xi, -1)[:, None] + self.sq_norms[None]
+                         - 2.0 * (Xi @ self.X.T), 0.0)
+        return jnp.exp(-self.gamma * d2)
+
+    def matvec(self, v, *, block: int = 2048):
+        """Streaming ``K @ v`` (for ``init_f`` on seeded lanes): kernel
+        row blocks are formed and reduced immediately, O(block*n)
+        transient memory."""
+        n, d = self.X.shape
+        pad = (-n) % block
+        Xb = jnp.pad(self.X, ((0, pad), (0, 0))).reshape(-1, block, d)
+        sqb = jnp.pad(self.sq_norms, (0, pad)).reshape(-1, block)
+
+        def one(args):
+            xb, sb = args
+            d2 = jnp.maximum(sb[:, None] + self.sq_norms[None]
+                             - 2.0 * (xb @ self.X.T), 0.0)
+            return jnp.exp(-self.gamma * d2) @ v
+
+        return jax.lax.map(one, (Xb, sqb)).reshape(-1)[:n]
+
+    def tree_flatten(self):
+        return (self.X, self.sq_norms), \
+            (self.gamma, self.impl, self.bm, self.bk, self.interpret)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        X, sq_norms = children
+        gamma, impl, bm, bk, interpret = aux
+        return cls(X, gamma, sq_norms, impl, bm=bm, bk=bk,
+                   interpret=interpret)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -358,6 +484,7 @@ def _step(source, y, train_mask, C, diag, tol, it_cap, wss, state):
     # --- select i: minimal f over I_up ---
     i = _argmin(jnp.where(i_up, f, _INF))
     f_i = source.read(f, i)
+    streams = getattr(source, "streams_rows", False)
     if wss == "2":
         # LibSVM WSS-2: among j in I_low with f_j > f_i, maximise
         # (f_j - f_i)^2 / eta_j.
@@ -369,24 +496,34 @@ def _step(source, y, train_mask, C, diag, tol, it_cap, wss, state):
         K_j = source.row(j)
     else:
         # WSS-1 (maximal violating pair): j from f alone, so fused sources
-        # can evaluate both kernel rows in a single pass.
+        # can evaluate both kernel rows in a single pass — and streaming
+        # sources can defer them to the fused update launch entirely.
         j = _argmax(jnp.where(i_low, f, -_INF))
-        K_i, K_j = source.rows2(i, j)
+        if not streams:
+            K_i, K_j = source.rows2(i, j)
 
     # --- analytic 2-variable update, delta >= 0 along (+y_i, -y_j) ---
     f_j = source.read(f, j)
     a_i, a_j = source.read(alpha, i), source.read(alpha, j)
     y_i, y_j = source.read(y, i), source.read(y, j)
+    # K[i,j] for the eta denominator: a scalar hook for streaming sources
+    # (no row in scope), the hoisted row read otherwise (pure dataflow —
+    # bit-identical to reading it inline below)
+    K_ij = source.kij(i, j) if streams else source.read(K_i, j)
     eta_ij = jnp.maximum(source.read(diag, i) + source.read(diag, j)
-                         - 2.0 * source.read(K_i, j), _TAU)
+                         - 2.0 * K_ij, _TAU)
     delta = (f_j - f_i) / eta_ij
     hi_i = jnp.where(y_i > 0, C - a_i, a_i)
     hi_j = jnp.where(y_j > 0, a_j, C - a_j)
     delta = jnp.maximum(jnp.minimum(jnp.minimum(delta, hi_i), hi_j), 0.0)
     alpha_new = source.update_alpha(alpha, i, j, y_i, y_j, delta)
     alpha_new = jnp.clip(alpha_new, 0.0, C)  # kill fp dust at the box boundary
-    # rank-2 update keeps f consistent for ALL rows (incl. masked)
-    f_new = source.constrain(f + delta * (K_i - K_j))
+    # rank-2 update keeps f consistent for ALL rows (incl. masked);
+    # streaming sources fuse row computation into the update launch
+    if streams:
+        f_new = source.constrain(source.update_f(f, i, j, delta))
+    else:
+        f_new = source.constrain(source.update_f(f, K_i, K_j, delta))
 
     alpha = jnp.where(done, alpha, alpha_new)
     f = jnp.where(done, f, f_new)

@@ -27,10 +27,13 @@ of a hyper-parameter grid):
   program (the same ``chunk_jit`` the scalar ``solve`` path uses), so a
   straggler tail costs sequential-solver time, not a vmapped batch of one;
 * **width capping** (``max_width``) — the TOTAL dispatch width per chunk
-  is bounded by a backend cost model: XLA CPU pays a ~1.5-2x
-  per-lane-iteration penalty for ANY vmapped width (measured flat from
-  width 2 up), so on CPU the default is width-1 round-robin through the
-  sequential program (total device work still tracks
+  is bounded by a *measured* cost model (``svm/cost_model.py`` loads
+  ``results/cost_model.json``, written per (backend, source kind) by
+  ``scripts/measure_cost_model.py``; absent entries fall back to the
+  historical verdict): XLA CPU pays a ~1.5-2x per-lane-iteration penalty
+  for ANY vmapped width (measured flat from width 2 up), so on CPU the
+  measured default is width-1 round-robin through the sequential program
+  (total device work still tracks
   ``sum_h n_iter_h``). The capped rotation is **source-sticky**: the most
   recently dispatched source keeps the width budget while it has live
   lanes (its kernel matrix stays cache-hot; a per-chunk rotation across
@@ -83,6 +86,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.svm import cost_model
 from repro.svm.engine import (EngineState, SMOResult, chunk_batched_jit,
                               chunk_jit, finalize, init_state)
 from repro.svm.sources import SourceCache, is_factory
@@ -148,9 +152,14 @@ class LanePool:
         if not isinstance(sources, dict) or not sources:
             raise ValueError("sources must be a non-empty {key: source} dict")
         if max_width is None:
-            # backend cost model (see module docstring): CPU's vmapped
-            # batch loses at every width > 1, accelerators want full width
-            max_width = 1 if jax.default_backend() == "cpu" else 0
+            # measured cost model (results/cost_model.json, written by
+            # scripts/measure_cost_model.py): per-(backend, source-kind)
+            # width verdict, combined conservatively across this pool's
+            # kinds. Falls back to the historical default when unmeasured:
+            # CPU's vmapped batch loses at every width > 1, accelerators
+            # want full width.
+            max_width = cost_model.pick_max_width(
+                kinds={cost_model.source_kind(s) for s in sources.values()})
         self.max_width = int(max_width)   # 0 = unbounded
         self.sources = dict(sources)
         self._ys = {k: (y[k] if isinstance(y, dict) else y)
@@ -195,12 +204,12 @@ class LanePool:
             wss=wss, distance=self._source_distance,
             sticky=lambda: self._sticky, on_evict=self._on_source_evict)
         for key, entry in self.sources.items():
-            # pinned (dense) entries are inspectable now; factory entries
-            # (e.g. sources.KernelSpec) can't be inspected without
-            # computing the kernel, so their check runs the SAME rule at
-            # materialization
-            if not is_factory(entry):
-                self.cache.check_fused(key, entry)
+            # every entry answers ``fused`` cheaply now (pinned sources
+            # directly, specs by declaration — a pallas_rbf spec is fused
+            # without compute), so the check runs at construction for
+            # all of them; factory *products* are re-checked at
+            # materialization anyway (the same rule, deferred)
+            self.cache.check_fused(key, entry)
 
     def y_of(self, source_key) -> jnp.ndarray:
         return self._ys[source_key]

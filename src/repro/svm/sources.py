@@ -40,7 +40,7 @@ from typing import Any, Callable
 
 import jax.numpy as jnp
 
-from repro.svm.engine import DenseKernel
+from repro.svm.engine import DenseKernel, PallasRBF
 from repro.svm.kernels import kernel_matrix
 
 
@@ -54,7 +54,7 @@ def is_factory(entry) -> bool:
 
 @dataclasses.dataclass(frozen=True)
 class KernelSpec:
-    """A declared-but-not-computed dense kernel source.
+    """A declared-but-not-computed kernel source.
 
     ``n`` truncates to the first ``n`` instances (the k-fold padding
     truncation). The slice is applied to ``X`` *before* the kernel call —
@@ -62,6 +62,13 @@ class KernelSpec:
     O(N² − n²) compute and memory per materialization (and the two are
     not bit-identical at every shape, so callers that need parity with a
     truncated kernel must build it this way too, see ``core/cv.py``).
+
+    ``kind="pallas_rbf"`` declares a *row-streaming* source: materialize
+    returns a :class:`~repro.svm.engine.PallasRBF` holding only ``X[:n]``
+    — ``nbytes`` is X's bytes, not n² kernel bytes, so the cache budget
+    bounds such sources by data size, and ``fused`` is answered True
+    without compute (WSS-1 is checked at pool construction, not deferred
+    to first dispatch).
     """
     X: Any
     gamma: float = 1.0
@@ -69,9 +76,16 @@ class KernelSpec:
     backend: str = "jnp"
     n: int | None = None
 
-    #: specs always materialize a plain dense source; the fused/WSS check
-    #: is re-run against the materialized source anyway (deferred check)
-    fused = False
+    @property
+    def fused(self) -> bool:
+        """Dense kinds materialize a plain dense source (the fused/WSS
+        check re-runs against the product anyway — deferred check);
+        pallas_rbf is fused by declaration."""
+        return self.kind == "pallas_rbf"
+
+    @property
+    def streams_rows(self) -> bool:
+        return self.kind == "pallas_rbf"
 
     @property
     def dtype(self):
@@ -83,12 +97,18 @@ class KernelSpec:
 
     @property
     def nbytes(self) -> int:
-        """Size of the materialized kernel matrix — what the cache budget
-        accounts, known without computing anything."""
+        """Resident bytes of the materialized source — what the cache
+        budget accounts, known without computing anything: n² kernel
+        bytes for dense kinds, X's bytes for row-streaming kinds."""
+        if self.kind == "pallas_rbf":
+            d = int(self.X.shape[1])
+            return self.n_rows * d * self.X.dtype.itemsize
         return self.n_rows * self.n_rows * self.X.dtype.itemsize
 
-    def materialize(self) -> DenseKernel:
+    def materialize(self):
         X = self.X if self.n is None else self.X[: self.n]
+        if self.kind == "pallas_rbf":
+            return PallasRBF(X, self.gamma)
         K = kernel_matrix(X, X, kind=self.kind, gamma=self.gamma,
                           backend=self.backend)
         K.block_until_ready()

@@ -1,0 +1,106 @@
+"""Measured dispatch-width cost model: file loading, fallback semantics,
+the conservative combine across source kinds, and the pool's construction
+hook (``max_width=None`` reads the model)."""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.svm import DenseKernel, PallasRBF, cost_model
+from repro.svm.scheduler import LanePool
+
+
+def _write_model(path, entries):
+    path.write_text(json.dumps({"schema": 1, "entries": entries}))
+    return path
+
+
+def test_load_missing_and_invalid(tmp_path):
+    assert cost_model.load(tmp_path / "absent.json") is None
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    assert cost_model.load(bad) is None
+    no_entries = tmp_path / "no_entries.json"
+    no_entries.write_text(json.dumps({"schema": 1}))
+    assert cost_model.load(no_entries) is None
+
+
+def test_fallback_is_width1_on_cpu_only():
+    assert cost_model.fallback_max_width("cpu") == 1
+    assert cost_model.fallback_max_width("tpu") == 0
+
+
+def test_pick_reads_measured_entry(tmp_path):
+    p = _write_model(tmp_path / "m.json", {
+        "cpu": {"dense": {"max_width": 1},
+                "pallas_rbf": {"max_width": 4}},
+        "tpu": {"dense": {"max_width": 0}}})
+    assert cost_model.pick_max_width("cpu", kinds=("dense",), path=p) == 1
+    assert cost_model.pick_max_width("cpu", kinds=("pallas_rbf",),
+                                     path=p) == 4
+    # conservative combine: smallest nonzero cap across the pool's kinds
+    assert cost_model.pick_max_width("cpu", kinds=("dense", "pallas_rbf"),
+                                     path=p) == 1
+    assert cost_model.pick_max_width("tpu", kinds=("dense",), path=p) == 0
+    # missing kind degrades that kind to the backend fallback
+    assert cost_model.pick_max_width("tpu", kinds=("dense", "rope"),
+                                     path=p) == 0
+    assert cost_model.pick_max_width("cpu", kinds=("rope",), path=p) == 1
+
+
+def test_pick_unbounded_only_when_all_unbounded(tmp_path):
+    p = _write_model(tmp_path / "m.json", {
+        "tpu": {"dense": {"max_width": 0}, "pallas_rbf": {"max_width": 8}}})
+    assert cost_model.pick_max_width("tpu", kinds=("dense", "pallas_rbf"),
+                                     path=p) == 8
+    assert cost_model.pick_max_width(
+        "tpu", kinds=("dense",),
+        model={"entries": {"tpu": {"dense": {"max_width": 0}}}}) == 0
+
+
+def test_pick_missing_file_falls_back(tmp_path):
+    assert cost_model.pick_max_width("cpu", path=tmp_path / "none.json") == 1
+    assert cost_model.pick_max_width("gpu", path=tmp_path / "none.json") == 0
+
+
+def test_source_kind_classifies_streaming():
+    X = jnp.asarray(np.random.default_rng(0).normal(size=(32, 5)))
+    K = jnp.eye(32)
+    assert cost_model.source_kind(DenseKernel(K)) == "dense"
+    assert cost_model.source_kind(PallasRBF(X, 0.5)) == "pallas_rbf"
+    from repro.svm.sources import KernelSpec
+    assert cost_model.source_kind(KernelSpec(X, kind="rbf")) == "dense"
+    assert cost_model.source_kind(
+        KernelSpec(X, kind="pallas_rbf")) == "pallas_rbf"
+
+
+def test_pool_reads_model_at_construction(tmp_path, monkeypatch):
+    """``max_width=None`` resolves through the measured model for the
+    pool's source kinds; an absent file reproduces the historical CPU
+    width-1 default."""
+    p = _write_model(tmp_path / "m.json",
+                     {"cpu": {"dense": {"max_width": 3}}})
+    monkeypatch.setenv("REPRO_COST_MODEL", str(p))
+    y = jnp.asarray(np.where(np.arange(16) % 2, 1.0, -1.0))
+    K = jnp.eye(16)
+    pool = LanePool({"d": DenseKernel(K)}, y)
+    assert pool.max_width == 3
+    monkeypatch.setenv("REPRO_COST_MODEL", str(tmp_path / "absent.json"))
+    pool = LanePool({"d": DenseKernel(K)}, y)
+    assert pool.max_width == 1
+    # an explicit cap always wins over the model
+    monkeypatch.setenv("REPRO_COST_MODEL", str(p))
+    pool = LanePool({"d": DenseKernel(K)}, y, max_width=7)
+    assert pool.max_width == 7
+
+
+def test_committed_model_has_cpu_width1_verdict():
+    """The checked-in artifact must reproduce the historical CPU verdict
+    (the scheduler's production default on this container)."""
+    model = cost_model.load(cost_model.DEFAULT_PATH)
+    assert model is not None, "results/cost_model.json missing or invalid"
+    cpu = model["entries"]["cpu"]
+    assert cpu["dense"]["max_width"] == 1
+    assert cpu["pallas_rbf"]["max_width"] == 1
+    assert "1" in cpu["dense"]["us_per_lane_iter"]

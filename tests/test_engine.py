@@ -6,10 +6,10 @@ import numpy as np
 import pytest
 
 from repro.data.svm_suite import make_dataset, kfold_chunks
-from repro.svm import (DenseKernel, FusedRBF, OnDemandRBF, init_f,
+from repro.svm import (DenseKernel, FusedRBF, OnDemandRBF, PallasRBF, init_f,
                        kernel_matrix, smo_solve, smo_solve_batched)
 from repro.svm.distributed import smo_iterations
-from repro.svm.engine import EngineState, smo_chunk
+from repro.svm.engine import EngineState, smo_chunk, solve, solve_batched
 
 
 def _setup(name="heart", n=150):
@@ -224,6 +224,178 @@ def test_batched_warm_seeds():
     warm = smo_solve(K2, y2, m1, ds.C, a1, f1)
     assert int(bat.n_iter[0]) == int(cold.n_iter)
     assert int(bat.n_iter[1]) == int(warm.n_iter)
+
+
+# ------------------------------------------- pallas row-streaming source ---
+
+#: five-dataset acceptance sweep; (n_override, max_iter) keeps the parity
+#: check fast — heart runs to full convergence, the rest are capped replays
+#: of the identical iterate prefix
+_SUITE = [("adult", 200, 2000), ("heart", 150, 5_000_000),
+          ("madelon", 120, 2000), ("mnist", 150, 2000),
+          ("webdata", 200, 2000)]
+
+
+@pytest.mark.parametrize("name,n,max_iter", _SUITE)
+def test_pallas_source_matches_fused_bitwise(name, n, max_iter):
+    """PallasRBF (interpret mode) must replay FusedRBF's exact fp ops:
+    alpha, f and the iteration count are bit-identical on every suite
+    dataset — the streaming source changes memory traffic, not math."""
+    ds = make_dataset(name, n_override=n)
+    X = jnp.asarray(ds.X)
+    y = jnp.asarray(ds.y, jnp.float64)
+    m = y.shape[0]
+    mask = jnp.ones(m, bool).at[: m // 5].set(False)
+    args = (y, mask, ds.C, jnp.zeros(m), -y)
+    fr = solve(FusedRBF(X, ds.gamma), *args, wss="1", max_iter=max_iter)
+    pr = solve(PallasRBF(X, ds.gamma), *args, wss="1", max_iter=max_iter)
+    np.testing.assert_array_equal(np.asarray(fr.alpha), np.asarray(pr.alpha))
+    np.testing.assert_array_equal(np.asarray(fr.f), np.asarray(pr.f))
+    assert int(fr.n_iter) == int(pr.n_iter)
+    assert bool(fr.converged) == bool(pr.converged)
+
+
+def test_pallas_source_batched_bitwise():
+    """The parity holds under vmap (the pool's batched dispatch path)."""
+    ds = make_dataset("heart", n_override=120)
+    X = jnp.asarray(ds.X)
+    y = jnp.asarray(ds.y, jnp.float64)
+    n = y.shape[0]
+    masks = jnp.stack([jnp.ones(n, bool).at[:20].set(False),
+                       jnp.ones(n, bool).at[20:40].set(False),
+                       jnp.ones(n, bool)])
+    Cs = jnp.asarray([ds.C, 4.0 * ds.C, ds.C])
+    a0 = jnp.zeros((3, n))
+    f0 = jnp.tile(-y, (3, 1))
+    fb = solve_batched(FusedRBF(X, ds.gamma), y, masks, Cs, a0, f0, wss="1")
+    pb = solve_batched(PallasRBF(X, ds.gamma), y, masks, Cs, a0, f0, wss="1")
+    for a, b in zip(fb, pb):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("max_width", [1, 2])
+def test_pallas_source_under_pool_bitwise(max_width):
+    """Same fixed points through the lane pool's repacked dispatch, at the
+    production (measured, width-1) cap and the bucket-exact batched width.
+    One pool per source: parity is per-schedule (solo chunk_jit and the
+    vmapped program are not mutually bitwise), and as long as both sources
+    see the same dispatch trajectory their iterates stay bit-identical
+    chunk by chunk. Wider batches drift at the last ulp — see
+    test_pallas_wide_batch_tolerance and DESIGN.md §Pallas sources."""
+    from repro.svm.scheduler import LanePool
+    ds = make_dataset("heart", n_override=120)
+    X = jnp.asarray(ds.X)
+    y = jnp.asarray(ds.y, jnp.float64)
+    n = y.shape[0]
+    masks = [jnp.ones(n, bool).at[h * 20:(h + 1) * 20].set(False)
+             for h in range(3)]
+
+    def run(source):
+        pool = LanePool({"src": source}, y, wss="1", max_width=max_width,
+                        chunk_iters=512)
+        for h in range(3):
+            pool.add(h, masks[h], ds.C, jnp.zeros(n), -y, source="src")
+        return pool.run()
+
+    fres = run(FusedRBF(X, ds.gamma))
+    pres = run(PallasRBF(X, ds.gamma))
+    for h in range(3):
+        fr, pr = fres[h], pres[h]
+        np.testing.assert_array_equal(np.asarray(fr.alpha),
+                                      np.asarray(pr.alpha))
+        np.testing.assert_array_equal(np.asarray(fr.f), np.asarray(pr.f))
+        assert int(fr.n_iter) == int(pr.n_iter)
+
+
+def test_pallas_wide_batch_tolerance():
+    """At batch widths >= 4 XLA picks different batched-dot reduction
+    strategies for the two programs, so cross-source parity relaxes from
+    bitwise to last-ulp agreement (~1e-13 on f64 alphas). The measured CPU
+    cost model never dispatches those widths; this pins the failure mode
+    so a future regression shows up as a tolerance break, not a mystery."""
+    ds = make_dataset("heart", n_override=120)
+    X = jnp.asarray(ds.X)
+    y = jnp.asarray(ds.y, jnp.float64)
+    n = y.shape[0]
+    masks = jnp.stack([jnp.ones(n, bool).at[h * 15:(h + 1) * 15].set(False)
+                       for h in range(5)])
+    a0 = jnp.zeros((5, n))
+    f0 = jnp.tile(-y, (5, 1))
+    fb = solve_batched(FusedRBF(X, ds.gamma), y, masks, ds.C, a0, f0,
+                       wss="1")
+    pb = solve_batched(PallasRBF(X, ds.gamma), y, masks, ds.C, a0, f0,
+                       wss="1")
+    assert bool(jnp.all(fb.converged)) and bool(jnp.all(pb.converged))
+    np.testing.assert_allclose(np.asarray(fb.alpha), np.asarray(pb.alpha),
+                               atol=1e-10)
+
+
+def test_pallas_nbytes_is_data_not_matrix():
+    """The cache budget must account X's bytes, not n² kernel bytes."""
+    from repro.svm.sources import KernelSpec
+    ds = make_dataset("heart", n_override=150)
+    X = jnp.asarray(ds.X)
+    src = PallasRBF(X, ds.gamma)
+    assert src.nbytes == X.nbytes
+    spec = KernelSpec(X, gamma=ds.gamma, kind="pallas_rbf", n=100)
+    assert spec.nbytes == 100 * X.shape[1] * X.dtype.itemsize
+    assert spec.fused and spec.streams_rows
+    mat = spec.materialize()
+    assert isinstance(mat, PallasRBF) and mat.nbytes == spec.nbytes
+
+
+def test_dense_fupdate_pallas_bitwise():
+    """DenseKernel's opt-in pallas f-update replays the plain-jnp ops."""
+    ds, X, K, y = _setup(n=120)
+    n = y.shape[0]
+    mask = jnp.ones(n, bool).at[:20].set(False)
+    base = solve(DenseKernel(K), y, mask, ds.C, jnp.zeros(n), -y)
+    pal = solve(DenseKernel(K, fupdate="pallas"), y, mask, ds.C,
+                jnp.zeros(n), -y)
+    np.testing.assert_array_equal(np.asarray(base.alpha),
+                                  np.asarray(pal.alpha))
+    np.testing.assert_array_equal(np.asarray(base.f), np.asarray(pal.f))
+    assert int(base.n_iter) == int(pal.n_iter)
+
+
+def test_run_cv_batched_pallas_backend():
+    from repro.core.cv import run_cv, run_cv_batched
+    ds = make_dataset("heart", n_override=120)
+    rep = run_cv_batched(ds, k=4, source_backend="pallas_rbf")
+    assert rep.method == "cold_pallas"
+    assert all(f.converged for f in rep.folds)
+    # same fixed points as the dense drivers up to tolerance: held-out
+    # accuracy is identical, objectives agree to solver tolerance
+    cold = run_cv(ds, k=4, method="cold")
+    assert rep.accuracy == pytest.approx(cold.accuracy, abs=1e-12)
+    for fp, fd in zip(rep.folds, cold.folds):
+        assert fp.objective == pytest.approx(fd.objective, rel=1e-5)
+    with pytest.raises(ValueError, match="repacked"):
+        run_cv_batched(ds, k=4, source_backend="pallas_rbf",
+                       schedule="batched")
+
+
+def test_grid_pallas_resident_is_n2_independent():
+    """A budgeted grid over pallas sources: peak resident kernel bytes are
+    X bytes per gamma — independent of n² — and accuracy matches the dense
+    cold grid."""
+    from repro.core.grid import run_grid
+    ds = make_dataset("heart", n_override=120)
+    kw = dict(Cs=(0.5, 2.0), gammas=(0.5, 1.0), k=3, method="cold",
+              max_resident=1)
+    pal = run_grid(ds, source_backend="pallas_rbf", **kw)
+    dense = run_grid(ds, **kw)
+    n = pal.n
+    x_bytes = n * ds.X.shape[1] * 8
+    assert pal.resident["peak_resident_bytes"] <= x_bytes
+    assert pal.resident["peak_resident_bytes"] < n * n * 8
+    assert dense.resident["peak_resident_bytes"] >= n * n * 8
+    for cp, cd in zip(pal.cells, dense.cells):
+        assert (cp.C, cp.gamma) == (cd.C, cd.gamma)
+        assert cp.accuracy == pytest.approx(cd.accuracy, abs=1e-12)
+    with pytest.raises(ValueError, match="cold"):
+        run_grid(ds, Cs=(0.5,), gammas=(0.5,), k=3, method="sir",
+                 source_backend="pallas_rbf")
 
 
 # ------------------------------------------------------- NaN guards -------

@@ -4,9 +4,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.ops import flash_attention, rbf_kernel_matrix, smo_f_update
-from repro.kernels.ref import (flash_attention_ref, rbf_kernel_matrix_ref,
-                               smo_f_update_ref)
+from repro.kernels.ops import (flash_attention, fused_smo_step,
+                               rbf_kernel_matrix, smo_f_update)
+from repro.kernels.ref import (flash_attention_ref, fused_smo_step_ref,
+                               rbf_kernel_matrix_ref, smo_f_update_ref)
 
 RNG = np.random.default_rng(7)
 
@@ -66,6 +67,38 @@ def test_smo_f_update(n):
     out = smo_f_update(f, Ki, Kj, 0.37, block=1024)
     ref = smo_f_update_ref(f, Ki, Kj, 0.37)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-12)
+
+
+def _step_problem(n, d, dtype):
+    X = jnp.asarray(RNG.normal(size=(n, d)), dtype)
+    xij = X[jnp.asarray([3, n - 1])]       # a real WSS pair's feature rows
+    sq = jnp.sum(X * X, axis=1)
+    f = jnp.asarray(RNG.normal(size=(n,)), dtype)
+    return f, X, xij, sq, jnp.asarray(0.37, dtype)
+
+
+@pytest.mark.parametrize("n,d,bm,bk", [
+    (257, 9, 64, 64),     # ragged n, d < bk (feature axis fully padded)
+    (100, 130, 64, 64),   # ragged on both axes, multi-step k loop
+    (120, 40, 32, 16),    # multi-block on both axes
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+def test_fused_smo_step_ragged(n, d, bm, bk, dtype):
+    f, X, xij, sq, delta = _step_problem(n, d, dtype)
+    out = fused_smo_step(f, X, xij, sq, delta, gamma=0.5, bm=bm, bk=bk)
+    ref = fused_smo_step_ref(f, X, xij, sq, delta, 0.5)
+    tol = 1e-5 if dtype == jnp.float32 else 1e-12
+    assert out.shape == (n,) and out.dtype == dtype
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=tol)
+
+
+def test_fused_smo_step_full_block_bitwise():
+    """Default (full-array) blocks replay the oracle's exact fp ops — the
+    bit-parity contract PallasRBF relies on (DESIGN.md §Pallas sources)."""
+    f, X, xij, sq, delta = _step_problem(150, 13, jnp.float64)
+    out = fused_smo_step(f, X, xij, sq, delta, gamma=0.37)
+    ref = fused_smo_step_ref(f, X, xij, sq, delta, 0.37)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
 
 
 def test_rbf_in_solver_path():

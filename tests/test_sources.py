@@ -312,7 +312,7 @@ def test_run_plan_rejects_non_dense_pinned_source_at_entry():
     plan.lane(0, train_mask=masks[0], C=ds.C, alpha0=jnp.zeros(n), f0=-y)
     plan.lane(1, train_mask=masks[1], C=ds.C, dep=0, transform="fold",
               params={})
-    with pytest.raises(ValueError, match="seed transforms need a dense"):
+    with pytest.raises(ValueError, match="transform 'fold' needs a dense"):
         run_plan(plan)
     plan2 = Plan(sources={"od": OnDemandRBF(X[:n], ds.gamma)}, y=y)
     plan2.lane(0, train_mask=masks[0], C=ds.C, alpha0=jnp.zeros(n), f0=-y)
