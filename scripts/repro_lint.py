@@ -1,0 +1,131 @@
+"""Run every static analyzer in ``repro.analysis`` and gate on NEW findings.
+
+Scope is derived, not listed: ``imports.default_scope()`` — every module
+reachable from the SVM roots (repro.svm / repro.core / repro.kernels).
+Unadopted seed scaffolding is excluded until something imports it.
+
+Passes:
+
+* ``jit_lint``      — trace-purity over the whole scope
+* ``kernel_lint``   — Pallas launch configs, scope files under kernels/
+* plan smoke        — a small grid-shaped plan through ``analyze_plan``
+                      (catches analyzer/study API drift on every run)
+
+The committed baseline (``results/lint_baseline.json``) holds accepted
+findings with justifications; ``--check`` exits nonzero only on findings
+NOT in the baseline, so CI fails on regressions, never on accepted debt.
+
+    PYTHONPATH=src python scripts/repro_lint.py --check
+    PYTHONPATH=src python scripts/repro_lint.py --write-baseline
+    PYTHONPATH=src python scripts/repro_lint.py --paths src/repro/svm/cv.py
+"""
+import argparse
+import json
+import os
+import pathlib
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.analysis import findings, imports, jit_lint, kernel_lint  # noqa: E402
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+DEFAULT_BASELINE = REPO / "results" / "lint_baseline.json"
+
+
+def plan_smoke(report: findings.Report) -> None:
+    """Analyze a small grid-shaped plan (2 sources x 2 chained lanes).
+    Any finding — or an exception — is a lint failure: the plan is
+    well-formed by construction, so noise here means the analyzer or the
+    study API drifted."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.analysis.plan_check import analyze_plan
+    from repro.core.study import Plan
+    from repro.svm.sources import KernelSpec
+
+    X = jnp.asarray(np.random.default_rng(0).normal(size=(16, 4)))
+    y = jnp.asarray(np.where(np.arange(16) % 2, 1.0, -1.0))
+    zeros = jnp.zeros(16)
+    plan = Plan(sources={g: KernelSpec(X=X, gamma=0.5 * (g + 1), kind="rbf")
+                         for g in range(2)}, y=y)
+    for g in range(2):
+        plan.lane((g, 0), source=g, train_mask=y != 0, C=1.0,
+                  alpha0=zeros, f0=-y)
+        plan.lane((g, 1), source=g, train_mask=y != 0, C=1.0,
+                  alpha0=zeros, f0=-y, after=(g, 0))
+        plan.evaluate((g, 0), jnp.arange(4))
+        plan.evaluate((g, 1), jnp.arange(4))
+    try:
+        pa = analyze_plan(plan)
+    except Exception as e:  # noqa: BLE001 — smoke must never crash the lint
+        report.add("plan-smoke", "<plan:smoke>", "analyze_plan",
+                   f"analyzer raised on a well-formed plan: {e!r}")
+        return
+    report.extend(pa.report)
+    if pa.program_count < 1:
+        report.add("plan-smoke", "<plan:smoke>", "analyze_plan",
+                   "no programs enumerated for a plan with solved lanes")
+
+
+def run(paths=None) -> findings.Report:
+    scope = [pathlib.Path(p) for p in paths] if paths \
+        else imports.default_scope()
+    report = findings.Report()
+    report.extend(jit_lint.lint_paths(scope, repo_root=REPO))
+    # derived scope: launch configs live under kernels/; explicit --paths
+    # runs every pass on every listed file (fixtures live elsewhere)
+    kernel_scope = scope if paths else \
+        [p for p in scope if "kernels" in pathlib.Path(p).parts]
+    report.extend(kernel_lint.lint_paths(kernel_scope, repo_root=REPO))
+    if not paths:
+        plan_smoke(report)
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 when findings not in the baseline exist")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the full findings report as JSON")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE),
+                    help="baseline file (default results/lint_baseline.json)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept the current findings as the new baseline "
+                         "(carries forward existing justifications)")
+    ap.add_argument("--paths", nargs="*",
+                    help="lint exactly these files instead of the derived "
+                         "scope (skips the plan smoke)")
+    args = ap.parse_args(argv)
+
+    report = run(args.paths)
+    baseline = findings.load_baseline(args.baseline)
+
+    if args.json:
+        payload = report.to_json()
+        payload["scaffolding"] = imports.scaffolding_inventory()
+        pathlib.Path(args.json).write_text(
+            json.dumps(payload, indent=2) + "\n")
+    if args.write_baseline:
+        findings.write_baseline(report, args.baseline, previous=baseline)
+        print(f"baseline written: {args.baseline} "
+              f"({len(report)} findings)")
+        return 0
+
+    new = report.new_against(baseline)
+    accepted = len(report) - len(new)
+    print(report.render())
+    print(f"-- {len(report)} findings "
+          f"({accepted} baselined, {len(new)} new)")
+    if args.check and new:
+        print("NEW findings (fix, or --write-baseline with justification):")
+        for f in new:
+            print("  " + f.render())
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

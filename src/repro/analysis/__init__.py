@@ -1,0 +1,26 @@
+"""Static analysis: pre-execution plan reports and JAX/Pallas lint passes.
+
+The paper's premise is that CV work can be *planned* — the Study API makes
+the reuse graph explicit data, and this package analyzes that data (plus
+the source tree that executes it) before anything runs:
+
+* :mod:`repro.analysis.plan_check` — pre-execution report on a ``Plan``:
+  distinct jitted program shapes the schedule can produce (recompile-storm
+  warning), SourceCache budget feasibility, checkpoint step-key ranges,
+  dead lanes. ``run_plan`` runs it in advisory mode by default; the study
+  daemon's admission path is the strict-mode consumer (ROADMAP).
+* :mod:`repro.analysis.jit_lint` — AST lint for trace-purity and timer
+  hazards over ``src/repro/{svm,core,kernels}``.
+* :mod:`repro.analysis.kernel_lint` — static checks on Pallas launch
+  configs in ``kernels/``.
+* :mod:`repro.analysis.findings` — the shared ``Finding``/``Report``
+  structure all three emit, with the committed-baseline workflow
+  (``results/lint_baseline.json``) that lets CI gate on NEW findings only.
+* :mod:`repro.analysis.imports` — the intra-package import graph the lint
+  scope is derived from (unimported seed scaffolding is excluded; see
+  DESIGN.md §Static analysis).
+
+``scripts/repro_lint.py`` is the CLI entry point; DESIGN.md §Static
+analysis documents the finding taxonomy and baseline workflow.
+"""
+from repro.analysis.findings import Finding, Report  # noqa: F401

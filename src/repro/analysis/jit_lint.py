@@ -1,0 +1,491 @@
+"""AST lint: trace-purity and timer-attribution hazards in JAX code.
+
+Four rules, each a bug class this repo has actually shipped (PRs 2-6
+fixed instances of the first three; the timer convention is DESIGN.md's
+attribution contract):
+
+* ``unsized-nonzero`` — ``jnp.nonzero(x)`` without ``size=`` has a
+  data-dependent output shape: it retraces (or fails) under jit and
+  silently varies under vmap. ``seeding.py``'s capped extraction passes
+  ``size=m_cap`` for exactly this reason.
+* ``traced-host-cast`` — ``.item()`` / ``float()`` / ``int()`` /
+  ``bool()`` on a traced value inside a jitted body is a concretization
+  error at trace time.
+* ``traced-python-branch`` — Python ``if``/``while`` on a traced value
+  inside a jitted body (use ``lax.cond``/``jnp.where``; ``is None``
+  tests and shape/static-attribute tests are fine and not flagged).
+* ``timer-no-sync`` — a ``time.perf_counter()`` section whose timed span
+  contains no device sync measures dispatch, not compute, under JAX's
+  async execution. Syncs are recognized lexically (``block_until_ready``,
+  ``jax.device_get``, ``np.asarray``/``np.array``, builtin
+  ``bool``/``int``/``float`` coercions) and *propagated through the call
+  graph*: a call to a function that itself syncs (resolvable top-level
+  functions, ``from repro.x import name`` imports, and ``self.`` methods)
+  satisfies the span — ``cv.py`` timing ``run_plan`` and the scheduler
+  timing ``self._step_batched`` are synced by their callees, while a call
+  through an unresolvable receiver (a parameter's method) is not assumed
+  to sync.
+
+Taint model for the jitted-body rules: non-static parameters are traced
+(``static_argnames`` of the ``jax.jit``/``functools.partial(jax.jit)``
+decorator are not), taint flows through assignments, and a small
+attribute allowlist (``shape``/``ndim``/``dtype``/``size``/``nbytes``/
+``itemsize`` plus the kernel-source protocol's static metadata
+``streams_rows``/``fused``/``n_rows``) plus ``len()`` un-taints — those
+are Python-level values under jit. Nested functions inherit the
+enclosing taint (they close over traced values and are typically
+``vmap``/``cond`` bodies).
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+
+from repro.analysis.findings import Report
+
+#: attribute reads that yield Python-level (untraced) values
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "nbytes", "itemsize",
+                "streams_rows", "fused", "n_rows", "at"}
+
+#: calls that force (or imply) a device sync when they appear in a timed
+#: span: blocking transfers and host coercions of device values
+_SYNC_CALL_NAMES = {"bool", "int", "float"}
+_SYNC_ATTR_CALLS = {"block_until_ready", "device_get", "asarray", "array",
+                    "item"}
+
+
+def _call_name(node: ast.Call):
+    """(kind, name) of a call target: ("name", f) for ``f(...)``,
+    ("attr", m) for ``<expr>.m(...)`` plus the receiver expression."""
+    fn = node.func
+    if isinstance(fn, ast.Name):
+        return "name", fn.id, None
+    if isinstance(fn, ast.Attribute):
+        return "attr", fn.attr, fn.value
+    return "other", None, None
+
+
+def _is_jit_decorator(dec: ast.expr) -> tuple[bool, set[str]]:
+    """Recognize ``@jax.jit``, ``@jit``, and
+    ``@functools.partial(jax.jit, static_argnames=(...))`` (also bare
+    ``partial``); returns (is_jitted, static_argnames)."""
+    if isinstance(dec, ast.Attribute) and dec.attr == "jit":
+        return True, set()
+    if isinstance(dec, ast.Name) and dec.id == "jit":
+        return True, set()
+    if isinstance(dec, ast.Call):
+        kind, name, _ = _call_name(dec)
+        if name == "jit":
+            return True, _static_argnames(dec)
+        if name == "partial" and dec.args:
+            inner = dec.args[0]
+            if (isinstance(inner, ast.Attribute) and inner.attr == "jit") \
+                    or (isinstance(inner, ast.Name) and inner.id == "jit"):
+                return True, _static_argnames(dec)
+    return False, set()
+
+
+def _static_argnames(call: ast.Call) -> set[str]:
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            names = set()
+            for elt in ast.walk(kw.value):
+                if isinstance(elt, ast.Constant) and \
+                        isinstance(elt.value, str):
+                    names.add(elt.value)
+            return names
+    return set()
+
+
+class _Taint:
+    """Per-function taint state: names bound to (potentially) traced
+    values."""
+
+    def __init__(self, tainted: set[str]):
+        self.names = set(tainted)
+
+    def expr_tainted(self, node: ast.expr) -> bool:
+        """True when ``node`` may be a traced value. Attribute reads off
+        the static allowlist and ``len()``/shape arithmetic un-taint."""
+        if isinstance(node, ast.Name):
+            return node.id in self.names
+        if isinstance(node, ast.Attribute):
+            if node.attr in STATIC_ATTRS:
+                return False
+            return self.expr_tainted(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.expr_tainted(node.value)
+        if isinstance(node, ast.Call):
+            kind, name, recv = _call_name(node)
+            if kind == "name" and name == "len":
+                return False
+            if kind == "name" and name == "getattr" and len(node.args) >= 2:
+                a = node.args[1]
+                if isinstance(a, ast.Constant) and a.value in STATIC_ATTRS:
+                    return False
+            if kind == "name" and name in ("int", "float", "bool", "range",
+                                           "isinstance"):
+                return False
+            # any call over tainted operands is tainted (jnp ops), and
+            # jnp./lax. constructors are traced values regardless
+            return any(self.expr_tainted(a) for a in node.args) or \
+                any(self.expr_tainted(kw.value) for kw in node.keywords) or \
+                (kind == "attr" and recv is not None
+                 and self.expr_tainted(recv))
+        if isinstance(node, (ast.BinOp,)):
+            return self.expr_tainted(node.left) or \
+                self.expr_tainted(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.expr_tainted(node.operand)
+        if isinstance(node, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot))
+                   for op in node.ops):
+                return False
+            return self.expr_tainted(node.left) or \
+                any(self.expr_tainted(c) for c in node.comparators)
+        if isinstance(node, ast.BoolOp):
+            return any(self.expr_tainted(v) for v in node.values)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.expr_tainted(e) for e in node.elts)
+        if isinstance(node, ast.IfExp):
+            return self.expr_tainted(node.body) or \
+                self.expr_tainted(node.orelse)
+        if isinstance(node, ast.Starred):
+            return self.expr_tainted(node.value)
+        return False
+
+    def assign(self, target: ast.expr, tainted: bool) -> None:
+        for node in ast.walk(target):
+            if isinstance(node, ast.Name):
+                if tainted:
+                    self.names.add(node.id)
+                else:
+                    self.names.discard(node.id)
+
+
+def _function_params(fn: ast.FunctionDef) -> list[str]:
+    args = fn.args
+    names = [a.arg for a in args.posonlyargs + args.args + args.kwonlyargs]
+    if args.vararg:
+        names.append(args.vararg.arg)
+    if args.kwarg:
+        names.append(args.kwarg.arg)
+    return names
+
+
+def _lint_jitted_body(fn: ast.FunctionDef, static: set[str], path, symbol,
+                      report: Report) -> None:
+    """Taint-based pass over one jitted function (nested defs inherit the
+    enclosing taint; their params are traced too — vmap/cond bodies)."""
+    taint = _Taint(set(_function_params(fn)) - static)
+
+    def visit_block(stmts):
+        for stmt in stmts:
+            visit_stmt(stmt)
+
+    def check_calls(node: ast.expr):
+        for sub in ast.walk(node):
+            if not isinstance(sub, ast.Call):
+                continue
+            kind, name, recv = _call_name(sub)
+            if kind == "attr" and name == "item" and recv is not None \
+                    and taint.expr_tainted(recv):
+                report.add("traced-host-cast", path, symbol,
+                           "`.item()` on a traced value inside a jitted "
+                           "body concretizes at trace time",
+                           line=sub.lineno)
+            if kind == "name" and name in ("float", "int", "bool") and \
+                    sub.args and taint.expr_tainted(sub.args[0]):
+                report.add("traced-host-cast", path, symbol,
+                           f"`{name}()` on a traced value inside a jitted "
+                           "body concretizes at trace time",
+                           line=sub.lineno)
+
+    def visit_stmt(stmt):
+        if isinstance(stmt, ast.FunctionDef):
+            inner = set(taint.names) | set(_function_params(stmt))
+            saved = taint.names
+            taint.names = inner
+            visit_block(stmt.body)
+            taint.names = saved
+            return
+        if isinstance(stmt, (ast.If, ast.While)):
+            if taint.expr_tainted(stmt.test):
+                report.add("traced-python-branch", path, symbol,
+                           "Python control flow on a traced value inside "
+                           "a jitted body (use lax.cond/jnp.where)",
+                           line=stmt.lineno)
+            check_calls(stmt.test)
+            visit_block(stmt.body)
+            visit_block(stmt.orelse)
+            return
+        if isinstance(stmt, ast.For):
+            check_calls(stmt.iter)
+            taint.assign(stmt.target, taint.expr_tainted(stmt.iter))
+            visit_block(stmt.body)
+            visit_block(stmt.orelse)
+            return
+        if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            value = stmt.value
+            if value is not None:
+                check_calls(value)
+                is_tainted = taint.expr_tainted(value)
+                targets = stmt.targets if isinstance(stmt, ast.Assign) \
+                    else [stmt.target]
+                for t in targets:
+                    taint.assign(t, is_tainted or
+                                 isinstance(stmt, ast.AugAssign))
+            return
+        if isinstance(stmt, (ast.Return, ast.Expr)):
+            if stmt.value is not None:
+                check_calls(stmt.value)
+            return
+        if isinstance(stmt, ast.With):
+            visit_block(stmt.body)
+            return
+        for node in ast.iter_child_nodes(stmt):
+            if isinstance(node, ast.expr):
+                check_calls(node)
+
+    visit_block(fn.body)
+
+
+# --------------------------------------------------------- timer sections
+
+def _contains_sync(node: ast.AST, resolve) -> bool:
+    """A lexical sync inside ``node``, or a call to a resolvable function
+    known (transitively) to sync. ``resolve(call) -> bool | None``."""
+    for sub in ast.walk(node):
+        if not isinstance(sub, ast.Call):
+            continue
+        kind, name, recv = _call_name(sub)
+        if kind == "attr" and name in _SYNC_ATTR_CALLS:
+            return True
+        if kind == "name" and name in _SYNC_CALL_NAMES and sub.args:
+            return True
+        if resolve is not None and resolve(sub):
+            return True
+    return False
+
+
+def _is_perf_counter(node: ast.expr) -> bool:
+    if isinstance(node, ast.Call):
+        kind, name, _ = _call_name(node)
+        return name == "perf_counter"
+    return False
+
+
+def _timer_sections(body: list[ast.stmt]):
+    """Yield (var, open_stmt, span_stmts, close_stmt) for every
+    ``t = time.perf_counter()`` ... ``... perf_counter() - t ...`` pair
+    found in the same statement block; nested blocks are scanned
+    recursively."""
+    for i, stmt in enumerate(body):
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 and \
+                isinstance(stmt.targets[0], ast.Name) and \
+                _is_perf_counter(stmt.value):
+            var = stmt.targets[0].id
+            for j in range(i + 1, len(body)):
+                close = body[j]
+                if _closes_timer(close, var):
+                    yield var, stmt, body[i + 1:j], close
+                    break
+    for stmt in body:
+        for block in _child_blocks(stmt):
+            yield from _timer_sections(block)
+
+
+def _closes_timer(stmt: ast.stmt, var: str) -> bool:
+    """A statement that reads ``perf_counter() - var``."""
+    for node in ast.walk(stmt):
+        if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Sub) \
+                and _is_perf_counter(node.left) \
+                and any(isinstance(n, ast.Name) and n.id == var
+                        for n in ast.walk(node.right)):
+            return True
+    return False
+
+
+def _child_blocks(stmt: ast.stmt):
+    for field in ("body", "orelse", "finalbody"):
+        block = getattr(stmt, field, None)
+        if block:
+            yield block
+    for handler in getattr(stmt, "handlers", ()):
+        yield handler.body
+
+
+# ------------------------------------------------------------- call graph
+
+class _Module:
+    def __init__(self, path: pathlib.Path, rel: str):
+        self.path = path
+        self.rel = rel
+        self.tree = ast.parse(path.read_text(), filename=str(path))
+        #: {qualname: FunctionDef} — "f" top-level, "Cls.m" methods
+        self.functions: dict[str, ast.FunctionDef] = {}
+        #: {local name: (module, name)} for ``from repro.x import name``
+        self.imports: dict[str, tuple[str, str]] = {}
+        for node in self.tree.body:
+            if isinstance(node, ast.FunctionDef):
+                self.functions[node.name] = node
+            elif isinstance(node, ast.ClassDef):
+                for item in node.body:
+                    if isinstance(item, ast.FunctionDef):
+                        self.functions[f"{node.name}.{item.name}"] = item
+            elif isinstance(node, ast.ImportFrom) and node.module and \
+                    node.module.split(".")[0] == "repro":
+                for alias in node.names:
+                    self.imports[alias.asname or alias.name] = \
+                        (node.module, alias.name)
+
+
+def _build_sync_map(modules: list[_Module]) -> dict[tuple, bool]:
+    """Fixpoint: (module path, qualname) -> "this function syncs", where
+    a function syncs if its body contains a lexical sync or a resolvable
+    call to a syncing function."""
+    by_modname: dict[str, _Module] = {}
+    for m in modules:
+        # repo-relative path ".../src/repro/x/y.py" -> "repro.x.y"
+        parts = pathlib.Path(m.rel).with_suffix("").parts
+        if "repro" in parts:
+            by_modname[".".join(parts[parts.index("repro"):])] = m
+
+    syncs: dict[tuple, bool] = {(m.rel, q): False
+                                for m in modules for q in m.functions}
+
+    def resolver(mod: _Module, cls: str | None):
+        def resolve(call: ast.Call):
+            kind, name, recv = _call_name(call)
+            target = None
+            if kind == "name":
+                if name in mod.functions:
+                    target = (mod.rel, name)
+                elif name in mod.imports:
+                    src_mod, src_name = mod.imports[name]
+                    other = by_modname.get(src_mod)
+                    if other and src_name in other.functions:
+                        target = (other.rel, src_name)
+            elif kind == "attr" and isinstance(recv, ast.Name) and \
+                    recv.id == "self" and cls is not None:
+                qual = f"{cls}.{name}"
+                if qual in mod.functions:
+                    target = (mod.rel, qual)
+            return bool(target and syncs.get(target))
+        return resolve
+
+    changed = True
+    while changed:
+        changed = False
+        for m in modules:
+            for qual, fn in m.functions.items():
+                if syncs[(m.rel, qual)]:
+                    continue
+                cls = qual.split(".")[0] if "." in qual else None
+                if _contains_sync(fn, resolver(m, cls)):
+                    syncs[(m.rel, qual)] = True
+                    changed = True
+    return syncs
+
+
+# -------------------------------------------------------------- entry point
+
+def lint_paths(paths, *, repo_root=None) -> Report:
+    """Run all four rules over ``paths`` (.py files). The timer rule's
+    call-graph propagation resolves across every file in the SAME
+    invocation, so lint the package set together."""
+    repo_root = pathlib.Path(repo_root) if repo_root else None
+    modules = []
+    for p in paths:
+        p = pathlib.Path(p)
+        rel = str(p.relative_to(repo_root)) if repo_root and \
+            p.is_relative_to(repo_root) else str(p)
+        modules.append(_Module(p, rel))
+    syncs = _build_sync_map(modules)
+    report = Report()
+    for m in modules:
+        _lint_module(m, syncs, report)
+    return report
+
+
+def _lint_module(mod: _Module, syncs: dict, report: Report) -> None:
+    # rule: unsized-nonzero (anywhere in the module — eager callers break
+    # under a later jit/vmap wrap just the same)
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call):
+            kind, name, recv = _call_name(node)
+            if kind == "attr" and name == "nonzero" and \
+                    isinstance(recv, ast.Name) and \
+                    recv.id in ("jnp", "jax") and \
+                    not any(kw.arg == "size" for kw in node.keywords):
+                report.add("unsized-nonzero", mod.rel,
+                           _enclosing(mod, node),
+                           "jnp.nonzero without size= has a data-dependent "
+                           "output shape (fails/retraces under jit)",
+                           line=node.lineno)
+
+    # rules: traced-host-cast / traced-python-branch in jitted bodies
+    for qual, fn in mod.functions.items():
+        static: set[str] = set()
+        jitted = False
+        for dec in fn.decorator_list:
+            is_jit, names = _is_jit_decorator(dec)
+            if is_jit:
+                jitted, static = True, names
+                break
+        if jitted:
+            _lint_jitted_body(fn, static, mod.rel, qual, report)
+
+    # rule: timer-no-sync
+    def make_resolve(cls):
+        def resolve(call: ast.Call):
+            kind, name, recv = _call_name(call)
+            if kind == "name":
+                if name in mod.functions:
+                    return syncs.get((mod.rel, name), False)
+                if name in mod.imports:
+                    return _imported_syncs(syncs, mod.imports[name])
+            elif kind == "attr" and isinstance(recv, ast.Name) and \
+                    recv.id == "self" and cls is not None:
+                return syncs.get((mod.rel, f"{cls}.{name}"), False)
+            return False
+        return resolve
+
+    for qual, fn in mod.functions.items():
+        resolve = make_resolve(qual.split(".")[0] if "." in qual else None)
+        for var, open_stmt, span, close in _timer_sections(fn.body):
+            if not span:
+                continue
+            if any(_contains_sync(s, resolve) for s in span):
+                continue
+            report.add("timer-no-sync", mod.rel, qual,
+                       f"perf_counter section `{var}` (line "
+                       f"{open_stmt.lineno}) times a span with no "
+                       "device sync — attribution measures dispatch, "
+                       "not compute (add block_until_ready or a host "
+                       "transfer inside the span)",
+                       line=open_stmt.lineno, severity="error")
+
+
+def _imported_syncs(syncs: dict, target: tuple[str, str]) -> bool:
+    """Does ``from <module> import <name>`` resolve to a syncing
+    function? Matched by qualname + module path suffix."""
+    src_mod, src_name = target
+    suffix = src_mod.replace(".", "/") + ".py"
+    for (rel, qual), ok in syncs.items():
+        if qual == src_name and rel.endswith(suffix):
+            return ok
+    return False
+
+
+def _enclosing(mod: _Module, node: ast.AST) -> str:
+    """Qualname of the function containing ``node`` (by line span), else
+    ``<module>``."""
+    best, best_span = "<module>", None
+    for qual, fn in mod.functions.items():
+        end = getattr(fn, "end_lineno", fn.lineno)
+        if fn.lineno <= node.lineno <= end:
+            span = end - fn.lineno
+            if best_span is None or span < best_span:
+                best, best_span = qual, span
+    return best

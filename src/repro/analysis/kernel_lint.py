@@ -1,0 +1,289 @@
+"""Static checks on Pallas launch configurations in ``kernels/``.
+
+A *launcher* is any top-level function whose body calls
+``pl.pallas_call``; a *kernel body* is any function whose parameters are
+``*_ref`` names. Four rules (DESIGN.md §Static analysis):
+
+* ``auto-interpret-contract`` — launchers must default ``interpret=None``
+  and resolve it through :func:`repro.kernels.rbf.auto_interpret`
+  (interpret on CPU only). A hard-coded ``interpret=True`` default runs
+  the Python body on every backend; ``False`` breaks the CPU validation
+  path.
+* ``block-divisibility`` — every block size used as a grid divisor
+  (``N // bm`` inside the ``grid=`` expression) needs a matching ragged-
+  tail pad ``(-n) % bm`` in the launcher body; without it a non-multiple
+  shape either fails to launch or silently drops the tail.
+* ``vmem-footprint`` — the per-block VMEM estimate (block shapes of
+  in/out specs + scratch shapes, at the launcher's literal block-size
+  defaults, 8 bytes/element worst case, symbolic dims assumed
+  ``SYMBOLIC_DIM``) must stay under ``VMEM_LIMIT_BYTES``. Launchers whose
+  defaults are full-array (``None``) are skipped — their footprint is
+  input-dependent by design.
+* ``acc-dtype-promotion`` — a VMEM scratch accumulator must either use
+  the f64-conditional idiom (``jnp.float64 if <input is f64> else
+  jnp.float32`` — the §Pallas sources rule: accumulate in f64 iff the
+  input is f64, else f32) or be baselined with a justification (e.g.
+  flash attention's by-design f32 online softmax). Kernel-body dots must
+  pass ``preferred_element_type`` so the MXU accumulates in the scratch
+  dtype rather than the input dtype.
+"""
+from __future__ import annotations
+
+import ast
+import math
+import pathlib
+
+from repro.analysis.findings import Report
+
+VMEM_LIMIT_BYTES = 16 * 1024 * 1024
+#: assumed extent of a block dim the lint cannot resolve to a literal
+#: (e.g. a model dim ``D`` flowing through a BlockSpec): generous enough
+#: to catch real blowups, small enough not to cry wolf
+SYMBOLIC_DIM = 512
+WORST_CASE_ITEMSIZE = 8   # f64 interpret mode
+
+
+def _call_name(node: ast.Call):
+    fn = node.func
+    if isinstance(fn, ast.Name):
+        return fn.id
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    return None
+
+
+def _find_calls(node: ast.AST, name: str):
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call) and _call_name(sub) == name:
+            yield sub
+
+
+def _literal_defaults(fn: ast.FunctionDef) -> dict[str, int | None]:
+    """{param: literal int default} over positional + kw-only params
+    (None default recorded as None)."""
+    out: dict[str, int | None] = {}
+    args = fn.args
+    pos = args.posonlyargs + args.args
+    for arg, default in zip(pos[len(pos) - len(args.defaults):],
+                            args.defaults):
+        if isinstance(default, ast.Constant):
+            out[arg.arg] = default.value
+    for arg, default in zip(args.kwonlyargs, args.kw_defaults):
+        if isinstance(default, ast.Constant):
+            out[arg.arg] = default.value
+    return out
+
+
+def _dim_extent(node: ast.expr, env: dict) -> int:
+    """Best-effort extent of one block-shape dim: literal ints, names
+    bound to literal defaults, else ``SYMBOLIC_DIM``."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return node.value
+    if isinstance(node, ast.Name):
+        v = env.get(node.id)
+        if isinstance(v, int):
+            return v
+    return SYMBOLIC_DIM
+
+
+def _block_shapes(call: ast.Call, env: dict):
+    """Extents of every BlockSpec block shape and scratch shape of one
+    ``pallas_call``; yields (what, [dims]) with unresolved dims at
+    ``SYMBOLIC_DIM``. A None entry means full-array blocks (skipped)."""
+    kwargs = {kw.arg: kw.value for kw in call.keywords}
+    for field in ("in_specs", "out_specs"):
+        spec = kwargs.get(field)
+        if spec is None:
+            continue
+        specs = spec.elts if isinstance(spec, (ast.Tuple, ast.List)) \
+            else [spec]
+        for s in specs:
+            if not isinstance(s, ast.Call):
+                continue
+            shape = s.args[0] if s.args else None
+            for kw in s.keywords:
+                if kw.arg == "block_shape":
+                    shape = kw.value
+            if isinstance(shape, (ast.Tuple, ast.List)):
+                yield field, [_dim_extent(d, env) for d in shape.elts]
+    scratch = kwargs.get("scratch_shapes")
+    if scratch is not None and isinstance(scratch, (ast.Tuple, ast.List)):
+        for s in scratch.elts:
+            if isinstance(s, ast.Call) and s.args and \
+                    isinstance(s.args[0], (ast.Tuple, ast.List)):
+                yield "scratch", [_dim_extent(d, env)
+                                  for d in s.args[0].elts]
+
+
+def _grid_divisors(call: ast.Call) -> set[str]:
+    """Names used as ``X // name`` divisors in the grid expression, plus
+    names bound earlier like ``n_k_steps = D // bk`` are resolved by the
+    caller."""
+    kwargs = {kw.arg: kw.value for kw in call.keywords}
+    grid = kwargs.get("grid")
+    names: set[str] = set()
+    if grid is None:
+        return names
+    for node in ast.walk(grid):
+        if isinstance(node, ast.BinOp) and \
+                isinstance(node.op, ast.FloorDiv) and \
+                isinstance(node.right, ast.Name):
+            names.add(node.right.id)
+    return names
+
+
+def _floordiv_bindings(fn: ast.FunctionDef) -> dict[str, set[str]]:
+    """{assigned name: divisor names} for ``x = <expr> // name``
+    assignments — grid entries are often precomputed this way."""
+    out: dict[str, set[str]] = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                isinstance(node.targets[0], ast.Name):
+            divisors = {sub.right.id for sub in ast.walk(node.value)
+                        if isinstance(sub, ast.BinOp)
+                        and isinstance(sub.op, ast.FloorDiv)
+                        and isinstance(sub.right, ast.Name)}
+            if divisors:
+                out[node.targets[0].id] = divisors
+    return out
+
+
+def _pad_guards(fn: ast.FunctionDef) -> set[str]:
+    """Block-size names appearing in a ragged-tail pad ``(-x) % b``."""
+    guards: set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Mod) \
+                and isinstance(node.right, ast.Name) and \
+                isinstance(node.left, ast.UnaryOp) and \
+                isinstance(node.left.op, ast.USub):
+            guards.add(node.right.id)
+    return guards
+
+
+def _grid_names(fn: ast.FunctionDef, call: ast.Call) -> set[str]:
+    """All block-size names the grid divides by, following one level of
+    ``x = ... // b`` indirection."""
+    bindings = _floordiv_bindings(fn)
+    names = set(_grid_divisors(call))
+    kwargs = {kw.arg: kw.value for kw in call.keywords}
+    grid = kwargs.get("grid")
+    if grid is not None:
+        for node in ast.walk(grid):
+            if isinstance(node, ast.Name) and node.id in bindings:
+                names |= bindings[node.id]
+    return names
+
+
+def _has_f64_conditional(fn: ast.FunctionDef) -> bool:
+    """The §Pallas sources accumulator idiom:
+    ``jnp.float64 if <...> else jnp.float32`` (either order)."""
+    for node in ast.walk(fn):
+        if isinstance(node, ast.IfExp):
+            names = {getattr(n, "attr", None) for n in ast.walk(node)}
+            if {"float64", "float32"} <= names:
+                return True
+    return False
+
+
+def _scratch_dtypes(call: ast.Call):
+    """dtype expression of each VMEM scratch allocation."""
+    kwargs = {kw.arg: kw.value for kw in call.keywords}
+    scratch = kwargs.get("scratch_shapes")
+    if scratch is None or not isinstance(scratch, (ast.Tuple, ast.List)):
+        return
+    for s in scratch.elts:
+        if isinstance(s, ast.Call) and len(s.args) >= 2:
+            yield s.args[1]
+
+
+def lint_paths(paths, *, repo_root=None) -> Report:
+    report = Report()
+    repo_root = pathlib.Path(repo_root) if repo_root else None
+    for p in paths:
+        p = pathlib.Path(p)
+        rel = str(p.relative_to(repo_root)) if repo_root and \
+            p.is_relative_to(repo_root) else str(p)
+        tree = ast.parse(p.read_text(), filename=str(p))
+        for node in tree.body:
+            if isinstance(node, ast.FunctionDef):
+                _lint_launcher(node, rel, report)
+                _lint_kernel_body(node, rel, report)
+    return report
+
+
+def _lint_launcher(fn: ast.FunctionDef, rel: str, report: Report) -> None:
+    calls = list(_find_calls(fn, "pallas_call"))
+    if not calls:
+        return
+    env = _literal_defaults(fn)
+
+    # --- auto_interpret(None) default contract
+    interp_default = env.get("interpret", "absent") \
+        if "interpret" in _param_names(fn) else "missing"
+    resolves = any(True for _ in _find_calls(fn, "auto_interpret"))
+    if interp_default == "missing":
+        report.add("auto-interpret-contract", rel, fn.name,
+                   "pallas launcher has no `interpret` parameter — CPU "
+                   "callers cannot validate it", line=fn.lineno)
+    elif interp_default is not None or not resolves:
+        report.add("auto-interpret-contract", rel, fn.name,
+                   f"`interpret` must default to None and resolve via "
+                   f"auto_interpret() (got default={interp_default!r}, "
+                   f"auto_interpret called={resolves}) — the contract is "
+                   "interpret-on-CPU-only", line=fn.lineno)
+
+    pads = _pad_guards(fn)
+    for call in calls:
+        # --- block divisibility vs ragged tails
+        for name in sorted(_grid_names(fn, call)):
+            if name not in pads:
+                report.add("block-divisibility", rel, fn.name,
+                           f"grid divides by block size `{name}` with no "
+                           f"`(-dim) % {name}` ragged-tail pad — "
+                           "non-multiple shapes fail or truncate",
+                           line=call.lineno)
+        # --- per-block VMEM footprint at the literal defaults
+        if any(env.get(k) is None for k in ("bm", "bk", "bn")
+               if k in _param_names(fn)):
+            continue   # full-array defaults: footprint is input-sized
+        total = sum(math.prod(dims) * WORST_CASE_ITEMSIZE
+                    for _, dims in _block_shapes(call, env))
+        if total > VMEM_LIMIT_BYTES:
+            report.add("vmem-footprint", rel, fn.name,
+                       f"per-block VMEM estimate {total / 2**20:.1f} MiB "
+                       f"exceeds the {VMEM_LIMIT_BYTES // 2**20} MiB "
+                       "budget at the default block sizes",
+                       line=call.lineno)
+        # --- accumulator dtype promotion
+        for dtype_expr in _scratch_dtypes(call):
+            names = {getattr(n, "attr", getattr(n, "id", None))
+                     for n in ast.walk(dtype_expr)}
+            if "acc_dtype" in names or _has_f64_conditional(fn):
+                continue
+            report.add("acc-dtype-promotion", rel, fn.name,
+                       "VMEM scratch dtype is fixed rather than the "
+                       "f64-iff-input-f64 conditional (`acc_dtype`) — "
+                       "f64 inputs would silently accumulate at lower "
+                       "precision", severity="warn", line=call.lineno)
+            break
+
+
+def _param_names(fn: ast.FunctionDef) -> set[str]:
+    args = fn.args
+    return {a.arg for a in args.posonlyargs + args.args + args.kwonlyargs}
+
+
+def _lint_kernel_body(fn: ast.FunctionDef, rel: str,
+                      report: Report) -> None:
+    params = [a.arg for a in fn.args.args]
+    if not params or not any(p.endswith("_ref") for p in params):
+        return
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) and \
+                _call_name(node) in ("dot", "dot_general", "matmul"):
+            if not any(kw.arg == "preferred_element_type"
+                       for kw in node.keywords):
+                report.add("acc-dtype-promotion", rel, fn.name,
+                           f"kernel-body `{_call_name(node)}` without "
+                           "preferred_element_type accumulates in the "
+                           "input dtype on the MXU", line=node.lineno)

@@ -1,0 +1,276 @@
+"""Pre-execution analysis of a Study ``Plan``: what will this plan make
+the machine do, and can it do it within the declared budget?
+
+Grown out of ``study._validate_plan`` (which stays the hard entry gate —
+malformed graphs raise there regardless of analysis mode), this module
+answers the *feasibility and shape* questions validation doesn't:
+
+* **compile-shape enumeration** — the distinct jitted programs the
+  schedule can produce. Per source, the peak concurrent lane count is the
+  maximum antichain of the dep/after DAG (Dilworth via bipartite matching
+  on the reachability relation — any antichain can be simultaneously
+  live under some retirement schedule, and no comparable pair can);
+  ``scheduler.possible_widths`` maps that peak through the pool's width
+  buckets and ``max_width`` cap, and each (program kind, width, n, dtype,
+  wss) tuple is one jit cache entry — deduplicated globally, because the
+  jit cache is global (same-shaped sources share compiles; this is why
+  ``occupancy["programs"]`` overcounts). ``recompile-storm`` warns when
+  the count exceeds the threshold.
+* **SourceCache feasibility** — the budget contract: pinned (dense)
+  sources are always resident and every managed source must fit on top
+  of them (``cache_bytes``); a plan whose largest declared source cannot
+  be admitted within the declared budget is rejected (the runtime cache
+  would run it anyway via the last-resort guard, but a daemon admitting
+  third-party plans must hold the declared budget to its word).
+  Row-streaming (pallas) sources cost X bytes, dense kinds n² bytes —
+  both read from the spec without materializing.
+* **checkpoint step-key audit** — study records must live at
+  ``base_step >= STUDY_BASE`` (2e12): the mid-fold range is < 1e12 and
+  the batch range is [1e12, 2e12), so a lower base silently interleaves
+  record kinds in a shared checkpoint directory.
+* **dead lanes** — lanes whose result nothing consumes (no eval, no
+  dependent lane): advisory, they often indicate a mis-keyed EvalSpec.
+
+``analyze_plan`` returns a :class:`PlanAnalysis` (advisory);
+``check_plan`` is the strict entry — it raises on any error-severity
+finding and is what the ROADMAP's study-service daemon should call at
+admission time.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.analysis.findings import Report
+from repro.svm import cost_model
+from repro.svm.scheduler import possible_widths
+from repro.svm.sources import _source_nbytes, is_factory
+
+#: distinct-program warning threshold: beyond this, first-chunk latency is
+#: dominated by retraces (each program is one XLA compile)
+STORM_THRESHOLD = 8
+
+#: antichain computation cap: above this many lanes per source the peak
+#: falls back to the lane count (an upper bound) — noted in the analysis
+ANTICHAIN_LIMIT = 512
+
+
+@dataclasses.dataclass
+class PlanAnalysis:
+    """The analyzer's answer: distinct program shapes, per-source width
+    profile, budget accounting, and the findings report."""
+    programs: list[tuple]      # sorted distinct (kind, program, w, n, dtype, wss)
+    program_count: int
+    per_source: dict           # key -> {kind, n, dtype, peak_width, widths}
+    max_width: int             # effective cap the enumeration used
+    pinned_bytes: int
+    peak_managed_bytes: int    # largest single managed source
+    report: Report
+
+    @property
+    def ok(self) -> bool:
+        return not self.report.errors
+
+    def to_json(self) -> dict:
+        return {"programs": [list(p) for p in self.programs],
+                "program_count": self.program_count,
+                "per_source": {str(k): v for k, v in
+                               self.per_source.items()},
+                "max_width": self.max_width,
+                "pinned_bytes": self.pinned_bytes,
+                "peak_managed_bytes": self.peak_managed_bytes,
+                "findings": self.report.to_json()["findings"]}
+
+
+def _max_antichain(nodes: list, prereqs: dict) -> int:
+    """Maximum antichain of the DAG over ``nodes`` (``prereqs[v]`` = ids
+    v waits on), restricted to ``nodes`` but ordered through the full
+    graph: Dilworth — |S| minus a maximum matching on the reachability
+    relation, reachability as bitmasks over a topological order."""
+    order = _topo(prereqs)
+    idx = {v: i for i, v in enumerate(order)}
+    reach = [0] * len(order)            # bitmask of ancestors (prereqs*)
+    for v in order:
+        m = 0
+        for p in prereqs.get(v, ()):
+            if p in idx:
+                m |= reach[idx[p]] | (1 << idx[p])
+        reach[idx[v]] = m
+    sel = [v for v in nodes if v in idx]
+    sel_bit = {v: 1 << idx[v] for v in sel}
+    # comparable pairs within the selection: u < v iff u in ancestors(v)
+    adj = {v: [u for u in sel
+               if u is not v and reach[idx[v]] & sel_bit[u]]
+           for v in sel}
+    match_l: dict = {}
+    match_r: dict = {}
+    for v in sel:                        # greedy init (chains match fast)
+        for u in adj[v]:
+            if u not in match_r:
+                match_l[v], match_r[u] = u, v
+                break
+
+    def augment(v, seen):
+        for u in adj[v]:
+            if u in seen:
+                continue
+            seen.add(u)
+            if u not in match_r or augment(match_r[u], seen):
+                match_l[v], match_r[u] = u, v
+                return True
+        return False
+
+    for v in sel:
+        if v not in match_l:
+            augment(v, set())
+    return len(sel) - len(match_l)
+
+
+def _topo(prereqs: dict) -> list:
+    seen: dict = {}
+    out: list = []
+    for root in prereqs:
+        stack = [(root, iter(prereqs.get(root, ())))]
+        if root in seen:
+            continue
+        seen[root] = True
+        while stack:
+            node, it = stack[-1]
+            advanced = False
+            for p in it:
+                if p in prereqs and p not in seen:
+                    seen[p] = True
+                    stack.append((p, iter(prereqs.get(p, ()))))
+                    advanced = True
+                    break
+            if not advanced:
+                out.append(node)
+                stack.pop()
+    return out
+
+
+def analyze_plan(plan, *, checkpoint=None, backend=None,
+                 storm_threshold: int = STORM_THRESHOLD) -> PlanAnalysis:
+    """Build the pre-execution report for ``plan``. Never raises on plan
+    content — structural problems (the ``_validate_plan`` surface) come
+    back as ``invalid-plan`` error findings, so a daemon can report them
+    instead of crashing on them. Pure inspection: no kernel materializes,
+    no program compiles."""
+    from repro.core import study   # deferred: study imports this lazily
+
+    report = Report()
+    try:
+        plan = study.resolve_source_backend(plan)
+        specs = {}
+        for spec in plan.lanes:
+            if spec.id in specs:
+                raise ValueError(f"duplicate lane id {spec.id!r}")
+            specs[spec.id] = spec
+        study._validate_plan(plan, specs)
+    except ValueError as e:
+        report.add("invalid-plan", "<plan>", "plan", str(e))
+        return PlanAnalysis(programs=[], program_count=0, per_source={},
+                            max_width=0, pinned_bytes=0,
+                            peak_managed_bytes=0, report=report)
+
+    kinds = {cost_model.source_kind(s) for s in plan.sources.values()}
+    max_width = plan.max_width if plan.max_width is not None \
+        else cost_model.pick_max_width(backend, kinds=kinds)
+
+    # ---- compile-shape enumeration --------------------------------------
+    solved = [s for s in plan.lanes if s.result is None]
+    prereqs = {s.id: [t for t in (s.dep, s.after)
+                      if t is not None and specs[t].result is None]
+               for s in solved}
+    per_source: dict = {}
+    programs: set = set()
+    for key, entry in plan.sources.items():
+        lanes = [s.id for s in solved if plan.source_key_of(s) == key]
+        if not lanes:
+            continue
+        n = int(np.shape(plan.y_of(key))[0])
+        dtype = str(getattr(entry, "dtype", "?"))
+        kind = cost_model.source_kind(entry)
+        if len(lanes) > ANTICHAIN_LIMIT:
+            peak, exact = len(lanes), False
+        else:
+            peak, exact = _max_antichain(lanes, prereqs), True
+        widths = possible_widths(peak, plan.lane_quantum, max_width)
+        for w in widths:
+            programs.add(("single" if w == 1 else "batched",
+                          kind, w, n, dtype, plan.wss))
+        per_source[key] = {"kind": kind, "n": n, "dtype": dtype,
+                           "lanes": len(lanes), "peak_width": peak,
+                           "peak_exact": exact, "widths": list(widths)}
+
+    if len(programs) > storm_threshold:
+        report.add("recompile-storm", "<plan>", "programs",
+                   f"schedule can produce {len(programs)} distinct jitted "
+                   f"programs (> {storm_threshold}): raise lane_quantum "
+                   "or cap max_width to bound first-chunk retraces",
+                   severity="warn")
+
+    # ---- SourceCache budget feasibility ---------------------------------
+    pinned_bytes = sum(_source_nbytes(s) for s in plan.sources.values()
+                      if not is_factory(s))
+    managed = {k: _source_nbytes(s) for k, s in plan.sources.items()
+               if is_factory(s)}
+    peak_managed = max(managed.values(), default=0)
+    if plan.cache_bytes and managed:
+        worst = max(managed, key=managed.get)
+        if pinned_bytes + managed[worst] > plan.cache_bytes:
+            report.add(
+                "cache-infeasible", "<plan>", repr(worst),
+                f"source {worst!r} needs {managed[worst]} bytes on top of "
+                f"{pinned_bytes} pinned bytes, exceeding the declared "
+                f"cache_bytes={plan.cache_bytes} budget — no eviction "
+                "schedule can admit it within the plan's own contract")
+    if plan.max_resident < 0 or plan.cache_bytes < 0:
+        report.add("cache-infeasible", "<plan>", "budget",
+                   "negative residency budget")
+
+    # ---- checkpoint step-key ranges -------------------------------------
+    if checkpoint is not None:
+        base = int(getattr(checkpoint, "base_step", study.STUDY_BASE))
+        if base < study.STUDY_BASE:
+            zone = "mid-fold (< 1e12)" if base < 1_000_000 ** 2 \
+                else "batch ([1e12, 2e12))"
+            report.add(
+                "checkpoint-key-collision", "<plan>", "base_step",
+                f"study base_step {base} lands in the {zone} record range; "
+                f"study records must start at STUDY_BASE "
+                f"({study.STUDY_BASE}) to share a checkpoint directory "
+                "with fold and batch records")
+
+    # ---- dead lanes ------------------------------------------------------
+    consumed = {ev.lane for ev in plan.evals}
+    consumed |= {t for s in plan.lanes for t in (s.dep, s.after)
+                 if t is not None}
+    for spec in plan.lanes:
+        if spec.id not in consumed:
+            what = "given result" if spec.result is not None else "result"
+            report.add("lane-unobserved", "<plan>", repr(spec.id),
+                       f"lane {spec.id!r}: {what} is never evaluated and "
+                       "no lane depends on it (mis-keyed EvalSpec, or "
+                       "consumed only via on_result/StudyResult)",
+                       severity="warn")
+
+    return PlanAnalysis(programs=sorted(programs),
+                        program_count=len(programs),
+                        per_source=per_source, max_width=max_width,
+                        pinned_bytes=int(pinned_bytes),
+                        peak_managed_bytes=int(peak_managed),
+                        report=report)
+
+
+def check_plan(plan, *, checkpoint=None, backend=None) -> PlanAnalysis:
+    """Strict-mode analysis: raise ``ValueError`` on any error-severity
+    finding (the admission gate a plan-serving daemon should call);
+    returns the analysis otherwise."""
+    pa = analyze_plan(plan, checkpoint=checkpoint, backend=backend)
+    if pa.report.errors:
+        raise ValueError(
+            "plan rejected by static analysis:\n"
+            + "\n".join(f.render() for f in pa.report.errors))
+    return pa

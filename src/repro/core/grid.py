@@ -164,6 +164,72 @@ def _row_lanes(plan: Plan, gi: int, Cs, masks, transitions, method: str,
             plan.evaluate((gi, ci, h), chunks[h])
 
 
+def _check_grid_args(pool: str, source_backend: str, method: str) -> None:
+    """The grid's own entry contract — checked before any plan is built
+    or any kernel spec could resolve, so a typo fails at call time."""
+    if pool not in ("cross_gamma", "per_gamma"):
+        raise ValueError(f"unknown pool {pool!r}")
+    if source_backend not in ("dense", "pallas_rbf"):
+        raise ValueError(f"unknown source_backend {source_backend!r} "
+                         "(have 'dense', 'pallas_rbf')")
+    if source_backend == "pallas_rbf" and method != "cold":
+        raise ValueError("source_backend='pallas_rbf' requires "
+                         "method='cold': fold-transition seeders "
+                         "slab-index a dense kernel matrix")
+
+
+def grid_plans(ds: SVMDataset, Cs, gammas, k: int = 10,
+               method: str = "sir", tol: float = 1e-3,
+               max_iter: int = 5_000_000, seed: int = 0,
+               seed_across_C: bool = False, chunk_iters: int = 4096,
+               kernel_backend: str = "jnp", lane_quantum: int = 4,
+               max_width: int | None = None, pool: str = "cross_gamma",
+               max_resident: int = 0, cache_bytes: int = 0,
+               source_backend: str = "dense") -> list:
+    """The exact ``Plan``(s) ``run_grid`` executes for these arguments —
+    one multi-source plan for ``pool="cross_gamma"``, one single-source
+    plan per gamma for ``pool="per_gamma"`` — built but not run. This is
+    the static-analysis entry point: feed them to
+    ``repro.analysis.plan_check.analyze_plan`` to enumerate compile
+    shapes or budget feasibility without solving anything."""
+    _check_grid_args(pool, source_backend, method)
+    Cs = sorted(float(c) for c in Cs)
+    gammas = [float(g) for g in gammas]
+    y_all = jnp.asarray(ds.y, jnp.float64)
+    X = jnp.asarray(ds.X)
+    chunks = kfold_chunks(ds.n, k, seed=seed)
+    n = chunks.size
+    y = y_all[:n]
+    masks = jnp.asarray(_fold_masks(chunks))
+    transitions = {} if method == "cold" else \
+        {h: _transition_idx(chunks, h - 1, h) for h in range(1, k)}
+    # one DECLARED kernel per gamma — nothing is computed here. The spec
+    # slices X to the k-fold truncation BEFORE the kernel call; core/cv.py
+    # builds its kernel the same way, which keeps grid cells bit-identical
+    # to run_cv (the two slice orders differ in final bits at some shapes)
+    sources = {gi: KernelSpec(X=X, gamma=gamma, kind="rbf",
+                              backend=kernel_backend, n=n)
+               for gi, gamma in enumerate(gammas)}
+    # cold-start alphas in the KERNEL dtype (KernelSpec answers it without
+    # materializing), matching run_cv's jnp.zeros(n, K.dtype)
+    zeros = jnp.zeros(n, sources[0].dtype if sources else jnp.float64)
+
+    def make_plan(keys) -> Plan:
+        plan = Plan(sources={gi: sources[gi] for gi in keys}, y=y, tol=tol,
+                    wss="1" if source_backend == "pallas_rbf" else "2",
+                    chunk_iters=chunk_iters, lane_quantum=lane_quantum,
+                    max_width=max_width, max_resident=max_resident,
+                    cache_bytes=cache_bytes, source_backend=source_backend)
+        for gi in keys:
+            _row_lanes(plan, gi, Cs, masks, transitions, method,
+                       seed_across_C, max_iter, zeros, y, chunks)
+        return plan
+
+    if pool == "cross_gamma":
+        return [make_plan(range(len(gammas)))]
+    return [make_plan([gi]) for gi in range(len(gammas))]
+
+
 def run_grid(ds: SVMDataset, Cs, gammas, k: int = 10, method: str = "sir",
              tol: float = 1e-3, max_iter: int = 5_000_000, seed: int = 0,
              seed_across_C: bool = False, chunk_iters: int = 4096,
@@ -207,51 +273,27 @@ def run_grid(ds: SVMDataset, Cs, gammas, k: int = 10, method: str = "sir",
     selection is forced, and evaluations run off row slabs. Requires
     ``method="cold"`` — the fold-transition seeders slab-index a dense K.
     """
-    if pool not in ("cross_gamma", "per_gamma"):
-        raise ValueError(f"unknown pool {pool!r}")
-    if source_backend == "pallas_rbf" and method != "cold":
-        raise ValueError("source_backend='pallas_rbf' requires "
-                         "method='cold': fold-transition seeders "
-                         "slab-index a dense kernel matrix")
+    _check_grid_args(pool, source_backend, method)
     if checkpoint_manager is not None and pool != "cross_gamma":
         raise ValueError("grid checkpointing is plan-keyed and needs the "
                          "cross-gamma pool (one study = one record stream)")
     Cs = sorted(float(c) for c in Cs)
     gammas = [float(g) for g in gammas]
     m = len(Cs)
-    y_all = jnp.asarray(ds.y, jnp.float64)
-    X = jnp.asarray(ds.X)
-
     chunks = kfold_chunks(ds.n, k, seed=seed)
     n = chunks.size
-    y = y_all[:n]
-    masks = jnp.asarray(_fold_masks(chunks))          # (k, n)
-    transitions = {} if method == "cold" else \
-        {h: _transition_idx(chunks, h - 1, h) for h in range(1, k)}
 
-    # one DECLARED kernel per gamma — nothing is computed here. The spec
-    # slices X to the k-fold truncation BEFORE the kernel call (the old
-    # kernel_matrix(X, X)[:n][:, :n] computed and then threw away
-    # O(N^2 - n^2) work per gamma, inflating kernel_time); core/cv.py
-    # builds its kernel the same way, which keeps grid cells bit-identical
-    # to run_cv (the two slice orders differ in final bits at some shapes)
-    sources = {gi: KernelSpec(X=X, gamma=gamma, kind="rbf",
-                              backend=kernel_backend, n=n)
-               for gi, gamma in enumerate(gammas)}
-    # cold-start alphas in the KERNEL dtype (KernelSpec answers it without
-    # materializing), matching run_cv's jnp.zeros(n, K.dtype)
-    zeros = jnp.zeros(n, sources[0].dtype if sources else jnp.float64)
-
-    def make_plan(keys) -> Plan:
-        plan = Plan(sources={gi: sources[gi] for gi in keys}, y=y, tol=tol,
-                    wss="1" if source_backend == "pallas_rbf" else "2",
-                    chunk_iters=chunk_iters, lane_quantum=lane_quantum,
-                    max_width=max_width, max_resident=max_resident,
-                    cache_bytes=cache_bytes, source_backend=source_backend)
-        for gi in keys:
-            _row_lanes(plan, gi, Cs, masks, transitions, method,
-                       seed_across_C, max_iter, zeros, y, chunks)
-        return plan
+    # one builder for the declared plans — grid_plans is also the static
+    # analyzer's entry point, so what plan_check enumerates is exactly
+    # what executes here
+    plans = grid_plans(ds, Cs, gammas, k=k, method=method, tol=tol,
+                       max_iter=max_iter, seed=seed,
+                       seed_across_C=seed_across_C, chunk_iters=chunk_iters,
+                       kernel_backend=kernel_backend,
+                       lane_quantum=lane_quantum, max_width=max_width,
+                       pool=pool, max_resident=max_resident,
+                       cache_bytes=cache_bytes,
+                       source_backend=source_backend)
 
     if pool == "cross_gamma":
         checkpoint = None
@@ -262,12 +304,10 @@ def run_grid(ds: SVMDataset, Cs, gammas, k: int = 10, method: str = "sir",
                       "k": k, "seed": seed, "tol": tol, "max_iter": max_iter,
                       "Cs": Cs, "gammas": gammas,
                       "seed_across_C": seed_across_C})
-        study_results = [run_plan(make_plan(range(len(gammas))),
-                                  checkpoint=checkpoint)]
+        study_results = [run_plan(plans[0], checkpoint=checkpoint)]
         occupancy = study_results[0].occupancy
     else:
-        study_results = [run_plan(make_plan([gi]))
-                         for gi in range(len(gammas))]
+        study_results = [run_plan(p) for p in plans]
         occupancy = _merge_occupancy([s.occupancy for s in study_results])
 
     seed_time = sum(s.seed_time for s in study_results)

@@ -185,6 +185,10 @@ class StudyResult:
     #: kernel-source cache account: materialization count/wall-time and
     #: peak residency (sources, bytes) — all zeros for all-dense plans
     source_stats: dict = dataclasses.field(default_factory=dict)
+    #: pre-execution static analysis (``repro.analysis.plan_check``):
+    #: compile-shape enumeration, budget feasibility, advisory findings;
+    #: None when ``run_plan(..., analysis="off")``
+    analysis: Any = None
 
 
 @jax.jit
@@ -330,8 +334,30 @@ def _validate_plan(plan: Plan, specs: dict) -> None:
                 stack.pop()
 
 
+def resolve_source_backend(plan: Plan) -> Plan:
+    """Validate ``plan.source_backend`` and apply it: ``"pallas_rbf"``
+    rewrites every dense-RBF spec to the row-streaming kind (and requires
+    WSS-1). This runs at entry — both ``run_plan`` and the static
+    analyzer (``repro.analysis.plan_check``) resolve through here, so a
+    typo'd backend fails before any kernel could materialize."""
+    if plan.source_backend not in ("dense", "pallas_rbf"):
+        raise ValueError(f"unknown source_backend {plan.source_backend!r} "
+                         "(have 'dense', 'pallas_rbf')")
+    if plan.source_backend == "pallas_rbf":
+        if plan.wss != "1":
+            raise ValueError("source_backend='pallas_rbf' streams both "
+                             "kernel rows through the fused step kernel "
+                             "and requires WSS-1 (wss='1')")
+        plan = dataclasses.replace(plan, sources={
+            k: (dataclasses.replace(s, kind="pallas_rbf")
+                if isinstance(s, KernelSpec) and s.kind == "rbf" else s)
+            for k, s in plan.sources.items()})
+    return plan
+
+
 def run_plan(plan: Plan, *, checkpoint: StudyCheckpoint | None = None,
-             on_result=None, on_lane_chunk=None) -> StudyResult:
+             on_result=None, on_lane_chunk=None,
+             analysis: str = "advisory") -> StudyResult:
     """Execute a ``Plan`` on one multi-source ``LanePool``.
 
     ``on_result(lane_id, result)`` streams each lane's ``SMOResult`` the
@@ -346,19 +372,18 @@ def run_plan(plan: Plan, *, checkpoint: StudyCheckpoint | None = None,
     sequence, and pending lanes re-derive their seeds from the restored
     results — bit-identical to the uninterrupted run, under ANY schedule
     shape on either side of the crash.
+
+    ``analysis`` wires the static plan analyzer
+    (``repro.analysis.plan_check``): ``"advisory"`` (default) attaches
+    the pre-execution report to ``StudyResult.analysis``; ``"strict"``
+    raises on error-severity findings (budget-infeasible sources,
+    checkpoint key collisions) BEFORE anything dispatches — the same
+    gate a plan-admitting daemon calls; ``"off"`` skips it.
     """
-    if plan.source_backend not in ("dense", "pallas_rbf"):
-        raise ValueError(f"unknown source_backend {plan.source_backend!r} "
-                         "(have 'dense', 'pallas_rbf')")
-    if plan.source_backend == "pallas_rbf":
-        if plan.wss != "1":
-            raise ValueError("source_backend='pallas_rbf' streams both "
-                             "kernel rows through the fused step kernel "
-                             "and requires WSS-1 (wss='1')")
-        plan = dataclasses.replace(plan, sources={
-            k: (dataclasses.replace(s, kind="pallas_rbf")
-                if isinstance(s, KernelSpec) and s.kind == "rbf" else s)
-            for k, s in plan.sources.items()})
+    if analysis not in ("advisory", "strict", "off"):
+        raise ValueError(f"unknown analysis mode {analysis!r} "
+                         "(have 'advisory', 'strict', 'off')")
+    plan = resolve_source_backend(plan)
 
     specs: dict[Any, LaneSpec] = {}
     for spec in plan.lanes:
@@ -366,6 +391,18 @@ def run_plan(plan: Plan, *, checkpoint: StudyCheckpoint | None = None,
             raise ValueError(f"duplicate lane id {spec.id!r}")
         specs[spec.id] = spec
     _validate_plan(plan, specs)
+
+    plan_analysis = None
+    if analysis != "off":
+        # deferred import: plan_check imports this module for the
+        # validation surface and STUDY_BASE
+        from repro.analysis import plan_check
+        if analysis == "strict":
+            plan_analysis = plan_check.check_plan(plan,
+                                                  checkpoint=checkpoint)
+        else:
+            plan_analysis = plan_check.analyze_plan(plan,
+                                                    checkpoint=checkpoint)
 
     restored: dict[Any, tuple] = {}
     step0 = 0
@@ -503,4 +540,5 @@ def run_plan(plan: Plan, *, checkpoint: StudyCheckpoint | None = None,
                        occupancy=pool.occupancy, seed_time=pool.seed_time,
                        solve_time=wall - pool.seed_time,
                        restored=frozenset(pre_done),
-                       source_stats=pool.cache.stats)
+                       source_stats=pool.cache.stats,
+                       analysis=plan_analysis)

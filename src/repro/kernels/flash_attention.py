@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.rbf import auto_interpret
+
 _NEG = -1e30
 
 
@@ -67,9 +69,14 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 @functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
                                              "interpret"))
 def flash_attention(q, k, v, *, causal=True, window=None, bq=128, bk=128,
-                    interpret=True):
+                    interpret=None):
     """q,k,v: (B, H, S, D) -> (B, H, S, D). GQA callers broadcast kv heads
-    before the call (or pass H=KV groups)."""
+    before the call (or pass H=KV groups).
+
+    ``interpret=None`` auto-detects (Python kernel body on CPU, compiled
+    elsewhere) — see :func:`repro.kernels.rbf.auto_interpret`.
+    """
+    interpret = auto_interpret(interpret)
     B, H, S, D = q.shape
     T = k.shape[2]
     pad_q = (-S) % bq

@@ -47,6 +47,14 @@ DEFAULT_PATH = pathlib.Path(__file__).resolve().parents[3] \
 _CACHE: dict[str, dict | None] = {}
 
 
+def clear_cache() -> None:
+    """Drop every cached parse. Tests that point ``REPRO_COST_MODEL`` at a
+    temp file must call this around the swap — the cache is keyed by path,
+    but a test rewriting the same path would otherwise read the stale
+    parse."""
+    _CACHE.clear()
+
+
 def model_path() -> pathlib.Path:
     return pathlib.Path(os.environ.get("REPRO_COST_MODEL", DEFAULT_PATH))
 

@@ -103,6 +103,20 @@ def bucket_width(w: int, quantum: int = 4) -> int:
     return -(-w // q) * q
 
 
+def possible_widths(peak: int, quantum: int = 4,
+                    max_width: int = 0) -> tuple[int, ...]:
+    """Every distinct packed width the pool can dispatch for a source
+    whose live-lane count ranges over 1..``peak`` under a ``max_width``
+    cap (0 = unbounded): the compile-shape enumeration the plan analyzer
+    (``repro.analysis.plan_check``) maps onto jitted programs — width 1
+    is the single-lane program, each bucketed width >= 2 one batched
+    program. Kept next to :func:`bucket_width` so prediction and
+    execution cannot drift apart."""
+    cap = int(peak) if not max_width else min(int(peak), int(max_width))
+    return tuple(sorted({bucket_width(w, quantum)
+                         for w in range(1, max(cap, 1) + 1)}))
+
+
 @dataclasses.dataclass
 class _Lane:
     id: Any

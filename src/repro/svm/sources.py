@@ -38,6 +38,7 @@ import dataclasses
 import time
 from typing import Any, Callable
 
+import jax
 import jax.numpy as jnp
 
 from repro.svm.engine import DenseKernel, PallasRBF
@@ -261,7 +262,10 @@ class SourceCache:
         spec = self._entries[key]
         self._evict_for(_source_nbytes(spec))
         t0 = time.perf_counter()
-        src = spec.materialize()
+        # sources are pytrees: block on the product so kernel_time measures
+        # the materialization, not its dispatch (the dense path blocks
+        # inside materialize; the row-streaming path holds only X)
+        src = jax.block_until_ready(spec.materialize())
         self.kernel_time += time.perf_counter() - t0
         self.materializations += 1
         self.check_fused(key, src)

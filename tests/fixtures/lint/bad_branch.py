@@ -1,0 +1,25 @@
+"""Lint fixture: Python control flow and host casts on traced values in
+jitted bodies (ConcretizationTypeError at trace time, or silent retraces)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def clip_if_large(x, limit):
+    if x.max() > limit:                 # Python branch on a traced value
+        return jnp.clip(x, -limit, limit)
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def host_cast(x, scale):
+    return x * float(x.mean()) * scale  # host cast forces a device sync
+
+
+@jax.jit
+def static_branch_ok(x):
+    if x.ndim > 1:                      # shape is static under jit — fine
+        x = x.reshape(-1)
+    return x

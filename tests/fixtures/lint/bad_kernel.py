@@ -1,0 +1,32 @@
+"""Lint fixture: a Pallas launcher violating every kernel_lint rule —
+hard-coded interpret default, grid divisor with no ragged-tail pad,
+VMEM-blowing block sizes, fixed-f32 scratch, and a kernel-body dot with
+no preferred_element_type."""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bad_kernel(x_ref, w_ref, o_ref, acc_ref):
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...])
+    o_ref[...] = acc_ref[...]
+
+
+def bad_matmul(x, w, *, bm=2048, bk=2048, interpret=True):
+    M, K = x.shape
+    N = w.shape[1]
+    return pl.pallas_call(
+        _bad_kernel,
+        grid=(M // bm, K // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bk, N), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, N), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, N), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,16 @@
+"""Lint fixture: unsized ``jnp.nonzero`` inside a jitted body (shape
+depends on values — retrace per input under jit)."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def support_vectors(alpha):
+    (idx,) = jnp.nonzero(alpha > 0)
+    return idx
+
+
+@jax.jit
+def support_vectors_sized(alpha):
+    (idx,) = jnp.nonzero(alpha > 0, size=alpha.shape[0], fill_value=-1)
+    return idx

@@ -1,0 +1,24 @@
+"""Lint fixture: a perf_counter section that times async dispatch.
+
+Not collected by pytest (no test_ prefix); scripts/repro_lint.py --paths
+runs the linters on it and must exit nonzero, which is what the CI
+self-test checks.
+"""
+import time
+
+import jax.numpy as jnp
+
+
+def timed_norm(x):
+    t0 = time.perf_counter()
+    y = jnp.linalg.norm(x)          # dispatch only — nothing blocks
+    elapsed = time.perf_counter() - t0
+    return y, elapsed
+
+
+def timed_norm_synced(x):
+    import jax
+    t0 = time.perf_counter()
+    y = jax.block_until_ready(jnp.linalg.norm(x))
+    elapsed = time.perf_counter() - t0
+    return y, elapsed

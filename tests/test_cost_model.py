@@ -82,17 +82,22 @@ def test_pool_reads_model_at_construction(tmp_path, monkeypatch):
     p = _write_model(tmp_path / "m.json",
                      {"cpu": {"dense": {"max_width": 3}}})
     monkeypatch.setenv("REPRO_COST_MODEL", str(p))
+    cost_model.clear_cache()
     y = jnp.asarray(np.where(np.arange(16) % 2, 1.0, -1.0))
     K = jnp.eye(16)
     pool = LanePool({"d": DenseKernel(K)}, y)
     assert pool.max_width == 3
     monkeypatch.setenv("REPRO_COST_MODEL", str(tmp_path / "absent.json"))
+    cost_model.clear_cache()
     pool = LanePool({"d": DenseKernel(K)}, y)
     assert pool.max_width == 1
     # an explicit cap always wins over the model
     monkeypatch.setenv("REPRO_COST_MODEL", str(p))
+    cost_model.clear_cache()
     pool = LanePool({"d": DenseKernel(K)}, y, max_width=7)
     assert pool.max_width == 7
+    # leave no stale temp-path entries behind for later tests
+    cost_model.clear_cache()
 
 
 def test_committed_model_has_cpu_width1_verdict():

@@ -211,6 +211,59 @@ def test_run_plan_rejects_bad_specs():
         run_plan(plan2)
 
 
+def test_validate_plan_cycle_names_the_cycle():
+    """A dep/after cycle is reported AS the cycle — every offending lane
+    by name, not a drain-time 'pending lanes' dump."""
+    ds, (K, _), y, chunks, masks = _setup("heart")
+    n = y.shape[0]
+    plan = Plan(sources={"s": DenseKernel(K)}, y=y)
+    plan.lane("a", train_mask=masks[0], C=ds.C, alpha0=jnp.zeros(n), f0=-y,
+              after="b")
+    plan.lane("b", train_mask=masks[1], C=ds.C, alpha0=jnp.zeros(n), f0=-y,
+              after="a")
+    with pytest.raises(ValueError, match=r"cycle.*'.' -> '.' -> '.'"):
+        run_plan(plan)
+
+
+def test_validate_plan_dense_k_names_lane_and_source():
+    """A seed transform on a K-less source fails at entry, naming both
+    the lane and the source key it resolved to."""
+    from repro.svm import PallasRBF
+    ds, _, y, chunks, masks = _setup("heart")
+    n = y.shape[0]
+    X = jnp.asarray(ds.X)[:n]
+    plan = Plan(sources={"rbf": PallasRBF(X, ds.gamma)}, y=y, wss="1")
+    plan.lane("w0", train_mask=masks[0], C=ds.C, alpha0=jnp.zeros(n), f0=-y)
+    plan.lane("w1", train_mask=masks[1], C=ds.C, dep="w0", transform="fold",
+              params=dict(method="sir",
+                          S_idx=jnp.arange(4), R_idx=jnp.arange(4),
+                          T_idx=jnp.arange(4)))
+    with pytest.raises(ValueError, match=r"'w1'.*'fold'.*'rbf' has no K"):
+        run_plan(plan)
+
+
+def test_bad_source_backend_fails_at_entry():
+    """A typo'd ``source_backend`` is rejected before any source could
+    materialize — on the Plan (via run_plan) and at run_grid's entry."""
+    from repro.core.grid import run_grid
+    from repro.svm.sources import KernelSpec
+
+    class ExplodingSpec(KernelSpec):
+        def materialize(self):
+            raise AssertionError("materialized during entry validation")
+
+    ds, _, y, chunks, masks = _setup("heart")
+    n = y.shape[0]
+    spec = ExplodingSpec(X=jnp.asarray(ds.X), gamma=ds.gamma, n=n)
+    plan = Plan(sources={0: spec}, y=y, source_backend="pallas_rbt")
+    plan.lane(0, source=0, train_mask=masks[0], C=ds.C,
+              alpha0=jnp.zeros(n), f0=-y)
+    with pytest.raises(ValueError, match="unknown source_backend"):
+        run_plan(plan)
+    with pytest.raises(ValueError, match="unknown source_backend"):
+        run_grid(ds, [ds.C], [ds.gamma], k=3, source_backend="dence")
+
+
 # ----------------------------------------------------------------- run_loo
 
 def _loo_reference(ds, method, rounds, tol=1e-3, max_iter=2_000_000):
