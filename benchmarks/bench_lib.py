@@ -12,7 +12,9 @@ def emit(name: str, rows: list[dict]) -> None:
     with open(os.path.join(RESULTS, name + ".json"), "w") as fh:
         json.dump(rows, fh, indent=1)
     if rows:
-        cols = list(rows[0])
+        # column union in first-appearance order: rows are heterogeneous
+        # (occupancy / roofline / residency blocks appear per schedule)
+        cols = list(dict.fromkeys(c for r in rows for c in r))
         print(",".join(cols))
         for r in rows:
-            print(",".join(str(r[c]) for c in cols))
+            print(",".join(str(r.get(c, "")) for c in cols))

@@ -23,6 +23,10 @@ Beyond the paper's columns:
   regression of it, is a one-line artifact diff against ``cold_batched``;
 * ``ato_ref`` — the eager host-side ATO loop that the jitted ramp
   replaced, kept as the jit baseline;
+* ``ato_shrink`` — ATO-seeded CV with active-set shrinking on (DESIGN.md
+  §Shrinking), carrying the unshrunk baseline, the seeding handoff
+  ablation, and an active-fraction-scaled ``hbm_per_iter`` block (see
+  ``_shrink_row``);
 * ``ato_bucketed`` — the batched ATO ramp across a 3-lane C row for every
   fold transition, with per-lane m_cap buckets (``init_s``) vs the
   historical widest-lane pad (``init_s_padded``); the bucketed ramp must
@@ -86,6 +90,10 @@ GRID_K = 5
 #: at once — peak kernel bytes must read ~2/3 of the unbounded pool while
 #: per-cell results stay bit-identical
 GRID_LRU_BUDGET = 2
+#: the ato_shrink row's heuristic cadence: at suite cardinality (n ~ 1000,
+#: a few hundred iterations per seeded fold) a 512-iteration cadence gives
+#: every fold at least one shrink opportunity without thrashing re-gathers
+SHRINK_EVERY_BENCH = 512
 #: the grid_pooled_pallas sizing: cold WSS-1 folds through interpret-mode
 #: pallas cost 5-50x a compiled dense iteration on CPU, so the matrix-free
 #: row runs a 2x2 grid corner — enough cells to exercise multi-source
@@ -93,21 +101,33 @@ GRID_LRU_BUDGET = 2
 PALLAS_GRID = 2
 
 
-def _hbm_iter_estimate(n: int, d: int) -> dict:
+def _hbm_iter_estimate(n: int, d: int, active_frac: float = 1.0) -> dict:
     """Analytic per-SMO-iteration HBM traffic (f64): the dense source
     streams two (n,) kernel rows plus the solver state (f read+write,
     alpha update); the fused pallas step streams X once (n*d) plus the
     same state — one HBM pass per iteration regardless of n². memory_s is
     the roofline service time of the pallas stream at the accelerator
     bandwidth model's HBM_BW; with the MXU cross-term FLOPs alongside it
-    shows which side of the ridge a fused iteration sits on."""
-    state = 3 * n * 8
-    dense = 2 * n * 8 + state
-    pallas = n * d * 8 + state
-    flops = 2.0 * n * d + 8.0 * n
+    shows which side of the ridge a fused iteration sits on.
+
+    ``active_frac`` scales every per-iteration term to the compact working
+    set a shrunk lane dispatches over (DESIGN.md §Shrinking): kernel rows,
+    the X stream and the f/alpha state are all cap-length buffers, so the
+    whole block shrinks with the run's measured mean active fraction. The
+    full-set bytes are kept alongside for the artifact diff."""
+    m = max(1, int(round(active_frac * n)))
+    state = 3 * m * 8
+    dense = 2 * m * 8 + state
+    pallas = m * d * 8 + state
+    flops = 2.0 * m * d + 8.0 * m
     rf = roofline_terms(flops, pallas, 0.0)
-    return {"dense_bytes": dense, "pallas_bytes": pallas,
-            "memory_s": rf["memory_s"], "dominant": rf["dominant"]}
+    out = {"dense_bytes": dense, "pallas_bytes": pallas,
+           "memory_s": rf["memory_s"], "dominant": rf["dominant"]}
+    if active_frac != 1.0:
+        out["active_frac"] = round(float(active_frac), 4)
+        out["dense_bytes_full"] = 2 * n * 8 + 3 * n * 8
+        out["pallas_bytes_full"] = n * d * 8 + 3 * n * 8
+    return out
 
 
 def _grid_rows(name: str, reps: int) -> list[dict]:
@@ -166,6 +186,58 @@ def _grid_rows(name: str, reps: int) -> list[dict]:
             row["hbm_per_iter"] = _hbm_iter_estimate(rep.n, ds.X.shape[1])
         rows.append(row)
     return rows
+
+
+def _shrink_row(name: str, k: int, reps: int) -> dict:
+    """ATO-seeded k-fold CV with active-set shrinking on vs off (DESIGN.md
+    §Shrinking): same seeder, same engine, same schedule — the only change
+    is the pool compacting bound-locked rows out of each solve at bucketed
+    capacities. The row reports the shrink run's timings plus the unshrunk
+    baseline (``solve_s_noshrink`` / ``shrink_speedup``) and the
+    seeding->shrinking handoff ablation (``solve_s_no_handoff``:
+    ``shrink_on_seed=False``, so seeded lanes wait ``shrink_every``
+    iterations to rediscover their bound-locked rows instead of starting
+    shrunk). Fold accuracies are asserted identical to the unshrunk run —
+    shrinking preserves the full-set optimality contract. ``hbm_per_iter``
+    is scaled by the run's measured mean active fraction: on accelerators
+    the per-iteration bytes (and the roofline service time) shrink with
+    the working set, which is the signal this row exists to track on a
+    CPU container whose width-1 dispatch cost is overhead-dominated."""
+    ds = make_dataset(name, n_override=SIZES[name])
+
+    def runner(**kw):
+        return run_cv(ds, k=k, method="ato", **kw)
+
+    on_kw = dict(shrink_every=SHRINK_EVERY_BENCH)
+    runner()                                        # warm the jit caches
+    off = min((runner() for _ in range(reps)),
+              key=lambda r: r.total_solve_time)
+    runner(**on_kw)                                 # warm the cap programs
+    on = min((runner(**on_kw) for _ in range(reps)),
+             key=lambda r: r.total_solve_time)
+    accs = lambda r: sorted((f.fold, f.acc_correct) for f in r.folds)
+    assert accs(on) == accs(off), \
+        f"shrinking changed fold accuracies on {name}"
+    handoff_kw = dict(on_kw, shrink_on_seed=False)
+    runner(**handoff_kw)
+    no_handoff = min((runner(**handoff_kw) for _ in range(reps)),
+                     key=lambda r: r.total_solve_time)
+
+    frac = (on.occupancy or {}).get("mean_active_frac", 1.0)
+    row = on.row()
+    row.update({
+        "method": "ato_shrink",
+        "us_per_iteration": round(
+            1e6 * on.total_solve_time / max(on.total_iterations, 1), 2),
+        "solve_s_noshrink": round(off.total_solve_time, 4),
+        "shrink_speedup": round(
+            off.total_solve_time / max(on.total_solve_time, 1e-9), 3),
+        "solve_s_no_handoff": round(no_handoff.total_solve_time, 4),
+        "hbm_per_iter": _hbm_iter_estimate(on.n, ds.X.shape[1],
+                                           active_frac=frac)})
+    if on.occupancy is not None:
+        row["occupancy"] = on.occupancy
+    return row
 
 
 def _ato_bucketed_row(name: str, k: int, reps: int) -> dict:
@@ -284,6 +356,7 @@ def run(k: int = 10, quick: bool = False, reps: int = 3):
                 row["hbm_per_iter"] = _hbm_iter_estimate(rep.n,
                                                          ds.X.shape[1])
             rows.append(row)
+        rows.append(_shrink_row(name, k, reps))
         rows.append(_ato_bucketed_row(name, k, reps))
         rows.extend(_grid_rows(name, reps))
     emit(f"table1_k{k}", rows)

@@ -11,11 +11,21 @@ answers the *feasibility and shape* questions validation doesn't:
   on the reachability relation — any antichain can be simultaneously
   live under some retirement schedule, and no comparable pair can);
   ``scheduler.possible_widths`` maps that peak through the pool's width
-  buckets and ``max_width`` cap, and each (program kind, width, n, dtype,
-  wss) tuple is one jit cache entry — deduplicated globally, because the
-  jit cache is global (same-shaped sources share compiles; this is why
-  ``occupancy["programs"]`` overcounts). ``recompile-storm`` warns when
-  the count exceeds the threshold.
+  buckets and ``max_width`` cap, and each (program kind, width, cap, n,
+  dtype, wss) tuple is one jit cache entry — deduplicated globally,
+  because the jit cache is global (same-shaped sources share compiles;
+  this is why ``occupancy["programs"]`` overcounts). Shrink-enabled plans
+  (``plan.shrink_every``) additionally enumerate ``shrink.possible_caps``
+  compact capacities per width — a shrunk lane runs the same chunk
+  programs at its cap's shape, so every (width, cap) pair is one more
+  potential compile; ``cap == n`` marks the unshrunk program. CAN-PRODUCE
+  semantics as for widths: a run realizes a cap program only if some lane
+  actually shrinks into that bucket (plans needing exact counts declare
+  ``shrink_caps``). Known aliasing limit: a compact program at cap c and
+  an unshrunk program over a DIFFERENT source with n == c share one jit
+  entry — the enumeration counts them separately, mirroring the
+  same-shape overcount already documented for widths.
+  ``recompile-storm`` warns when the count exceeds the threshold.
 * **SourceCache feasibility** — the budget contract: pinned (dense)
   sources are always resident and every managed source must fit on top
   of them (``cache_bytes``); a plan whose largest declared source cannot
@@ -44,6 +54,7 @@ import numpy as np
 
 from repro.analysis.findings import Report
 from repro.svm import cost_model
+from repro.svm import shrink as shrink_mod
 from repro.svm.scheduler import possible_widths
 from repro.svm.sources import _source_nbytes, is_factory
 
@@ -60,9 +71,9 @@ ANTICHAIN_LIMIT = 512
 class PlanAnalysis:
     """The analyzer's answer: distinct program shapes, per-source width
     profile, budget accounting, and the findings report."""
-    programs: list[tuple]      # sorted distinct (kind, program, w, n, dtype, wss)
+    programs: list[tuple]      # sorted distinct (program, kind, w, cap, n, dtype, wss)
     program_count: int
-    per_source: dict           # key -> {kind, n, dtype, peak_width, widths}
+    per_source: dict           # key -> {kind, n, dtype, peak_width, widths, caps}
     max_width: int             # effective cap the enumeration used
     pinned_bytes: int
     peak_managed_bytes: int    # largest single managed source
@@ -177,6 +188,13 @@ def analyze_plan(plan, *, checkpoint=None, backend=None,
     kinds = {cost_model.source_kind(s) for s in plan.sources.values()}
     max_width = plan.max_width if plan.max_width is not None \
         else cost_model.pick_max_width(backend, kinds=kinds)
+    # resolve the shrink knob EXACTLY as the pool does ("auto" goes through
+    # the same cost-model verdict), so prediction tracks execution
+    shrink_every = getattr(plan, "shrink_every", 0)
+    if shrink_every == "auto":
+        shrink_every = shrink_mod.DEFAULT_SHRINK_EVERY \
+            if cost_model.pick_shrink(backend, kinds=kinds) else 0
+    shrink_every = int(shrink_every)
 
     # ---- compile-shape enumeration --------------------------------------
     solved = [s for s in plan.lanes if s.result is None]
@@ -197,12 +215,20 @@ def analyze_plan(plan, *, checkpoint=None, backend=None,
         else:
             peak, exact = _max_antichain(lanes, prereqs), True
         widths = possible_widths(peak, plan.lane_quantum, max_width)
+        caps = shrink_mod.possible_caps(
+            n, getattr(plan, "shrink_quantum", 128),
+            getattr(plan, "shrink_caps", None)) if shrink_every else ()
         for w in widths:
-            programs.add(("single" if w == 1 else "batched",
-                          kind, w, n, dtype, plan.wss))
+            program = "single" if w == 1 else "batched"
+            # cap == n marks the unshrunk program; each smaller cap is the
+            # same chunk program traced at the compact shape
+            programs.add((program, kind, w, n, n, dtype, plan.wss))
+            for c in caps:
+                programs.add((program, kind, w, int(c), n, dtype, plan.wss))
         per_source[key] = {"kind": kind, "n": n, "dtype": dtype,
                            "lanes": len(lanes), "peak_width": peak,
-                           "peak_exact": exact, "widths": list(widths)}
+                           "peak_exact": exact, "widths": list(widths),
+                           "caps": [int(c) for c in caps]}
 
     if len(programs) > storm_threshold:
         report.add("recompile-storm", "<plan>", "programs",

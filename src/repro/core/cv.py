@@ -84,8 +84,9 @@ class CVReport:
     n: int
     kernel_time: float
     folds: list[FoldStat]
-    #: lane-pool width stats (mean/peak live width, program count) when the
-    #: run used the repacked schedule; None for sequential/plain-batched
+    #: lane-pool width stats (mean/peak live width, program count; with
+    #: shrinking, the shrink-chunk count and mean active fraction) from the
+    #: run's pool; None for the plain-batched schedule, which bypasses it
     occupancy: dict | None = None
 
     @property
@@ -174,7 +175,9 @@ def run_cv(ds: SVMDataset, k: int = 10, method: str = "sir",
            checkpoint_manager=None, straggler_policy: str = "strict",
            unavailable_folds: frozenset[int] = frozenset(),
            kernel_backend: str = "jnp", chunk_iters: int | None = None,
-           checkpoint_every: int = 1) -> CVReport:
+           checkpoint_every: int = 1, shrink_every: int | str = 0,
+           shrink_quantum: int = 128, shrink_caps=None,
+           shrink_on_seed: bool = True) -> CVReport:
     """Run alpha-seeded k-fold CV. ``unavailable_folds`` simulates stragglers/
     failures: those folds' results are not used as seeds (best_available
     policy then falls back to the nearest earlier completed fold).
@@ -190,8 +193,22 @@ def run_cv(ds: SVMDataset, k: int = 10, method: str = "sir",
     the paper's sequential protocol — and the mid-fold checkpoint cadence
     that assumes one in-flight fold — is preserved even for independent
     cold folds; the concurrent schedules live in ``run_cv_batched`` and
-    ``run_grid``)."""
+    ``run_grid``).
+
+    ``shrink_every`` enables active-set shrinking inside each fold's solve
+    (DESIGN.md §Shrinking); 0 (default) keeps every iterate bit-identical
+    to today. Incompatible with mid-fold chunk checkpointing: run_cv's
+    legacy mid records carry only (alpha, f, n_iter), not the shrink
+    ledger, so a resume could not re-enter the compact subproblem —
+    study-keyed drivers (``run_cv_batched``, ``run_grid``) checkpoint the
+    ledger and support both together."""
     seeding.SEEDERS[method]   # validate the method name up front
+    if shrink_every and checkpoint_manager is not None \
+            and chunk_iters is not None:
+        raise ValueError(
+            "run_cv mid-fold checkpoints do not record the shrink ledger; "
+            "use shrink_every=0 here, drop chunk_iters, or switch to a "
+            "study-keyed driver (run_cv_batched / run_grid)")
     X = jnp.asarray(ds.X)
     y = jnp.asarray(ds.y, jnp.float64)
 
@@ -284,7 +301,9 @@ def run_cv(ds: SVMDataset, k: int = 10, method: str = "sir",
     # ---- declare the fold chain as a plan ----
     plan = Plan(sources={"cv": DenseKernel(K)}, y=y, tol=tol,
                 chunk_iters=chunk_iters if chunk_iters is not None
-                else max_iter)
+                else max_iter,
+                shrink_every=shrink_every, shrink_quantum=shrink_quantum,
+                shrink_caps=shrink_caps, shrink_on_seed=shrink_on_seed)
     for g in sorted(results):
         plan.lane(g, result=results[g])
 
@@ -383,7 +402,8 @@ def run_cv(ds: SVMDataset, k: int = 10, method: str = "sir",
     if checkpoint_manager is not None:
         checkpoint_manager.wait()
     return CVReport(dataset=ds.name, method=method, k=k, n=n,
-                    kernel_time=kernel_time, folds=folds)
+                    kernel_time=kernel_time, folds=folds,
+                    occupancy=sres.occupancy)
 
 
 def run_cv_batched(ds: SVMDataset, k: int = 10, tol: float = 1e-3,
@@ -392,7 +412,9 @@ def run_cv_batched(ds: SVMDataset, k: int = 10, tol: float = 1e-3,
                    schedule: str = "repacked", lane_quantum: int = 4,
                    max_width: int | None = None,
                    source_backend: str = "dense", checkpoint_manager=None,
-                   checkpoint_every: int = 1) -> CVReport:
+                   checkpoint_every: int = 1, shrink_every: int | str = 0,
+                   shrink_quantum: int = 128, shrink_caps=None,
+                   shrink_on_seed: bool = True) -> CVReport:
     """Cold k-fold CV with all folds solved concurrently: independent
     solves are a batch, not a loop.
 
@@ -441,6 +463,10 @@ def run_cv_batched(ds: SVMDataset, k: int = 10, tol: float = 1e-3,
         raise ValueError("source_backend='pallas_rbf' requires the repacked "
                          "schedule: the streaming source runs through the "
                          "lane pool, not engine.solve_batched on a matrix")
+    if shrink_every and schedule != "repacked":
+        raise ValueError("shrink_every requires the repacked schedule: "
+                         "shrinking is a lane-pool transformation, not an "
+                         "engine.solve_batched feature")
     X = jnp.asarray(ds.X)
     y = jnp.asarray(ds.y, jnp.float64)
 
@@ -488,7 +514,9 @@ def run_cv_batched(ds: SVMDataset, k: int = 10, tol: float = 1e-3,
     plan = Plan(sources={"cv": source}, y=y, tol=tol,
                 wss="1" if source_backend == "pallas_rbf" else "2",
                 chunk_iters=chunk_iters, lane_quantum=lane_quantum,
-                max_width=max_width)
+                max_width=max_width,
+                shrink_every=shrink_every, shrink_quantum=shrink_quantum,
+                shrink_caps=shrink_caps, shrink_on_seed=shrink_on_seed)
     zeros = jnp.zeros(n, source.dtype)
     for h in range(k):
         plan.lane(h, train_mask=masks[h], C=ds.C, alpha0=zeros, f0=-y,

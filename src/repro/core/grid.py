@@ -185,7 +185,9 @@ def grid_plans(ds: SVMDataset, Cs, gammas, k: int = 10,
                kernel_backend: str = "jnp", lane_quantum: int = 4,
                max_width: int | None = None, pool: str = "cross_gamma",
                max_resident: int = 0, cache_bytes: int = 0,
-               source_backend: str = "dense") -> list:
+               source_backend: str = "dense", shrink_every: int | str = 0,
+               shrink_quantum: int = 128, shrink_caps=None,
+               shrink_on_seed: bool = True) -> list:
     """The exact ``Plan``(s) ``run_grid`` executes for these arguments —
     one multi-source plan for ``pool="cross_gamma"``, one single-source
     plan per gamma for ``pool="per_gamma"`` — built but not run. This is
@@ -219,7 +221,9 @@ def grid_plans(ds: SVMDataset, Cs, gammas, k: int = 10,
                     wss="1" if source_backend == "pallas_rbf" else "2",
                     chunk_iters=chunk_iters, lane_quantum=lane_quantum,
                     max_width=max_width, max_resident=max_resident,
-                    cache_bytes=cache_bytes, source_backend=source_backend)
+                    cache_bytes=cache_bytes, source_backend=source_backend,
+                    shrink_every=shrink_every, shrink_quantum=shrink_quantum,
+                    shrink_caps=shrink_caps, shrink_on_seed=shrink_on_seed)
         for gi in keys:
             _row_lanes(plan, gi, Cs, masks, transitions, method,
                        seed_across_C, max_iter, zeros, y, chunks)
@@ -238,7 +242,9 @@ def run_grid(ds: SVMDataset, Cs, gammas, k: int = 10, method: str = "sir",
              max_resident: int = 0, cache_bytes: int = 0,
              source_backend: str = "dense",
              checkpoint_manager=None,
-             checkpoint_every: int = 1) -> GridReport:
+             checkpoint_every: int = 1, shrink_every: int | str = 0,
+             shrink_quantum: int = 128, shrink_caps=None,
+             shrink_on_seed: bool = True) -> GridReport:
     """Cross-validate every (C, gamma) cell; returns per-cell accuracy and
     iteration counts (``GridReport.best()`` picks the winner).
 
@@ -272,6 +278,14 @@ def run_grid(ds: SVMDataset, Cs, gammas, k: int = 10, method: str = "sir",
     ever touches an n² kernel (peak resident bytes track X, not n²), WSS-1
     selection is forced, and evaluations run off row slabs. Requires
     ``method="cold"`` — the fold-transition seeders slab-index a dense K.
+
+    ``shrink_every`` (iterations per heuristic evaluation, or ``"auto"``
+    for the cost-model verdict) turns on bucketed active-set shrinking in
+    every cell's solve (DESIGN.md §Shrinking): bound-locked variables are
+    compacted out and the chunk programs run at bucketed capacities. The
+    full-set optimality contract is preserved — per-cell accuracies and
+    SV sets match the unshrunk grid; 0 (default) keeps every iterate
+    bit-identical to today.
     """
     _check_grid_args(pool, source_backend, method)
     if checkpoint_manager is not None and pool != "cross_gamma":
@@ -293,7 +307,11 @@ def run_grid(ds: SVMDataset, Cs, gammas, k: int = 10, method: str = "sir",
                        lane_quantum=lane_quantum, max_width=max_width,
                        pool=pool, max_resident=max_resident,
                        cache_bytes=cache_bytes,
-                       source_backend=source_backend)
+                       source_backend=source_backend,
+                       shrink_every=shrink_every,
+                       shrink_quantum=shrink_quantum,
+                       shrink_caps=shrink_caps,
+                       shrink_on_seed=shrink_on_seed)
 
     if pool == "cross_gamma":
         checkpoint = None
@@ -303,7 +321,8 @@ def run_grid(ds: SVMDataset, Cs, gammas, k: int = 10, method: str = "sir",
                 meta={"bench": "grid", "dataset": ds.name, "method": method,
                       "k": k, "seed": seed, "tol": tol, "max_iter": max_iter,
                       "Cs": Cs, "gammas": gammas,
-                      "seed_across_C": seed_across_C})
+                      "seed_across_C": seed_across_C,
+                      "shrink_every": shrink_every})
         study_results = [run_plan(plans[0], checkpoint=checkpoint)]
         occupancy = study_results[0].occupancy
     else:

@@ -577,6 +577,16 @@ def top_seed_loo(K, y, C, alpha, t: jnp.ndarray):
 SEEDERS = {"cold": cold_seed, "ato": ato_seed, "ato_ref": ato_seed_ref,
            "mir": mir_seed, "sir": sir_seed}
 
+# Seeding -> shrinking handoff (DESIGN.md §Shrinking): a seeded start is
+# not just an alpha0 — it implies an initial ACTIVE-SET estimate. Rows the
+# seeder left bound-locked against the seeded (b_up, b_low) can start
+# shrunk instead of waiting shrink_every iterations to be discovered; the
+# pool evaluates this at admission (``shrink_on_seed``) on every transform's
+# output through the same heuristic the solver uses mid-run. Re-exported
+# here so seeding-layer callers can inspect the mask a transform implies
+# without importing the solver-side module.
+from repro.svm.shrink import seed_active_mask  # noqa: E402,F401
+
 
 # --------------------------------------------------------------------------
 # named seed transforms — the Study API's admission vocabulary

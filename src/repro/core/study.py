@@ -49,6 +49,7 @@ surfacing as a drain-time RuntimeError hours into a large study.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Any
 
@@ -57,6 +58,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import seeding
+from repro.svm import shrink as shrink_mod
 from repro.svm.engine import EngineState, finalize
 from repro.svm.scheduler import LanePool
 from repro.svm.sources import KernelSpec, is_factory
@@ -123,6 +125,22 @@ class Plan:
     #: — nbytes = X bytes, fused, requires ``wss="1"``), so one knob flips
     #: a whole plan between n²-resident and row-streaming execution
     source_backend: str = "dense"
+    #: active-set shrinking (``svm/shrink.py``): 0 = off (bit-identical to
+    #: the pre-shrinking pool), an int = heuristic period in iterations,
+    #: ``"auto"`` = backend-gated by the measured cost model
+    #: (``cost_model.pick_shrink``). ``shrink_quantum`` buckets compact
+    #: capacities (``shrink_caps`` declares an explicit ladder instead —
+    #: what exact-program-count CI cells use); ``shrink_on_seed`` applies
+    #: the seeding->shrinking handoff at admission
+    shrink_every: int | str = 0
+    shrink_quantum: int = 128
+    shrink_caps: Any = None
+    shrink_on_seed: bool = True
+    #: support-vector-only evaluation: gather ``alpha > 0`` rows (the
+    #: fixed-shape nonzero idiom at a ``shrink.bucket_cap`` capacity)
+    #: before the eval matvec instead of multiplying through zero rows;
+    #: dense-K groups only, falls back to the full path otherwise
+    sv_eval: bool = False
 
     def lane(self, id, **kwargs) -> LaneSpec:
         spec = LaneSpec(id=id, **kwargs)
@@ -199,6 +217,31 @@ def _eval_lanes_jit(K, y, test_idx, train_masks, Cs, res):
     def one(ti, mask, C, r):
         b = bias_from_solution(r, y, mask, C)
         pred = predict(K[ti], y, r.alpha, b)
+        return jnp.sum(pred == y[ti])
+
+    return jax.vmap(one)(test_idx, train_masks, Cs, res)
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def _eval_lanes_sv_jit(K, y, test_idx, train_masks, Cs, res, cap):
+    """Support-vector-only variant of ``_eval_lanes_jit``: each lane
+    gathers its ``alpha > 0`` rows (the same fixed-shape
+    ``nonzero(size=cap, fill_value=n)`` compact-gather idiom the
+    shrinking scheduler uses — pad columns clamp to the last row and are
+    zero-weighted) and the decision matvec contracts over ``cap`` support
+    vectors instead of all n training rows. Same ``>= 0`` prediction
+    convention as ``svc.predict``; summation order over the support set
+    differs from the full matvec, so this path carries the usual allclose
+    guarantee, not bit parity — which is why it is opt-in
+    (``Plan.sv_eval``)."""
+    def one(ti, mask, C, r):
+        b = bias_from_solution(r, y, mask, C)
+        sv = r.alpha > 0
+        svi = jnp.nonzero(sv, size=cap, fill_value=y.shape[0])[0]
+        coef = jnp.where(jnp.arange(cap) < jnp.sum(sv),
+                         r.alpha[svi] * y[svi], 0.0)
+        dec = K[ti][:, svi] @ coef + b
+        pred = jnp.where(dec >= 0, 1, -1)
         return jnp.sum(pred == y[ti])
 
     return jax.vmap(one)(test_idx, train_masks, Cs, res)
@@ -419,9 +462,19 @@ def run_plan(plan: Plan, *, checkpoint: StudyCheckpoint | None = None,
                     f"cannot resume it as {want}; point the manager at a "
                     "fresh directory or delete the stale checkpoints")
             for i, lid in enumerate(extra["lane_ids"]):
+                # the shrink ledger rides along when the snapshotting pool
+                # had shrinking on (absent in legacy/shrink-off snapshots):
+                # a mid-shrink lane re-enters its exact compact bucket
+                shrink0 = None
+                if "active" in tree:
+                    shrink0 = (
+                        jnp.asarray(tree["active"][i])
+                        if bool(tree["shrunk"][i]) else None,
+                        bool(tree["no_shrink"][i]),
+                        int(tree["unshrinks"][i]))
                 restored[_freeze(lid)] = (
                     jnp.asarray(tree["alpha"][i]), jnp.asarray(tree["f"][i]),
-                    int(tree["n_iter"][i]), bool(tree["done"][i]))
+                    int(tree["n_iter"][i]), bool(tree["done"][i]), shrink0)
 
     on_snapshot = None
     if checkpoint is not None:
@@ -443,7 +496,11 @@ def run_plan(plan: Plan, *, checkpoint: StudyCheckpoint | None = None,
                     cache_bytes=plan.cache_bytes,
                     on_snapshot=on_snapshot,
                     snapshot_every=checkpoint.every if checkpoint else 1,
-                    on_result=on_result, on_lane_chunk=on_lane_chunk)
+                    on_result=on_result, on_lane_chunk=on_lane_chunk,
+                    shrink_every=plan.shrink_every,
+                    shrink_quantum=plan.shrink_quantum,
+                    shrink_caps=plan.shrink_caps,
+                    shrink_on_seed=plan.shrink_on_seed)
 
     pre_done: set = set()
     for spec in plan.lanes:
@@ -452,7 +509,7 @@ def run_plan(plan: Plan, *, checkpoint: StudyCheckpoint | None = None,
             pool.add_result(spec.id, spec.result)
             pre_done.add(spec.id)
         elif spec.id in restored:
-            alpha, f, n_it, done = restored[spec.id]
+            alpha, f, n_it, done, shrink0 = restored[spec.id]
             if done:
                 # a retired lane: re-finalize its snapshot state (optimality
                 # is a pure function of alpha/f, so converged/b_up/b_low
@@ -466,7 +523,8 @@ def run_plan(plan: Plan, *, checkpoint: StudyCheckpoint | None = None,
                 # mid-flight at the crash: it was already admitted, so its
                 # plan-declared edges are history — resume the state as-is
                 pool.add(spec.id, spec.train_mask, spec.C, alpha, f,
-                         source=key, n_iter0=n_it, max_iter=spec.max_iter)
+                         source=key, n_iter0=n_it, max_iter=spec.max_iter,
+                         shrink0=shrink0)
         elif spec.dep is not None:
             pool.add(spec.id, spec.train_mask, spec.C, source=key,
                      dep=spec.dep,
@@ -531,8 +589,25 @@ def run_plan(plan: Plan, *, checkpoint: StudyCheckpoint | None = None,
             correct = jax.device_get(
                 _eval_lanes_rows_jit(K_rows, y, test_idx, masks, Cs, res))
         else:
-            correct = jax.device_get(
-                _eval_lanes_jit(K, y, test_idx, masks, Cs, res))
+            cap_sv = 0
+            if plan.sv_eval:
+                # shared compact-gather bucketing: one cap per group (the
+                # widest lane's SV count, rounded up) keeps this at one
+                # compiled program per (source, t_sz, cap) instead of one
+                # per lane; a cap that wouldn't shrink the contraction
+                # falls back to the full path
+                n_rows = int(np.shape(y)[0])
+                cap_sv = shrink_mod.bucket_cap(
+                    int(np.max(jax.device_get(
+                        jnp.sum(res.alpha > 0, axis=1)))), 128)
+                if cap_sv >= n_rows:
+                    cap_sv = 0
+            if cap_sv:
+                correct = jax.device_get(_eval_lanes_sv_jit(
+                    K, y, test_idx, masks, Cs, res, cap_sv))
+            else:
+                correct = jax.device_get(
+                    _eval_lanes_jit(K, y, test_idx, masks, Cs, res))
         for ev, c in zip(evs, correct):
             evals[ev.lane] = (int(c), t_sz)
 

@@ -12,6 +12,8 @@ from repro.svm.kernels import rbf_kernel, linear_kernel, kernel_matrix  # noqa: 
 from repro.svm.engine import (  # noqa: E402,F401
     DenseKernel, EngineState, FusedRBF, OnDemandRBF, PallasRBF, ShardedRBF)
 from repro.svm.sources import KernelSpec, SourceCache  # noqa: E402,F401
+from repro.svm.shrink import (  # noqa: E402,F401
+    LaneShrink, bucket_cap, possible_caps, seed_active_mask, solve_shrunk)
 from repro.svm.scheduler import LanePool, LaneScheduler  # noqa: E402,F401
 from repro.svm.smo import (  # noqa: E402,F401
     SMOResult, smo_solve, smo_solve_batched, init_f, dual_objective)

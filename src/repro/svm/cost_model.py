@@ -17,7 +17,9 @@ File schema (``results/cost_model.json``)::
         "<jax backend>": {                 # "cpu", "tpu", ...
           "<source kind>": {               # "dense", "pallas_rbf"
             "max_width": 0 | int,          # 0 = unbounded (full width)
-            "us_per_lane_iter": {"<width>": float, ...}
+            "us_per_lane_iter": {"<width>": float, ...},
+            "shrink": bool,                # smaller-cap programs pay off?
+            "us_per_iter_by_n": {"<n>": float, ...}   # per-cap sweep
           }
         }
       }
@@ -112,3 +114,38 @@ def pick_max_width(backend: str | None = None, kinds=("dense",),
             caps.append(int(entry["max_width"]))
     finite = [c for c in caps if c > 0]
     return min(finite) if finite else 0
+
+
+def fallback_shrink(backend: str | None = None) -> bool:
+    """Pre-measurement shrink verdict: on CPU the engine runs width-1
+    interpret-mode programs whose per-iteration cost is dominated by
+    dispatch overhead, not operand bytes — shrink-induced recompiles (one
+    program per cap bucket) can cost more than the smaller operands save,
+    so CPU defaults off; bandwidth-bound accelerators default on."""
+    backend = backend or jax.default_backend()
+    return backend != "cpu"
+
+
+def pick_shrink(backend: str | None = None, kinds=("dense",),
+                model=None, path=None) -> bool:
+    """Shrink verdict for a pool dispatching the given source kinds
+    (drives ``shrink_every="auto"``).
+
+    Reads the measured ``shrink`` entry per kind (written by the per-cap
+    throughput sweep in ``scripts/measure_cost_model.py``) and combines
+    conservatively: shrinking is enabled only when EVERY kind measured
+    True; a missing file/backend/kind degrades that kind to the fallback
+    verdict — mirroring ``pick_max_width``'s smallest-cap-wins caution.
+    """
+    backend = backend or jax.default_backend()
+    if model is None:
+        model = load(path)
+    per_backend = (model or {}).get("entries", {}).get(backend, {})
+    verdicts = []
+    for kind in set(kinds) or {"dense"}:
+        entry = per_backend.get(kind)
+        if not isinstance(entry, dict) or "shrink" not in entry:
+            verdicts.append(fallback_shrink(backend))
+        else:
+            verdicts.append(bool(entry["shrink"]))
+    return all(verdicts)

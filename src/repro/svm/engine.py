@@ -243,6 +243,22 @@ class DenseKernel:
             return smo_f_update(f, K_i, K_j, delta)
         return f + delta * (K_i - K_j)
 
+    def rows_at(self, idx):
+        """Kernel row slab K[idx, :] — same eval/reconstruction surface as
+        the row-streaming sources, directly indexed."""
+        return self.K[jnp.asarray(idx)]
+
+    def matvec(self, v):
+        """``K @ v`` — the unshrink reconstruction path (`shrink.py`)."""
+        return self.K @ v
+
+    def compact(self, idx):
+        """Active-set gather for the shrinking scheduler: the kernel
+        restricted to rows/columns ``idx`` (pads — index n — clamp to the
+        last row, inert under the compact validity mask)."""
+        idx = jnp.asarray(idx)
+        return DenseKernel(self.K[idx][:, idx], fupdate=self.fupdate)
+
     def constrain(self, v):
         return v
 
@@ -323,6 +339,42 @@ class OnDemandRBF:
 
     def update_f(self, f, K_i, K_j, delta):
         return f + delta * (K_i - K_j)
+
+    def rows_at(self, idx):
+        """Kernel row slab K[idx, :] -> (t, n) — the evaluation path for
+        K-less sources: O(t*n) transient, never n^2 resident."""
+        Xi = self.X[jnp.asarray(idx)]
+        d2 = jnp.maximum(jnp.sum(Xi * Xi, -1)[:, None] + self.sq_norms[None]
+                         - 2.0 * (Xi @ self.X.T), 0.0)
+        return jnp.exp(-self.gamma * d2)
+
+    def matvec(self, v, *, block: int = 2048):
+        """Streaming ``K @ v`` (``init_f`` on seeded lanes, unshrink
+        reconstruction): kernel row blocks are formed and reduced
+        immediately, O(block*n) transient memory."""
+        n, d = self.X.shape
+        pad = (-n) % block
+        Xb = jnp.pad(self.X, ((0, pad), (0, 0))).reshape(-1, block, d)
+        sqb = jnp.pad(self.sq_norms, (0, pad)).reshape(-1, block)
+
+        def one(args):
+            xb, sb = args
+            d2 = jnp.maximum(sb[:, None] + self.sq_norms[None]
+                             - 2.0 * (xb @ self.X.T), 0.0)
+            return jnp.exp(-self.gamma * d2) @ v
+
+        return jax.lax.map(one, (Xb, sqb)).reshape(-1)[:n]
+
+    def compact(self, idx):
+        """Active-set gather for the shrinking scheduler: the same source
+        kind over ``X[idx]`` (so a compact ``PallasRBF`` streams only the
+        active bytes). Pads — index n — clamp to the last row, inert under
+        the compact validity mask. Goes through the pytree so every
+        subclass compacts with its own aux config intact."""
+        children, aux = self.tree_flatten()
+        idx = jnp.asarray(idx)
+        return type(self).tree_unflatten(aux,
+                                         tuple(c[idx] for c in children))
 
     def constrain(self, v):
         return v
@@ -410,30 +462,10 @@ class PallasRBF(OnDemandRBF):
                               gamma=self.gamma, bm=self.bm, bk=self.bk,
                               interpret=self.interpret)
 
-    def rows_at(self, idx):
-        """Kernel row slab K[idx, :] -> (t, n) — the evaluation path for
-        K-less sources: O(t*n) transient, never n^2 resident."""
-        Xi = self.X[jnp.asarray(idx)]
-        d2 = jnp.maximum(jnp.sum(Xi * Xi, -1)[:, None] + self.sq_norms[None]
-                         - 2.0 * (Xi @ self.X.T), 0.0)
-        return jnp.exp(-self.gamma * d2)
-
-    def matvec(self, v, *, block: int = 2048):
-        """Streaming ``K @ v`` (for ``init_f`` on seeded lanes): kernel
-        row blocks are formed and reduced immediately, O(block*n)
-        transient memory."""
-        n, d = self.X.shape
-        pad = (-n) % block
-        Xb = jnp.pad(self.X, ((0, pad), (0, 0))).reshape(-1, block, d)
-        sqb = jnp.pad(self.sq_norms, (0, pad)).reshape(-1, block)
-
-        def one(args):
-            xb, sb = args
-            d2 = jnp.maximum(sb[:, None] + self.sq_norms[None]
-                             - 2.0 * (xb @ self.X.T), 0.0)
-            return jnp.exp(-self.gamma * d2) @ v
-
-        return jax.lax.map(one, (Xb, sqb)).reshape(-1)[:n]
+    # rows_at / matvec (the eval-slab and streaming-matvec paths) are
+    # inherited from OnDemandRBF — the expressions are row-streaming
+    # already, and sharing one definition keeps the reconstruction path
+    # bit-identical across the RBF source family.
 
     def tree_flatten(self):
         return (self.X, self.sq_norms), \
@@ -598,6 +630,44 @@ def chunk_batched_jit(source, y, train_masks, Cs, tol, it_caps, states,
     def body(carry):
         s, t = carry
         return jax.vmap(one)(train_masks, Cs, it_caps, s), t + 1
+
+    states, _ = jax.lax.while_loop(cond, body,
+                                   (states, jnp.zeros((), jnp.int32)))
+    return states
+
+
+def stack_sources(sources):
+    """Stack same-kind, same-shape kernel sources along a new leading lane
+    axis (array leaves stack, static aux must agree) — the operand for
+    ``chunk_batched_sources_jit``."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *sources)
+
+
+@functools.partial(jax.jit, static_argnames=("n_iters", "wss"))
+def chunk_batched_sources_jit(sources, ys, train_masks, Cs, tol, it_caps,
+                              states, n_iters, wss):
+    """One chunk over a batch of lanes that each carry their OWN kernel
+    operands: ``sources`` is a stacked source pytree (``stack_sources``,
+    leading axis = lane) and ``ys`` is (b, n). This is the shrinking
+    scheduler's compact-group program — every shrunk lane gathered its own
+    active rows, so even lanes bucketed to the same ``(source, width,
+    cap)`` program differ in operand *values*. vmap maps the source's
+    array leaves (K or X) per lane and closes over the shared static
+    config, so one program serves the whole bucket."""
+    it_caps = jnp.broadcast_to(jnp.asarray(it_caps, states.n_iter.dtype),
+                               states.done.shape)
+
+    def one(src, y, mask, C, cap, state):
+        return _step(src, y, mask, jnp.asarray(C, src.dtype), src.diag(),
+                     tol, cap, wss, state)
+
+    def cond(carry):
+        s, t = carry
+        return jnp.any(~s.done) & (t < n_iters)
+
+    def body(carry):
+        s, t = carry
+        return jax.vmap(one)(sources, ys, train_masks, Cs, it_caps, s), t + 1
 
     states, _ = jax.lax.while_loop(cond, body,
                                    (states, jnp.zeros((), jnp.int32)))

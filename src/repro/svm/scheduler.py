@@ -87,8 +87,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.svm import cost_model
+from repro.svm import shrink as shrink_mod
 from repro.svm.engine import (EngineState, SMOResult, chunk_batched_jit,
-                              chunk_jit, finalize, init_state)
+                              chunk_batched_sources_jit, chunk_jit, finalize,
+                              init_state, stack_sources)
 from repro.svm.sources import SourceCache, is_factory
 
 
@@ -135,6 +137,8 @@ class _Lane:
     served: int = 0                       # chunks dispatched (park fairness)
     seed_s: float = 0.0                   # admission-transform wall time
     solve_s: float = 0.0                  # dispatch wall time attributed here
+    shrink: Any = None                    # shrink.LaneShrink when enabled
+    shrink0: Any = None                   # restored ledger (active, flags)
 
 
 class LanePool:
@@ -162,9 +166,12 @@ class LanePool:
                  max_width: int | None = None,
                  max_resident: int = 0, cache_bytes: int = 0,
                  on_snapshot=None, snapshot_every: int = 1,
-                 on_result=None, on_lane_chunk=None):
+                 on_result=None, on_lane_chunk=None,
+                 shrink_every: int | str = 0, shrink_quantum: int = 128,
+                 shrink_caps=None, shrink_on_seed: bool = True):
         if not isinstance(sources, dict) or not sources:
             raise ValueError("sources must be a non-empty {key: source} dict")
+        kinds = {cost_model.source_kind(s) for s in sources.values()}
         if max_width is None:
             # measured cost model (results/cost_model.json, written by
             # scripts/measure_cost_model.py): per-(backend, source-kind)
@@ -172,9 +179,21 @@ class LanePool:
             # kinds. Falls back to the historical default when unmeasured:
             # CPU's vmapped batch loses at every width > 1, accelerators
             # want full width.
-            max_width = cost_model.pick_max_width(
-                kinds={cost_model.source_kind(s) for s in sources.values()})
+            max_width = cost_model.pick_max_width(kinds=kinds)
         self.max_width = int(max_width)   # 0 = unbounded
+        if shrink_every == "auto":
+            # backend-gated default: shrinking trades smaller per-iteration
+            # operands for extra compiled programs (one per cap bucket) and
+            # host-side lifecycle sync — the cost-model sweep decides
+            # whether smaller-cap programs are actually faster here
+            shrink_every = shrink_mod.DEFAULT_SHRINK_EVERY \
+                if cost_model.pick_shrink(kinds=kinds) else 0
+        self.shrink_every = int(shrink_every)
+        self.shrink_quantum = int(shrink_quantum)
+        self.shrink_caps = tuple(int(c) for c in shrink_caps) \
+            if shrink_caps else None
+        self.shrink_on_seed = bool(shrink_on_seed)
+        self._frac_log: list[float] = []  # (cap or n)/n per lane-dispatch
         self.sources = dict(sources)
         self._ys = {k: (y[k] if isinstance(y, dict) else y)
                     for k in self.sources}
@@ -289,7 +308,7 @@ class LanePool:
 
     def add(self, lane_id, train_mask, C, alpha0=None, f0=None, *,
             source=None, n_iter0: int = 0, max_iter: int = 10_000_000,
-            dep=None, seed_fn=None, after=None) -> None:
+            dep=None, seed_fn=None, after=None, shrink0=None) -> None:
         """Register a lane. Either give its start point (``alpha0``/``f0``,
         optionally ``n_iter0`` when resuming a snapshot) or a dependency
         (``dep`` = another lane id, ``seed_fn`` mapping that lane's
@@ -297,7 +316,13 @@ class LanePool:
         admitted when the dependency retires. ``after`` adds a pure
         ordering edge: the lane (even an explicitly-started one) is held
         until that lane retires — sequential protocols (the paper's fold
-        chain) express their ordering without faking a seed dependency."""
+        chain) express their ordering without faking a seed dependency.
+
+        ``shrink0`` restores a snapshotted shrink ledger:
+        ``(active_mask_or_None, no_shrink, unshrinks)`` — a restored lane
+        re-enters its compact bucket (or its endgame flags) instead of
+        re-running the admission handoff, which is what makes a mid-shrink
+        resume replay the uninterrupted trajectory bit-exactly."""
         if lane_id in self._lanes:
             raise ValueError(f"duplicate lane id {lane_id!r}")
         if (dep is None) == (alpha0 is None):
@@ -310,7 +335,7 @@ class LanePool:
         key = self._source_key(source)
         lane = _Lane(id=lane_id, source=key, train_mask=train_mask, C=C,
                      max_iter=int(max_iter), dep=dep, seed_fn=seed_fn,
-                     after=after)
+                     after=after, shrink0=shrink0)
         if alpha0 is not None:
             if after is None:
                 # cache.meta answers dtype without materializing a factory
@@ -318,10 +343,39 @@ class LanePool:
                 lane.state = init_state(self.cache.meta(key), self._ys[key],
                                         train_mask, alpha0, f0,
                                         n_iter0=n_iter0)
+                self._attach_shrink(lane)
             else:   # held: built at admission, when ``after`` retires
                 lane.alpha0, lane.f0, lane.n_iter0 = alpha0, f0, int(n_iter0)
         self._lanes[lane_id] = lane
         self._order.append(lane_id)
+
+    def _attach_shrink(self, lane: _Lane) -> None:
+        """Build a lane's shrink ledger the moment its state exists (the
+        handoff, like intake, never materializes a kernel). A restored
+        ledger (``shrink0``) takes precedence; otherwise the seeding ->
+        shrinking handoff evaluates the heuristic on the seeded (alpha0,
+        f0) so bound-locked seeded alphas start shrunk."""
+        if not self.shrink_every:
+            return
+        y = self._ys[lane.source]
+        ls = shrink_mod.LaneShrink(int(np.shape(y)[0]),
+                                   every=self.shrink_every,
+                                   quantum=self.shrink_quantum,
+                                   caps=self.shrink_caps)
+        lane.shrink = ls
+        if lane.shrink0 is not None:
+            active, no_shrink, unshrinks = lane.shrink0
+            ls.no_shrink = bool(no_shrink)
+            ls.unshrinks = int(unshrinks)
+            lane.shrink0 = None
+            if active is not None:
+                active = jnp.asarray(active, bool) & \
+                    jnp.asarray(lane.train_mask, bool)
+                ls.mark(active, int(jnp.sum(active)))
+            return
+        if self.shrink_on_seed:
+            shrink_mod.seed_shrink(ls, y, lane.train_mask, lane.C,
+                                   lane.state, tol=self.tol)
 
     def add_result(self, lane_id, result: SMOResult) -> None:
         """Register an already-solved lane (a restored ``done`` snapshot):
@@ -356,6 +410,7 @@ class LanePool:
                 lane.state = init_state(meta, y, lane.train_mask, lane.alpha0,
                                         lane.f0, n_iter0=lane.n_iter0)
                 lane.alpha0 = lane.f0 = None
+                self._attach_shrink(lane)
                 continue
             if lane.dep not in self.results:
                 continue
@@ -371,6 +426,7 @@ class LanePool:
             lane.seed_s += dt
             self.seed_time += dt
             lane.state = init_state(meta, y, lane.train_mask, alpha0, f0)
+            self._attach_shrink(lane)
 
     def _live(self) -> list[_Lane]:
         return [self._lanes[i] for i in self._order
@@ -471,7 +527,13 @@ class LanePool:
                 lane.served += 1
             groups: dict[Any, list[_Lane]] = {}
             for lane in selected:
-                groups.setdefault(lane.source, []).append(lane)
+                # under shrinking, lanes bucket by (source, cap): a shrunk
+                # lane migrates to the smaller-shape compact program of its
+                # cap bucket, and only same-cap lanes can share a stacked
+                # dispatch (their operand shapes match)
+                gkey = (lane.source, lane.shrink.cap) if self.shrink_every \
+                    else lane.source
+                groups.setdefault(gkey, []).append(lane)
             if len(self.sources) > 1:
                 counts: dict[Any, int] = {}
                 for lane in live:
@@ -486,16 +548,26 @@ class LanePool:
             # selection would hand stickiness to the overflow source
             self._sticky = selected[0].source
             dispatched = 0
-            for key, lanes in groups.items():
+            for gkey, lanes in groups.items():
                 width = (1 if len(lanes) == 1
                          else bucket_width(len(lanes), self.lane_quantum))
                 dispatched += width
-                self._programs.add((key, width))
+                if self.shrink_every:
+                    key, cap = gkey
+                    n = int(np.shape(self._ys[key])[0])
+                    self._programs.add((key, width, cap or n))
+                    for lane in lanes:
+                        self._frac_log.append((cap or n) / n)
+                else:
+                    key, cap = gkey, 0
+                    self._programs.add((key, width))
                 # dispatch may materialize the group's kernel through the
                 # cache; that delta is kernel time, not solve time
                 t0 = time.perf_counter()
                 k0 = self.cache.kernel_time
-                if len(lanes) == 1:
+                if self.shrink_every:
+                    self._step_shrink(key, cap, lanes)
+                elif len(lanes) == 1:
                     self._step_single(lanes[0])
                 else:
                     self._step_batched(key, lanes)
@@ -555,6 +627,91 @@ class LanePool:
                 if flag:
                     self._retire(lane)
 
+    def _step_shrink(self, key, cap: int, lanes: list[_Lane]) -> None:
+        """One chunk over a shrink-enabled ``(source, cap)`` group, then
+        the per-lane shrink lifecycle. ``cap == 0`` lanes run the normal
+        full-set programs with their iteration cap pinned to the next
+        heuristic boundary; shrunk lanes run the SAME chunk programs over
+        their gathered compact operands at the relaxed ``10*tol`` (lanes
+        of one bucket each carry their own gathered rows, so width > 1
+        dispatches through ``chunk_batched_sources_jit``). States are
+        packed fresh and written back every chunk — shrunk groups change
+        membership as lanes migrate between cap buckets, so a packed-batch
+        cache would thrash; the full-state mirror (``lane.state``) is kept
+        fresh by ``shrink.advance``'s scatter, which is what snapshots and
+        ``on_lane_chunk`` observe."""
+        src, y = self.resolve_source(key), self._ys[key]
+        for lane in lanes:
+            if lane.shrink.cap and lane.shrink.idx is None:
+                lane.shrink.enter(src, y, lane.state)
+        if cap == 0:
+            it_caps = [ln.shrink.it_cap(int(ln.state.n_iter), ln.max_iter)
+                       for ln in lanes]
+            if len(lanes) == 1:
+                ln = lanes[0]
+                ln.state = chunk_jit(src, y, ln.train_mask, ln.C, self.tol,
+                                     jnp.asarray(it_caps[0], jnp.int64),
+                                     ln.state, n_iters=self.chunk_iters,
+                                     wss=self.wss)
+            else:
+                width = bucket_width(len(lanes), self.lane_quantum)
+                states = [ln.state for ln in lanes]
+                masks = [ln.train_mask for ln in lanes]
+                Cs = [ln.C for ln in lanes]
+                for _ in range(width - len(lanes)):
+                    states.append(lanes[0].state._replace(
+                        done=jnp.ones((), bool)))
+                    masks.append(lanes[0].train_mask)
+                    Cs.append(lanes[0].C)
+                    it_caps.append(0)
+                out = chunk_batched_jit(
+                    src, y, jnp.stack(masks), jnp.asarray(Cs, src.dtype),
+                    self.tol, jnp.asarray(it_caps, jnp.int64),
+                    EngineState.stack(states), n_iters=self.chunk_iters,
+                    wss=self.wss)
+                for i, ln in enumerate(lanes):
+                    ln.state = out.lane(i)
+        else:
+            stol = 10.0 * self.tol
+            it_caps = [ln.shrink.it_cap(int(ln.shrink.cstate.n_iter),
+                                        ln.max_iter) for ln in lanes]
+            if len(lanes) == 1:
+                ls = lanes[0].shrink
+                ls.cstate = chunk_jit(ls.csrc, ls.cy, ls.cmask, lanes[0].C,
+                                      stol, jnp.asarray(it_caps[0], jnp.int64),
+                                      ls.cstate, n_iters=self.chunk_iters,
+                                      wss=self.wss)
+            else:
+                width = bucket_width(len(lanes), self.lane_quantum)
+                srcs = [ln.shrink.csrc for ln in lanes]
+                cys = [ln.shrink.cy for ln in lanes]
+                cmasks = [ln.shrink.cmask for ln in lanes]
+                cstates = [ln.shrink.cstate for ln in lanes]
+                Cs = [ln.C for ln in lanes]
+                for _ in range(width - len(lanes)):
+                    pad = lanes[0].shrink
+                    srcs.append(pad.csrc)
+                    cys.append(pad.cy)
+                    cmasks.append(pad.cmask)
+                    cstates.append(pad.cstate._replace(
+                        done=jnp.ones((), bool)))
+                    Cs.append(lanes[0].C)
+                    it_caps.append(0)
+                out = chunk_batched_sources_jit(
+                    stack_sources(srcs), jnp.stack(cys), jnp.stack(cmasks),
+                    jnp.asarray(Cs, src.dtype), stol,
+                    jnp.asarray(it_caps, jnp.int64),
+                    EngineState.stack(cstates), n_iters=self.chunk_iters,
+                    wss=self.wss)
+                for i, ln in enumerate(lanes):
+                    ln.shrink.cstate = out.lane(i)
+        for ln in lanes:
+            ln.state, verdict = shrink_mod.advance(
+                ln.shrink, src, y, ln.train_mask, ln.C, ln.state,
+                tol=self.tol, max_iter=ln.max_iter)
+            if verdict == "retire":
+                self._retire(ln)
+
     # ---------------------------------------------------------- observability
 
     def _lane_state(self, lane: _Lane) -> EngineState:
@@ -570,8 +727,18 @@ class LanePool:
         checkpoint restores by original lane id across any repack/resume
         boundary. ``tree`` = {alpha (L, n), f (L, n), n_iter (L,),
         done (L,)}; pending (unadmitted) lanes are omitted — their seeds
-        re-derive from the retired results in the snapshot."""
+        re-derive from the retired results in the snapshot.
+
+        Shrink-enabled pools additionally persist the per-lane shrink
+        ledger — ``active`` (L, n) masks, ``shrunk``/``no_shrink`` (L,)
+        flags and the ``unshrinks`` (L,) counter — so a mid-shrink resume
+        re-enters the exact compact bucket (under ANY schedule shape or
+        cap quantum) instead of re-deriving decisions; a live shrunk
+        lane's mirror has fresh alpha everywhere and fresh f on active
+        rows, which is exactly what re-gathering needs. ``shrink_every=0``
+        pools emit the historical four-key tree byte-identically."""
         ids, alphas, fs, iters, dones = [], [], [], [], []
+        actives, shrunks, noshrinks, unshrinks = [], [], [], []
         for lane_id in self._order:
             lane = self._lanes[lane_id]
             if lane.result is not None:
@@ -585,8 +752,22 @@ class LanePool:
             fs.append(src.f)
             iters.append(src.n_iter)
             dones.append(done)
+            if self.shrink_every:
+                ls = lane.shrink if lane.result is None else None
+                if ls is not None and ls.shrunk:
+                    actives.append(ls.active)
+                else:
+                    actives.append(jnp.ones(src.alpha.shape[0], bool))
+                shrunks.append(bool(ls is not None and ls.shrunk))
+                noshrinks.append(bool(ls is not None and ls.no_shrink))
+                unshrinks.append(0 if ls is None else int(ls.unshrinks))
         tree = {"alpha": jnp.stack(alphas), "f": jnp.stack(fs),
                 "n_iter": jnp.stack(iters), "done": jnp.asarray(dones)}
+        if self.shrink_every:
+            tree["active"] = jnp.stack(actives)
+            tree["shrunk"] = jnp.asarray(shrunks)
+            tree["no_shrink"] = jnp.asarray(noshrinks)
+            tree["unshrinks"] = jnp.asarray(unshrinks, jnp.int32)
         return ids, tree
 
     @property
@@ -611,6 +792,13 @@ class LanePool:
                "mean_packed_width": round(sum(packed) / len(packed), 3),
                "peak_width": max(packed),
                "programs": len(self._programs)}
+        if self.shrink_every:
+            # HBM-roofline hook: a lane-dispatch at cap streams cap/n of
+            # the full operand bytes, so this mean scales ``hbm_per_iter``
+            # (benchmarks/table1_kfold.py reads it)
+            occ["shrink_lane_chunks"] = len(self._frac_log)
+            occ["mean_active_frac"] = round(
+                sum(self._frac_log) / max(len(self._frac_log), 1), 4)
         if len(self.sources) > 1:
             occ["per_source"] = {
                 str(key): {"chunks": n,

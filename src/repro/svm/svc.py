@@ -58,13 +58,18 @@ class SVC:
 
     def __init__(self, C: float = 1.0, gamma: float | str = "scale",
                  kind: str = "rbf", tol: float = 1e-3,
-                 max_iter: int = 10_000_000, kernel_backend: str = "jnp"):
+                 max_iter: int = 10_000_000, kernel_backend: str = "jnp",
+                 shrink_every: int | str = 0, shrink_quantum: int = 128):
         self.C = float(C)
         self.gamma = gamma
         self.kind = kind
         self.tol = float(tol)
         self.max_iter = int(max_iter)
         self.kernel_backend = kernel_backend
+        # active-set shrinking knobs (DESIGN.md §Shrinking): 0 = off
+        # (bit-identical solve), "auto" = cost-model verdict
+        self.shrink_every = shrink_every
+        self.shrink_quantum = int(shrink_quantum)
 
     def _resolve_gamma(self, X) -> float:
         if self.gamma == "scale":   # sklearn convention: 1 / (d * Var[X])
@@ -90,7 +95,9 @@ class SVC:
         K = kernel_matrix(X, X, kind=self.kind, gamma=self.gamma_,
                           backend=self.kernel_backend)
         from repro.svm.engine import DenseKernel
-        plan = Plan(sources={"fit": DenseKernel(K)}, y=y_pm, tol=self.tol)
+        plan = Plan(sources={"fit": DenseKernel(K)}, y=y_pm, tol=self.tol,
+                    shrink_every=self.shrink_every,
+                    shrink_quantum=self.shrink_quantum)
         plan.lane("fit", train_mask=jnp.ones(n, bool), C=self.C,
                   alpha0=jnp.zeros(n, K.dtype), f0=-y_pm,
                   max_iter=self.max_iter)
@@ -137,5 +144,7 @@ class SVC:
         ds = SVMDataset(name="svc", X=X, y=y_pm, C=self.C,
                         gamma=self._resolve_gamma(jnp.asarray(X)))
         kw.setdefault("kernel_backend", self.kernel_backend)
+        kw.setdefault("shrink_every", self.shrink_every)
+        kw.setdefault("shrink_quantum", self.shrink_quantum)
         return run_cv(ds, k=k, method=method, tol=self.tol,
                       max_iter=self.max_iter, **kw)

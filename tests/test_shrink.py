@@ -1,0 +1,397 @@
+"""Active-set shrinking (DESIGN.md §Shrinking): full-set optimality
+contract across the suite, shrink-off bit-parity, schedule/quantum
+determinism, pool parity at every width, mid-shrink kill/resume under a
+different schedule shape AND cap bucket, SV-only evaluation, cap-aware
+static-analysis calibration, and the cost-model gate."""
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.core.cv import _fold_masks, run_cv
+from repro.core.grid import grid_plans, run_grid
+from repro.core.study import Plan, StudyCheckpoint, run_plan
+from repro.analysis.plan_check import analyze_plan
+from repro.data.svm_suite import kfold_chunks, make_dataset
+from repro.svm import (DenseKernel, LanePool, PallasRBF, cost_model,
+                       kernel_matrix, shrink, smo_solve)
+from repro.svm.engine import (chunk_batched_jit, chunk_batched_sources_jit,
+                              chunk_jit, optimality, solve)
+from repro.svm.smo import dual_objective
+
+SUITE = ("adult", "heart", "madelon", "mnist", "webdata")
+
+
+def _setup(name, n=120, k=3):
+    ds = make_dataset(name, n_override=n)
+    X = jnp.asarray(ds.X)
+    y = jnp.asarray(ds.y, jnp.float64)
+    chunks = kfold_chunks(n, k, seed=0)
+    nn = chunks.size
+    K = kernel_matrix(X[:nn], X[:nn], gamma=ds.gamma)
+    return ds, K, y[:nn], chunks, jnp.asarray(_fold_masks(chunks))
+
+
+# ------------------------------------------------------ bucketing helpers
+
+def test_cap_helpers():
+    assert shrink.bucket_cap(1, 128) == 128
+    assert shrink.bucket_cap(129, 128) == 256
+    assert shrink.bucket_cap(80, 32) == 96
+    # entry gate: no compaction when the bucket would not be < n
+    assert shrink.pick_cap(100, 120, 128) is None
+    assert shrink.pick_cap(80, 120, 32) == 96
+    # declared caps: smallest fitting declared bucket wins
+    assert shrink.pick_cap(80, 120, 32, caps=(96,)) == 96
+    assert shrink.pick_cap(100, 120, 32, caps=(96,)) is None
+    assert shrink.possible_caps(120, 32) == (32, 64, 96)
+    assert shrink.possible_caps(120, 32, caps=(96, 64)) == (64, 96)
+
+
+# ------------------------------------------ full-set optimality contract
+
+@pytest.mark.parametrize("name", SUITE)
+def test_solve_shrunk_full_set_contract(name):
+    """Shrinking is a schedule transformation: on every suite dataset the
+    shrunk solve must land on the same SV set, a dual objective within
+    dtype tolerance, a full-set KKT gap <= tol, and an f consistent with
+    its alpha — the SMOResult contract is over the FULL set."""
+    ds, K, y, chunks, masks = _setup(name)
+    n = y.shape[0]
+    src = DenseKernel(K)
+    ref = solve(src, y, masks[0], ds.C, jnp.zeros(n, K.dtype), -y)
+    got = shrink.solve_shrunk(src, y, masks[0], ds.C,
+                              jnp.zeros(n, K.dtype), -y,
+                              shrink_every=64, shrink_quantum=32)
+    assert bool(got.converged)
+    sv_ref = np.asarray(ref.alpha) > 0
+    sv_got = np.asarray(got.alpha) > 0
+    np.testing.assert_array_equal(sv_ref, sv_got)
+    obj_ref = float(dual_objective(K, y, ref.alpha))
+    obj_got = float(dual_objective(K, y, got.alpha))
+    assert abs(obj_ref - obj_got) <= 1e-6 * max(1.0, abs(obj_ref))
+    _, _, gap = optimality(got.alpha, got.f, y, masks[0], ds.C)
+    assert float(gap) <= 1e-3
+    f_re = K @ (got.alpha * y) - y
+    np.testing.assert_allclose(np.asarray(f_re), np.asarray(got.f),
+                               atol=1e-10)
+
+
+def test_shrink_off_is_bit_identical():
+    """shrink_every=0 must not change a single bit — it dispatches exactly
+    the pre-shrinking programs."""
+    ds, K, y, chunks, masks = _setup("heart")
+    n = y.shape[0]
+    src = DenseKernel(K)
+    ref = solve(src, y, masks[0], ds.C, jnp.zeros(n, K.dtype), -y)
+    got = shrink.solve_shrunk(src, y, masks[0], ds.C,
+                              jnp.zeros(n, K.dtype), -y, shrink_every=0)
+    np.testing.assert_array_equal(np.asarray(ref.alpha),
+                                  np.asarray(got.alpha))
+    np.testing.assert_array_equal(np.asarray(ref.f), np.asarray(got.f))
+    assert int(ref.n_iter) == int(got.n_iter)
+
+
+def test_shrunk_iterates_deterministic_across_chunks_and_quantum():
+    """The compact iterate sequence is a pure function of the active
+    VALUES: chunk granularity (schedule shape) and cap bucketing (pad
+    width) must not change a single output bit."""
+    ds, K, y, chunks, masks = _setup("heart")
+    n = y.shape[0]
+    src = DenseKernel(K)
+    base = shrink.solve_shrunk(src, y, masks[0], ds.C,
+                               jnp.zeros(n, K.dtype), -y,
+                               shrink_every=64, shrink_quantum=32,
+                               chunk_iters=256)
+    for kw in (dict(chunk_iters=97, shrink_quantum=32),
+               dict(chunk_iters=256, shrink_quantum=16),
+               dict(chunk_iters=97, shrink_quantum=16)):
+        got = shrink.solve_shrunk(src, y, masks[0], ds.C,
+                                  jnp.zeros(n, K.dtype), -y,
+                                  shrink_every=64, **kw)
+        np.testing.assert_array_equal(np.asarray(base.alpha),
+                                      np.asarray(got.alpha))
+        np.testing.assert_array_equal(np.asarray(base.f),
+                                      np.asarray(got.f))
+        assert int(base.n_iter) == int(got.n_iter)
+
+
+def test_pallas_source_shrinks():
+    """The row-streaming source shrinks through the same machinery: the
+    compact gather slices X (active bytes only), reconstruction uses the
+    streaming matvec, and the full-set contract holds."""
+    ds, K, y, chunks, masks = _setup("heart")
+    n = y.shape[0]
+    X = jnp.asarray(ds.X)[:n]
+    src = PallasRBF(X, ds.gamma)
+    ref = solve(src, y, masks[0], ds.C, jnp.zeros(n, src.dtype), -y,
+                wss="1")
+    got = shrink.solve_shrunk(src, y, masks[0], ds.C,
+                              jnp.zeros(n, src.dtype), -y, wss="1",
+                              shrink_every=64, shrink_quantum=32)
+    assert bool(got.converged)
+    np.testing.assert_array_equal(np.asarray(ref.alpha) > 0,
+                                  np.asarray(got.alpha) > 0)
+    _, _, gap = optimality(got.alpha, got.f, y, masks[0], ds.C)
+    assert float(gap) <= 1e-3
+
+
+# ----------------------------------------------------------- pool parity
+
+@pytest.mark.parametrize("max_width", [1, 2])
+def test_pool_shrink_matches_solo_driver(max_width):
+    """The pool's (source, cap)-grouped dispatch must be bit-identical to
+    the reference solo driver at every width — batching compact lanes via
+    chunk_batched_sources_jit is a schedule choice, not a math change."""
+    ds, K, y, chunks, masks = _setup("heart")
+    n = y.shape[0]
+    pool = LanePool({"k": DenseKernel(K)}, y, chunk_iters=256,
+                    max_width=max_width, shrink_every=64, shrink_quantum=32)
+    for h in range(3):
+        pool.add(h, masks[h], ds.C, jnp.zeros(n, K.dtype), -y, source="k")
+    results = pool.run()
+    for h in range(3):
+        solo = shrink.solve_shrunk(DenseKernel(K), y, masks[h], ds.C,
+                                   jnp.zeros(n, K.dtype), -y,
+                                   shrink_every=64, shrink_quantum=32,
+                                   chunk_iters=256)
+        np.testing.assert_array_equal(np.asarray(solo.alpha),
+                                      np.asarray(results[h].alpha))
+        np.testing.assert_array_equal(np.asarray(solo.f),
+                                      np.asarray(results[h].f))
+        assert int(solo.n_iter) == int(results[h].n_iter)
+    occ = pool.occupancy
+    assert occ["shrink_lane_chunks"] > 0
+    assert 0.0 < occ["mean_active_frac"] <= 1.0
+
+
+def test_pool_shrink_off_matches_baseline_bitwise():
+    """A shrink-capable pool with shrink_every=0 must dispatch exactly the
+    historical schedule: same results, same program-tuple shapes."""
+    ds, K, y, chunks, masks = _setup("heart")
+    n = y.shape[0]
+    pool = LanePool({"k": DenseKernel(K)}, y, chunk_iters=256, max_width=1,
+                    shrink_every=0)
+    for h in range(3):
+        pool.add(h, masks[h], ds.C, jnp.zeros(n, K.dtype), -y, source="k")
+    results = pool.run()
+    for h in range(3):
+        seq = smo_solve(K, y, masks[h], ds.C, jnp.zeros(n), -y)
+        np.testing.assert_array_equal(np.asarray(seq.alpha),
+                                      np.asarray(results[h].alpha))
+    assert all(len(p) == 2 for p in pool._programs)   # (key, width) only
+    assert "mean_active_frac" not in pool.occupancy
+
+
+# -------------------------------------------------- seeding -> shrinking
+
+def test_seed_active_mask_cold_start_keeps_everything():
+    """A cold start (alpha=0, f=-y) has no bound-locked rows against its
+    own (b_up, b_low): the handoff must keep the full set active."""
+    ds, K, y, chunks, masks = _setup("heart")
+    n = y.shape[0]
+    active = shrink.seed_active_mask(jnp.zeros(n), -y, y, masks[0], ds.C)
+    np.testing.assert_array_equal(np.asarray(active),
+                                  np.asarray(masks[0]))
+    # the seeding-layer re-export is the same function
+    from repro.core import seeding
+    assert seeding.seed_active_mask is shrink.seed_active_mask
+
+
+def test_seeded_admission_starts_shrunk():
+    """A seeded lane whose start point bound-locks rows enters the pool
+    already compact (shrink_on_seed), and still lands on the reference
+    fixed point's SV set."""
+    ds, K, y, chunks, masks = _setup("heart")
+    n = y.shape[0]
+    ref0 = smo_solve(K, y, masks[0], ds.C, jnp.zeros(n), -y)
+    active = shrink.seed_active_mask(ref0.alpha, ref0.f, y, masks[0], ds.C)
+    assert int(jnp.sum(active)) < int(jnp.sum(masks[0]))
+
+
+# ------------------------------------------------- mid-shrink kill/resume
+
+def _shrink_plan(K, y, masks, C, *, max_width=0, shrink_quantum=32):
+    plan = Plan(sources={"k": DenseKernel(K)}, y=y, chunk_iters=64,
+                lane_quantum=2, max_width=max_width,
+                shrink_every=64, shrink_quantum=shrink_quantum)
+    n = y.shape[0]
+    for h in range(3):
+        plan.lane(h, source="k", train_mask=masks[h], C=C,
+                  alpha0=jnp.zeros(n), f0=-y)
+    return plan
+
+
+def test_mid_shrink_kill_resume_new_schedule_and_cap(tmp_path):
+    """Kill a checkpointed shrink-enabled study while lanes are compact;
+    resume under a DIFFERENT schedule shape (width-1 vs unbounded) AND a
+    different cap bucket (quantum 16 vs 32 re-buckets the restored active
+    mask). The compact iterate sequence depends only on the active VALUES,
+    so every lane must land on the bit-identical final (alpha, f)."""
+    ds, K, y, chunks, masks = _setup("heart")
+    full = run_plan(_shrink_plan(K, y, masks, ds.C))
+
+    mgr = CheckpointManager(str(tmp_path / "shrink"), max_to_keep=1000)
+    ck = StudyCheckpoint(manager=mgr, meta={"k": 3, "dataset": "heart"})
+    run_plan(_shrink_plan(K, y, masks, ds.C), checkpoint=ck)
+    steps = mgr.steps_of_class("study")
+    assert len(steps) >= 3
+    # crash half-way: the surviving snapshot holds mid-compact lanes — its
+    # tree must carry the shrink ledger keys
+    keep = steps[: max(1, len(steps) // 2)]
+    _, tree, _ = mgr.restore(step=keep[-1])
+    for key in ("active", "shrunk", "no_shrink", "unshrinks"):
+        assert key in tree, sorted(tree)
+    assert np.asarray(tree["shrunk"]).any(), \
+        "crash point must catch at least one lane mid-compact"
+    for s in steps[len(keep):]:
+        shutil.rmtree(mgr._step_dir(s))
+
+    mgr2 = CheckpointManager(str(tmp_path / "shrink"), max_to_keep=1000)
+    ck2 = StudyCheckpoint(manager=mgr2, meta={"k": 3, "dataset": "heart"})
+    resumed = run_plan(_shrink_plan(K, y, masks, ds.C, max_width=1,
+                                    shrink_quantum=16), checkpoint=ck2)
+    for h in range(3):
+        np.testing.assert_array_equal(np.asarray(full.results[h].alpha),
+                                      np.asarray(resumed.results[h].alpha))
+        np.testing.assert_array_equal(np.asarray(full.results[h].f),
+                                      np.asarray(resumed.results[h].f))
+        assert full.stats[h].n_iter == resumed.stats[h].n_iter
+
+
+def test_shrink_off_snapshots_have_no_ledger(tmp_path):
+    """Shrink-off studies must write byte-compatible (pre-shrinking)
+    snapshot trees: no ledger keys."""
+    ds, K, y, chunks, masks = _setup("heart")
+    plan = Plan(sources={"k": DenseKernel(K)}, y=y, chunk_iters=64)
+    n = y.shape[0]
+    plan.lane(0, source="k", train_mask=masks[0], C=ds.C,
+              alpha0=jnp.zeros(n), f0=-y)
+    mgr = CheckpointManager(str(tmp_path / "off"), max_to_keep=1000)
+    ck = StudyCheckpoint(manager=mgr, meta={"k": 3})
+    run_plan(plan, checkpoint=ck)
+    _, tree, _ = mgr.restore(step=mgr.steps_of_class("study")[-1])
+    assert not {"active", "shrunk", "no_shrink", "unshrinks"} & set(tree)
+
+
+# --------------------------------------------------- drivers and facades
+
+def test_run_cv_shrink_matches_baseline_accuracy():
+    ds = make_dataset("heart", n_override=120)
+    base = run_cv(ds, k=3, method="ato")
+    got = run_cv(ds, k=3, method="ato", shrink_every=64, shrink_quantum=32)
+    accs = lambda r: sorted((f.fold, f.acc_correct) for f in r.folds)
+    assert accs(base) == accs(got)
+    assert got.occupancy["mean_active_frac"] <= 1.0
+
+
+def test_run_cv_rejects_shrink_with_midfold_checkpoints(tmp_path):
+    ds = make_dataset("heart", n_override=120)
+    mgr = CheckpointManager(str(tmp_path / "cv"), max_to_keep=10)
+    with pytest.raises(ValueError, match="shrink ledger"):
+        run_cv(ds, k=3, shrink_every=64, chunk_iters=64,
+               checkpoint_manager=mgr)
+
+
+def test_svc_shrink_fit_same_svs():
+    ds = make_dataset("heart", n_override=100)
+    from repro.svm import SVC
+    base = SVC(C=ds.C, gamma=ds.gamma).fit(ds.X[:100], ds.y[:100])
+    got = SVC(C=ds.C, gamma=ds.gamma, shrink_every=64,
+              shrink_quantum=32).fit(ds.X[:100], ds.y[:100])
+    np.testing.assert_array_equal(np.asarray(base.result_.alpha) > 0,
+                                  np.asarray(got.result_.alpha) > 0)
+    assert (base.predict(ds.X[:100]) == got.predict(ds.X[:100])).all()
+
+
+def test_sv_eval_matches_full_eval():
+    """SV-only batched evaluation gathers alpha>0 rows before the matvec;
+    correct counts must equal the full-row path on every lane."""
+    ds = make_dataset("heart", n_override=120)
+    Cs, gammas = [1.0, 2.0, 4.0], [0.05, 0.1, 0.2]
+    kw = dict(k=3, method="sir", chunk_iters=512)
+    (p_full,) = grid_plans(ds, Cs, gammas, **kw)
+    (p_sv,) = grid_plans(ds, Cs, gammas, **kw)
+    p_sv.sv_eval = True
+    r_full = run_plan(p_full)
+    r_sv = run_plan(p_sv)
+    assert set(r_full.evals) == set(r_sv.evals)
+    for lid in r_full.evals:
+        assert int(r_full.evals[lid][0]) == int(r_sv.evals[lid][0]), lid
+
+
+# ------------------------------------------------ plan_check calibration
+
+def _shrink_grid_kwargs(max_width):
+    return dict(k=3, method="sir", chunk_iters=512, max_width=max_width,
+                shrink_every=64, shrink_quantum=32, shrink_caps=(96,))
+
+
+@pytest.mark.parametrize("max_width", [1, 2])
+def test_predicted_cap_programs_match_measured(max_width):
+    """With declared caps in play, the analyzer's (program, kind, width,
+    cap, n, dtype, wss) enumeration must equal the measured jit cache
+    misses summed over all three chunk entry points — exactly, at width
+    caps 1 and 2."""
+    ds = make_dataset("heart", n_override=120)
+    Cs, gammas = [1.0, 2.0, 4.0], [0.05, 0.1, 0.2]
+    (plan,) = grid_plans(ds, Cs, gammas, **_shrink_grid_kwargs(max_width))
+    pa = analyze_plan(plan)
+    assert pa.ok, pa.report.render()
+    assert {p[3] for p in pa.programs} == {96, 120}
+    chunk_jit.clear_cache()
+    chunk_batched_jit.clear_cache()
+    chunk_batched_sources_jit.clear_cache()
+    run_grid(ds, Cs, gammas, **_shrink_grid_kwargs(max_width))
+    measured = (chunk_jit._cache_size() + chunk_batched_jit._cache_size()
+                + chunk_batched_sources_jit._cache_size())
+    assert pa.program_count == measured == 2 * max_width
+
+
+def test_plan_check_shrink_off_unchanged():
+    """Without shrinking the analyzer emits cap == n only — the program
+    count (and the recompile-storm math) is exactly the pre-shrink one."""
+    ds = make_dataset("heart", n_override=120)
+    Cs, gammas = [1.0, 2.0, 4.0], [0.05, 0.1, 0.2]
+    (plan,) = grid_plans(ds, Cs, gammas, k=3, method="sir",
+                         chunk_iters=512, max_width=2)
+    pa = analyze_plan(plan)
+    assert pa.program_count == 2
+    assert all(p[3] == p[4] for p in pa.programs)
+    assert all(src["caps"] == [] for src in pa.per_source.values())
+
+
+# ------------------------------------------------------- cost-model gate
+
+def test_pick_shrink_fallback_and_measured():
+    model = {"entries": {"cpu": {"dense": {"shrink": True},
+                                 "pallas_rbf": {"shrink": False}}}}
+    # fallback: CPU off (dispatch-bound), accelerators on (bytes-bound)
+    assert cost_model.fallback_shrink("cpu") is False
+    assert cost_model.fallback_shrink("tpu") is True
+    # measured entries override the fallback
+    assert cost_model.pick_shrink("cpu", kinds=("dense",), model=model)
+    # conservative combine: every kind must agree
+    assert not cost_model.pick_shrink("cpu", kinds=("dense", "pallas_rbf"),
+                                      model=model)
+    # missing backend/kind degrades to the fallback
+    assert not cost_model.pick_shrink("cpu", kinds=("dense",), model={})
+    assert cost_model.pick_shrink("tpu", kinds=("dense",), model={})
+
+
+def test_shrink_auto_resolves_like_the_pool(monkeypatch):
+    """plan_check resolves shrink_every='auto' through the same
+    cost-model verdict as the pool — prediction tracks execution."""
+    ds = make_dataset("heart", n_override=120)
+    (plan,) = grid_plans(ds, [1.0], [0.1], k=3, method="cold",
+                         chunk_iters=512, max_width=1, shrink_every="auto",
+                         shrink_quantum=32)
+    monkeypatch.setattr(cost_model, "pick_shrink", lambda *a, **k: False)
+    pa_off = analyze_plan(plan)
+    assert all(p[3] == p[4] for p in pa_off.programs)
+    monkeypatch.setattr(cost_model, "pick_shrink", lambda *a, **k: True)
+    pa_on = analyze_plan(plan)
+    assert any(p[3] < p[4] for p in pa_on.programs)

@@ -302,11 +302,14 @@ def test_run_plan_validates_edges_by_name():
 
 
 def test_run_plan_rejects_non_dense_pinned_source_at_entry():
-    """A PINNED (already-materialized) source with no dense K fails at
-    entry when a seed transform or evaluation needs K — not after the
-    dependency lane has solved for hours. Factories stay deferred (their
-    product is unknowable without computing it)."""
-    from repro.svm import OnDemandRBF
+    """A PINNED (already-materialized) source missing a required
+    capability fails at entry — not after the dependency lane has solved
+    for hours. Factories stay deferred (their product is unknowable
+    without computing it). Evaluation is no longer such a capability for
+    the RBF family: ``rows_at`` (shared since the shrinking
+    reconstruction path, DESIGN.md §Shrinking) serves the eval row slab
+    without a dense K, and must score identically to the dense path."""
+    from repro.svm import DenseKernel, OnDemandRBF
     ds, X, y, n, masks = _setup("heart")
     plan = Plan(sources={"od": OnDemandRBF(X[:n], ds.gamma)}, y=y)
     plan.lane(0, train_mask=masks[0], C=ds.C, alpha0=jnp.zeros(n), f0=-y)
@@ -314,11 +317,16 @@ def test_run_plan_rejects_non_dense_pinned_source_at_entry():
               params={})
     with pytest.raises(ValueError, match="transform 'fold' needs a dense"):
         run_plan(plan)
-    plan2 = Plan(sources={"od": OnDemandRBF(X[:n], ds.gamma)}, y=y)
-    plan2.lane(0, train_mask=masks[0], C=ds.C, alpha0=jnp.zeros(n), f0=-y)
-    plan2.evaluate(0, np.arange(3))
-    with pytest.raises(ValueError, match="evaluation needs a dense"):
-        run_plan(plan2)
+
+    def eval_plan(source):
+        p = Plan(sources={"s": source}, y=y)
+        p.lane(0, train_mask=masks[0], C=ds.C, alpha0=jnp.zeros(n), f0=-y)
+        p.evaluate(0, np.arange(30))
+        return run_plan(p)
+    r_od = eval_plan(OnDemandRBF(X[:n], ds.gamma))
+    K = kernel_matrix(X[:n], X[:n], gamma=ds.gamma)
+    r_dense = eval_plan(DenseKernel(K))
+    assert int(r_od.evals[0][0]) == int(r_dense.evals[0][0])
 
 
 # --------------------------------------------------- occupancy merge fix
