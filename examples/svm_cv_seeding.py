@@ -4,6 +4,15 @@ cross-gamma grid, and a fault-tolerant restart demo — every path a thin
 plan over the Study API.
 
     PYTHONPATH=src python examples/svm_cv_seeding.py [dataset]
+
+Study-service mode (DESIGN.md §Study service): start a daemon in one
+terminal, then point any number of clients at it — each client's study
+runs bit-identically to the in-process path, sharing the daemon's pool
+(and deduping identical kernels across clients):
+
+    PYTHONPATH=src python examples/svm_cv_seeding.py --serve /tmp/study.sock
+    PYTHONPATH=src python examples/svm_cv_seeding.py \\
+        --connect /tmp/study.sock [dataset]
 """
 import shutil
 import sys
@@ -13,6 +22,72 @@ from repro.checkpoint import CheckpointManager
 from repro.core.cv import run_cv
 from repro.data.svm_suite import make_dataset
 from repro.svm import SVC
+
+
+def _serve(sock_path: str) -> None:
+    """Run the study daemon until Ctrl-C (drains gracefully)."""
+    from repro.service import StudyServer, StudyService
+    service = StudyService(chunk_iters=512,
+                           checkpoint_root=tempfile.mkdtemp())
+    print(f"study daemon on {sock_path} "
+          f"(tol={service.pool.tol}, wss={service.pool.wss}) — Ctrl-C drains")
+    StudyServer(sock_path, service).serve_forever()
+
+
+def _connect(sock_path: str, name: str) -> None:
+    """Submit this example's fold-chain study to a running daemon and
+    compare against the local run — same bits, shared pool."""
+    import getpass
+
+    import jax.numpy as jnp
+
+    from repro.core.cv import _fold_masks, _transition_idx
+    from repro.core.study import Plan, run_plan
+    from repro.data.svm_suite import kfold_chunks
+    from repro.service import StudyClient
+    from repro.svm.sources import KernelSpec
+
+    ds = make_dataset(name, n_override=600)
+    chunks = kfold_chunks(ds.n, 5, seed=0)
+    nn = chunks.size
+    X = jnp.asarray(ds.X)[:nn]
+    y = jnp.asarray(ds.y, jnp.float64)[:nn]
+    masks = jnp.asarray(_fold_masks(chunks))
+    plan = Plan(sources={"k": KernelSpec(X=X, gamma=ds.gamma, n=nn)}, y=y,
+                chunk_iters=512)
+    plan.lane(0, train_mask=masks[0], C=ds.C,
+              alpha0=jnp.zeros(nn), f0=-y)
+    for h in range(1, 5):
+        S, R, T = _transition_idx(chunks, h - 1, h)
+        plan.lane(h, train_mask=masks[h], C=ds.C, dep=h - 1,
+                  transform="fold",
+                  params=dict(method="sir", S_idx=S, R_idx=R, T_idx=T))
+    for h in range(5):
+        plan.evaluate(h, chunks[h])
+
+    with StudyClient(sock_path, tenant=getpass.getuser()) as cli:
+        print(f"connected; daemon pool contract: {cli.pool_contract}")
+        served = cli.submit(f"cv-{name}", plan,
+                            on_result=lambda lid, r: print(
+                                f"  fold {lid}: {int(r.n_iter)} iters"))
+    local = run_plan(plan)
+    same = all(bool((served.results[l].alpha == local.results[l].alpha).all())
+               for l in local.results)
+    acc = sum(c for c, _ in served.evals.values()) / \
+        sum(t for _, t in served.evals.values())
+    print(f"served 5-fold CV acc={acc:.4f}; bit-identical to local "
+          f"run_plan: {same}; dedup_hits={served.dedup_hits} "
+          f"(submit again from another terminal to see kernel dedup)")
+
+
+if "--serve" in sys.argv:
+    _serve(sys.argv[sys.argv.index("--serve") + 1])
+    sys.exit(0)
+if "--connect" in sys.argv:
+    _i = sys.argv.index("--connect")
+    _rest = [a for a in sys.argv[_i + 2:] if not a.startswith("-")]
+    _connect(sys.argv[_i + 1], _rest[0] if _rest else "madelon")
+    sys.exit(0)
 
 name = sys.argv[1] if len(sys.argv) > 1 else "madelon"
 ds = make_dataset(name, n_override=600)

@@ -1,0 +1,135 @@
+#!/usr/bin/env python
+"""CI smoke for the study service (DESIGN.md §Study service).
+
+Boots the real daemon — AF_UNIX socket, service thread, the works — and
+drives it through the contracts CI cares about:
+
+* **parity** — two tenants submit overlapping-gamma fold-chain plans
+  concurrently; every lane must come back BIT-identical to an in-process
+  ``run_plan`` of the same plan (the LanePool's schedule-shape parity is
+  what licenses daemon interleaving);
+* **dedup** — the shared gamma is admitted once: the two studies'
+  admission accounting must show exactly one dedup hit, and the pool
+  must materialize only the distinct kernels (fewer than the two solo
+  runs combined);
+* **admission** — a budget-infeasible plan is rejected over the wire
+  with the ``check_plan`` findings attached, before anything
+  materializes;
+* **drain** — ``shutdown`` stops the daemon cleanly.
+
+Exit code 0 on success; any assertion failure fails the CI step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+import threading
+import uuid
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cv import _fold_masks, _transition_idx
+from repro.core.study import Plan, run_plan
+from repro.data.svm_suite import kfold_chunks, make_dataset
+from repro.service import (PlanRejectedByServer, StudyClient, StudyServer,
+                           StudyService)
+from repro.svm.sources import KernelSpec
+
+
+def _plan(specs, y, masks, chunks, C):
+    plan = Plan(sources=dict(specs), y=y, chunk_iters=64, lane_quantum=2)
+    n = y.shape[0]
+    for key in specs:
+        plan.lane((key, 0), source=key, train_mask=masks[0], C=C,
+                  alpha0=jnp.zeros(n), f0=-y)
+        for h in (1, 2):
+            S, R, T = _transition_idx(chunks, h - 1, h)
+            plan.lane((key, h), source=key, train_mask=masks[h], C=C,
+                      dep=(key, h - 1), transform="fold",
+                      params=dict(method="sir", S_idx=S, R_idx=R, T_idx=T))
+        for h in range(3):
+            plan.evaluate((key, h), chunks[h])
+    return plan
+
+
+def main() -> int:
+    ds = make_dataset("heart", n_override=120)
+    X = jnp.asarray(ds.X)
+    y = jnp.asarray(ds.y, jnp.float64)
+    chunks = kfold_chunks(120, 4, seed=0)
+    nn = chunks.size
+    X, y = X[:nn], y[:nn]
+    masks = jnp.asarray(_fold_masks(chunks))
+    gam = {s: KernelSpec(X=X, gamma=s * ds.gamma, n=nn)
+           for s in (0.5, 1.0, 2.0)}
+    plan_a = _plan({0.5: gam[0.5], 1.0: gam[1.0]}, y, masks, chunks, ds.C)
+    plan_b = _plan({1.0: gam[1.0], 2.0: gam[2.0]}, y, masks, chunks, ds.C)
+    solo_a, solo_b = run_plan(plan_a), run_plan(plan_b)
+    solo_mats = (solo_a.source_stats["materializations"]
+                 + solo_b.source_stats["materializations"])
+
+    sock = f"/tmp/study-ci-{uuid.uuid4().hex[:8]}.sock"
+    service = StudyService(chunk_iters=64, lane_quantum=2, max_width=0)
+    server = StudyServer(sock, service)
+    t = threading.Thread(target=server.serve_forever, daemon=True)
+    t.start()
+    import os
+    import time
+    for _ in range(200):
+        if os.path.exists(sock):
+            break
+        time.sleep(0.05)
+    else:
+        raise AssertionError("daemon socket never appeared")
+
+    served = {}
+    gate = threading.Barrier(2)
+
+    def tenant(name, plan):
+        with StudyClient(sock, name) as cli:
+            gate.wait()                  # submit as close together as we can
+            served[name] = cli.submit("grid", plan)
+
+    ta = threading.Thread(target=tenant, args=("alice", plan_a))
+    tb = threading.Thread(target=tenant, args=("bob", plan_b))
+    ta.start(), tb.start()
+    ta.join(300), tb.join(300)
+    assert set(served) == {"alice", "bob"}, served.keys()
+
+    for name, solo in (("alice", solo_a), ("bob", solo_b)):
+        got = served[name]
+        assert set(got.results) == set(solo.results)
+        for lid, ref in solo.results.items():
+            np.testing.assert_array_equal(np.asarray(ref.alpha),
+                                          np.asarray(got.results[lid].alpha))
+            assert int(ref.n_iter) == int(got.results[lid].n_iter)
+        assert got.evals == solo.evals, (name, got.evals, solo.evals)
+
+    hits = served["alice"].dedup_hits + served["bob"].dedup_hits
+    admitted = (served["alice"].sources_admitted
+                + served["bob"].sources_admitted)
+    mats = max(s.source_stats["materializations"] for s in served.values())
+    assert hits == 1, f"expected exactly one cross-tenant dedup hit: {hits}"
+    assert admitted == 3, f"expected 3 distinct sources admitted: {admitted}"
+    assert mats <= 3 < solo_mats, (mats, solo_mats)
+
+    with StudyClient(sock, "mallory") as cli:
+        try:
+            cli.submit("q", dataclasses.replace(plan_a, tol=1e-6))
+        except PlanRejectedByServer as e:
+            assert "tol" in str(e), e
+        else:
+            raise AssertionError("contract-violating plan was admitted")
+        cli.shutdown()
+    t.join(60)
+    assert not t.is_alive(), "daemon did not drain"
+
+    print(f"service smoke OK: 2 tenants bit-identical to solo runs, "
+          f"{hits} dedup hit, {mats} materializations vs {solo_mats} solo, "
+          f"rejection + drain clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

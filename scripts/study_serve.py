@@ -1,0 +1,68 @@
+#!/usr/bin/env python
+"""Run the study daemon: one shared LanePool serving plans over a local
+socket until SIGTERM/SIGINT or a client ``shutdown`` op (both drain
+gracefully: in-flight studies flush checkpoint snapshots and resume on
+the next start).
+
+    PYTHONPATH=src python scripts/study_serve.py --socket /tmp/study.sock \\
+        --checkpoint-root /tmp/study-ckpt --max-width 4
+
+The flags fix the pool's result-affecting contract (tol, wss, shrink
+settings) — submitted plans must match it — and the schedule shape
+(width, chunk size, budgets), which served plans inherit.
+"""
+import argparse
+import signal
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--socket", required=True,
+                    help="AF_UNIX socket path to listen on")
+    ap.add_argument("--checkpoint-root", default=None,
+                    help="root directory for per-(tenant, plan) study "
+                    "snapshots (omit to disable resume)")
+    ap.add_argument("--tol", type=float, default=1e-3)
+    ap.add_argument("--wss", default="2", choices=("1", "2"))
+    ap.add_argument("--chunk-iters", type=int, default=4096)
+    ap.add_argument("--lane-quantum", type=int, default=4)
+    ap.add_argument("--max-width", type=int, default=None,
+                    help="width cap (default: measured cost model)")
+    ap.add_argument("--max-resident", type=int, default=0,
+                    help="kernel-source residency budget, count (0=off)")
+    ap.add_argument("--cache-bytes", type=int, default=0,
+                    help="kernel-source residency budget, bytes (0=off)")
+    ap.add_argument("--shrink-every", type=int, default=0)
+    ap.add_argument("--shrink-quantum", type=int, default=128)
+    ap.add_argument("--snapshot-every", type=int, default=1,
+                    help="study snapshot period in pool chunks")
+    args = ap.parse_args(argv)
+
+    from repro.service import StudyServer, StudyService
+
+    service = StudyService(
+        tol=args.tol, wss=args.wss, chunk_iters=args.chunk_iters,
+        lane_quantum=args.lane_quantum, max_width=args.max_width,
+        max_resident=args.max_resident, cache_bytes=args.cache_bytes,
+        shrink_every=args.shrink_every, shrink_quantum=args.shrink_quantum,
+        checkpoint_root=args.checkpoint_root,
+        snapshot_every=args.snapshot_every)
+    server = StudyServer(args.socket, service)
+
+    def _drain(signum, frame):
+        print(f"signal {signum}: draining", file=sys.stderr)
+        server.stop_accepting()
+
+    signal.signal(signal.SIGTERM, _drain)
+    signal.signal(signal.SIGINT, _drain)
+    print(f"study daemon listening on {args.socket} "
+          f"(width={service.pool.max_width}, tol={service.pool.tol}, "
+          f"wss={service.pool.wss})", file=sys.stderr)
+    server.serve_forever()
+    print("study daemon drained", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

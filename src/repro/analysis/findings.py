@@ -22,13 +22,18 @@ SEVERITIES = ("error", "warn")
 class Finding:
     """One analyzer result. ``rule`` is the check's stable name,
     ``path`` a repo-relative file (or ``<plan>`` for plan analysis),
-    ``symbol`` the enclosing function/class or plan entity."""
+    ``symbol`` the enclosing function/class or plan entity. ``context``
+    names the submission a plan finding belongs to (``tenant/plan_id``,
+    threaded from the study daemon) — like ``line`` it is carried for
+    human navigation only and is NOT part of the identity, so the lint
+    baseline stays line-free AND tenant-free."""
     rule: str
     path: str
     symbol: str
     message: str
     severity: str = "error"
     line: int = 0
+    context: str = ""
 
     @property
     def key(self) -> tuple:
@@ -36,7 +41,8 @@ class Finding:
 
     def render(self) -> str:
         loc = f"{self.path}:{self.line}" if self.line else self.path
-        return f"[{self.severity}] {self.rule} {loc} ({self.symbol}): " \
+        ctx = f" [{self.context}]" if self.context else ""
+        return f"[{self.severity}] {self.rule} {loc} ({self.symbol}){ctx}: " \
                f"{self.message}"
 
 
@@ -48,10 +54,11 @@ class Report:
         self.findings: list[Finding] = list(findings)
 
     def add(self, rule, path, symbol, message, *, severity="error",
-            line=0) -> None:
+            line=0, context="") -> None:
         assert severity in SEVERITIES, severity
         self.findings.append(Finding(rule, str(path), str(symbol), message,
-                                     severity=severity, line=int(line)))
+                                     severity=severity, line=int(line),
+                                     context=str(context)))
 
     def extend(self, other: "Report") -> None:
         self.findings.extend(other.findings)

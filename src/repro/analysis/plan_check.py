@@ -67,6 +67,18 @@ STORM_THRESHOLD = 8
 ANTICHAIN_LIMIT = 512
 
 
+class PlanRejected(ValueError):
+    """``check_plan``'s strict rejection. A ``ValueError`` (existing
+    callers' except clauses keep working) that carries the full
+    :class:`PlanAnalysis`, so an admission gate — the study daemon — can
+    put the structured findings on the wire instead of re-parsing the
+    rendered message."""
+
+    def __init__(self, message: str, analysis: "PlanAnalysis"):
+        super().__init__(message)
+        self.analysis = analysis
+
+
 @dataclasses.dataclass
 class PlanAnalysis:
     """The analyzer's answer: distinct program shapes, per-source width
@@ -162,12 +174,17 @@ def _topo(prereqs: dict) -> list:
 
 
 def analyze_plan(plan, *, checkpoint=None, backend=None,
-                 storm_threshold: int = STORM_THRESHOLD) -> PlanAnalysis:
+                 storm_threshold: int = STORM_THRESHOLD,
+                 context: str = "") -> PlanAnalysis:
     """Build the pre-execution report for ``plan``. Never raises on plan
     content — structural problems (the ``_validate_plan`` surface) come
     back as ``invalid-plan`` error findings, so a daemon can report them
     instead of crashing on them. Pure inspection: no kernel materializes,
-    no program compiles."""
+    no program compiles.
+
+    ``context`` names the submission the findings belong to (the daemon
+    threads ``tenant/plan_id`` here), so multi-tenant rejection logs name
+    the offending plan; it never enters finding identity."""
     from repro.core import study   # deferred: study imports this lazily
 
     report = Report()
@@ -180,7 +197,8 @@ def analyze_plan(plan, *, checkpoint=None, backend=None,
             specs[spec.id] = spec
         study._validate_plan(plan, specs)
     except ValueError as e:
-        report.add("invalid-plan", "<plan>", "plan", str(e))
+        report.add("invalid-plan", "<plan>", "plan", str(e),
+                   context=context)
         return PlanAnalysis(programs=[], program_count=0, per_source={},
                             max_width=0, pinned_bytes=0,
                             peak_managed_bytes=0, report=report)
@@ -235,7 +253,7 @@ def analyze_plan(plan, *, checkpoint=None, backend=None,
                    f"schedule can produce {len(programs)} distinct jitted "
                    f"programs (> {storm_threshold}): raise lane_quantum "
                    "or cap max_width to bound first-chunk retraces",
-                   severity="warn")
+                   severity="warn", context=context)
 
     # ---- SourceCache budget feasibility ---------------------------------
     pinned_bytes = sum(_source_nbytes(s) for s in plan.sources.values()
@@ -251,10 +269,11 @@ def analyze_plan(plan, *, checkpoint=None, backend=None,
                 f"source {worst!r} needs {managed[worst]} bytes on top of "
                 f"{pinned_bytes} pinned bytes, exceeding the declared "
                 f"cache_bytes={plan.cache_bytes} budget — no eviction "
-                "schedule can admit it within the plan's own contract")
+                "schedule can admit it within the plan's own contract",
+                context=context)
     if plan.max_resident < 0 or plan.cache_bytes < 0:
         report.add("cache-infeasible", "<plan>", "budget",
-                   "negative residency budget")
+                   "negative residency budget", context=context)
 
     # ---- checkpoint step-key ranges -------------------------------------
     if checkpoint is not None:
@@ -267,7 +286,7 @@ def analyze_plan(plan, *, checkpoint=None, backend=None,
                 f"study base_step {base} lands in the {zone} record range; "
                 f"study records must start at STUDY_BASE "
                 f"({study.STUDY_BASE}) to share a checkpoint directory "
-                "with fold and batch records")
+                "with fold and batch records", context=context)
 
     # ---- dead lanes ------------------------------------------------------
     consumed = {ev.lane for ev in plan.evals}
@@ -280,7 +299,7 @@ def analyze_plan(plan, *, checkpoint=None, backend=None,
                        f"lane {spec.id!r}: {what} is never evaluated and "
                        "no lane depends on it (mis-keyed EvalSpec, or "
                        "consumed only via on_result/StudyResult)",
-                       severity="warn")
+                       severity="warn", context=context)
 
     return PlanAnalysis(programs=sorted(programs),
                         program_count=len(programs),
@@ -290,13 +309,16 @@ def analyze_plan(plan, *, checkpoint=None, backend=None,
                         report=report)
 
 
-def check_plan(plan, *, checkpoint=None, backend=None) -> PlanAnalysis:
-    """Strict-mode analysis: raise ``ValueError`` on any error-severity
-    finding (the admission gate a plan-serving daemon should call);
-    returns the analysis otherwise."""
-    pa = analyze_plan(plan, checkpoint=checkpoint, backend=backend)
+def check_plan(plan, *, checkpoint=None, backend=None,
+               context: str = "") -> PlanAnalysis:
+    """Strict-mode analysis: raise :class:`PlanRejected` (a
+    ``ValueError`` carrying the analysis) on any error-severity finding —
+    the admission gate the study daemon calls verbatim; returns the
+    analysis otherwise."""
+    pa = analyze_plan(plan, checkpoint=checkpoint, backend=backend,
+                      context=context)
     if pa.report.errors:
-        raise ValueError(
+        raise PlanRejected(
             "plan rejected by static analysis:\n"
-            + "\n".join(f.render() for f in pa.report.errors))
+            + "\n".join(f.render() for f in pa.report.errors), pa)
     return pa

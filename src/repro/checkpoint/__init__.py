@@ -1,1 +1,2 @@
-from repro.checkpoint.manager import CheckpointManager, save_pytree, load_pytree  # noqa: F401
+from repro.checkpoint.manager import (CheckpointManager, load_pytree,  # noqa: F401
+                                      namespace_path, save_pytree)

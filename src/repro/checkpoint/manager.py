@@ -22,8 +22,10 @@ restart mechanism for cross-validation.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
+import re
 import shutil
 import threading
 
@@ -31,6 +33,28 @@ import jax
 import numpy as np
 
 _SEP = "/"
+
+_SAFE_PART = re.compile(r"[^A-Za-z0-9._-]")
+
+
+def namespace_path(root: str, *parts: str) -> str:
+    """A filesystem-safe subdirectory of ``root`` for the given namespace
+    parts (the daemon keys checkpoints by ``tenant / plan_id``). Each part
+    is sanitized to ``[A-Za-z0-9._-]``; when sanitization changed the
+    part, a short content hash of the ORIGINAL is appended so two
+    distinct raw names that sanitize alike ("a/b" vs "a:b") cannot share
+    a directory — and the mapping is deterministic, so a restarted daemon
+    finds the same directory for the same tenant/plan names."""
+    safe = []
+    for part in parts:
+        part = str(part)
+        if not part or set(part) <= {"."}:
+            raise ValueError(f"namespace part {part!r} is empty or dots-only")
+        clean = _SAFE_PART.sub("_", part)
+        if clean != part:
+            clean += "-" + hashlib.sha1(part.encode()).hexdigest()[:8]
+        safe.append(clean)
+    return os.path.join(root, *safe)
 
 
 def _flatten(tree):
@@ -88,6 +112,16 @@ def load_pytree(path: str, target=None):
 
 
 class CheckpointManager:
+    @classmethod
+    def namespaced(cls, root: str, *parts: str,
+                   max_to_keep: int = 3) -> "CheckpointManager":
+        """Manager over ``namespace_path(root, *parts)`` — one isolated
+        step-number space and retention budget per (tenant, plan): two
+        tenants' studies can both write ``STUDY_BASE + k`` records into
+        one checkpoint root without colliding, and one tenant's snapshot
+        frequency cannot evict another's records."""
+        return cls(namespace_path(root, *parts), max_to_keep=max_to_keep)
+
     def __init__(self, directory: str, max_to_keep: int = 3):
         self.directory = directory
         self.max_to_keep = max_to_keep

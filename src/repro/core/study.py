@@ -48,8 +48,10 @@ surfacing as a drain-time RuntimeError hours into a large study.
 """
 from __future__ import annotations
 
+import base64
 import dataclasses
 import functools
+import math
 import time
 from typing import Any
 
@@ -59,7 +61,8 @@ import numpy as np
 
 from repro.core import seeding
 from repro.svm import shrink as shrink_mod
-from repro.svm.engine import EngineState, finalize
+from repro.svm.engine import (DenseKernel, EngineState, SMOResult,
+                              finalize)
 from repro.svm.scheduler import LanePool
 from repro.svm.sources import KernelSpec, is_factory
 from repro.svm.smo import init_f
@@ -207,6 +210,9 @@ class StudyResult:
     #: compile-shape enumeration, budget feasibility, advisory findings;
     #: None when ``run_plan(..., analysis="off")``
     analysis: Any = None
+    #: fair-share accounting tag the lanes ran under (the daemon sets it
+    #: to the submitting client's tenant id; None for in-process runs)
+    tenant: Any = None
 
 
 @jax.jit
@@ -264,6 +270,249 @@ def _freeze(x):
     """JSON round-trips tuples as lists; lane ids are hashable keys, so
     freeze them back on restore."""
     return tuple(_freeze(v) for v in x) if isinstance(x, list) else x
+
+
+# --------------------------------------------------------------------------
+# Wire serialization: the study-service plan/result format. A Plan is
+# already data (transforms by NAME, checkpoints by lane id), so the wire
+# format is a direct JSON image of the dataclasses, with arrays carried as
+# ``{"__nd__": 1, dtype, shape, data: base64(raw bytes)}`` — an EXACT bit
+# round-trip, which is what lets a served study stay bit-identical to the
+# in-process ``run_plan`` of the same plan. ``plan_from_dict`` is the
+# hostile-input half: it re-freezes ids, and rejects unknown transform
+# names, unknown source kinds and non-finite hyperparameters AT PARSE TIME
+# with the same by-name errors as ``_validate_plan`` — a daemon never
+# holds an unparseable plan object in memory waiting for admission to
+# notice.
+# --------------------------------------------------------------------------
+
+#: the source kinds a wire plan may declare (svm/kernels.py dense kinds
+#: plus the row-streaming Pallas source)
+WIRE_SOURCE_KINDS = ("rbf", "linear", "pallas_rbf")
+
+
+def _nd_to_wire(a) -> dict:
+    a = np.ascontiguousarray(np.asarray(a))
+    return {"__nd__": 1, "dtype": str(a.dtype), "shape": list(a.shape),
+            "data": base64.b64encode(a.tobytes()).decode("ascii")}
+
+
+def _nd_from_wire(d) -> np.ndarray:
+    a = np.frombuffer(base64.b64decode(d["data"]), dtype=np.dtype(d["dtype"]))
+    return a.reshape([int(s) for s in d["shape"]]).copy()
+
+
+def _to_wire(v):
+    """JSON-encodable image of a plan field value: arrays via the nd
+    codec, tuples as lists (re-frozen on parse), numpy scalars unboxed.
+    Python floats survive JSON exactly (shortest-round-trip repr)."""
+    if v is None or isinstance(v, (bool, int, float, str)):
+        return v
+    if isinstance(v, (np.bool_, np.integer, np.floating)):
+        return v.item()
+    if isinstance(v, (np.ndarray, jax.Array)):
+        return _nd_to_wire(v)
+    if isinstance(v, (list, tuple)):
+        return [_to_wire(x) for x in v]
+    if isinstance(v, dict):
+        return {str(k): _to_wire(val) for k, val in v.items()}
+    raise TypeError(f"cannot serialize {type(v).__name__!r} value {v!r}")
+
+
+def _from_wire(v):
+    """Inverse of ``_to_wire``; lists come back as TUPLES (wire lists only
+    occur where hashability matters: ids, params, shrink_caps)."""
+    if isinstance(v, dict):
+        if v.get("__nd__") == 1:
+            return _nd_from_wire(v)
+        return {k: _from_wire(val) for k, val in v.items()}
+    if isinstance(v, list):
+        return tuple(_from_wire(x) for x in v)
+    return v
+
+
+def _check_finite(value, what: str):
+    """Parse-time hyperparameter gate: a NaN/inf C, gamma or tol would
+    pass every structural check and then poison a shared pool's solves."""
+    if value is None:
+        return None
+    value = float(value)
+    if not math.isfinite(value):
+        raise ValueError(f"{what}: non-finite value {value!r}")
+    return value
+
+
+def result_to_dict(r: SMOResult) -> dict:
+    """Wire image of an ``SMOResult`` (bit-exact: arrays via the nd
+    codec, scalars as JSON numbers)."""
+    return {"alpha": _nd_to_wire(r.alpha), "f": _nd_to_wire(r.f),
+            "n_iter": int(r.n_iter), "converged": bool(r.converged),
+            "b_up": float(r.b_up), "b_low": float(r.b_low)}
+
+
+def result_from_dict(d: dict) -> SMOResult:
+    return SMOResult(
+        alpha=jnp.asarray(_nd_from_wire(d["alpha"])),
+        f=jnp.asarray(_nd_from_wire(d["f"])),
+        n_iter=jnp.asarray(int(d["n_iter"]), jnp.int64),
+        converged=jnp.asarray(bool(d["converged"])),
+        b_up=jnp.asarray(float(d["b_up"])),
+        b_low=jnp.asarray(float(d["b_low"])))
+
+
+def _source_to_wire(key, entry) -> dict:
+    if isinstance(entry, KernelSpec):
+        return {"kind_tag": "spec", "X": _nd_to_wire(entry.X),
+                "gamma": float(entry.gamma), "kind": entry.kind,
+                "backend": entry.backend,
+                "n": None if entry.n is None else int(entry.n)}
+    K = getattr(entry, "K", None)
+    if K is not None and not is_factory(entry):
+        return {"kind_tag": "dense", "K": _nd_to_wire(K)}
+    raise TypeError(
+        f"source {key!r}: only KernelSpec and dense-K sources serialize "
+        f"(got {type(entry).__name__!r}) — opaque sources cannot cross "
+        "the wire")
+
+
+def _source_from_wire(key, d: dict):
+    tag = d.get("kind_tag")
+    if tag == "dense":
+        K = jnp.asarray(_nd_from_wire(d["K"]))
+        return DenseKernel(K)
+    if tag != "spec":
+        raise ValueError(f"source {key!r}: unknown source entry tag "
+                         f"{tag!r} (have 'spec', 'dense')")
+    kind = d.get("kind")
+    if kind not in WIRE_SOURCE_KINDS:
+        raise ValueError(f"source {key!r}: unknown source kind {kind!r} "
+                         f"(have {sorted(WIRE_SOURCE_KINDS)})")
+    gamma = _check_finite(d.get("gamma", 1.0), f"source {key!r}: gamma")
+    return KernelSpec(jnp.asarray(_nd_from_wire(d["X"])), gamma=gamma,
+                      kind=kind, backend=d.get("backend", "jnp"),
+                      n=None if d.get("n") is None else int(d["n"]))
+
+
+def plan_to_dict(plan: Plan) -> dict:
+    """JSON-encodable image of a ``Plan``. Source/y keys ride as
+    ``[key, value]`` pairs (JSON objects cannot key by tuple/float);
+    ``plan_from_dict`` re-freezes them."""
+    y = plan.y
+    y_wire = {"__ymap__": 1,
+              "items": [[_to_wire(k), _nd_to_wire(v)]
+                        for k, v in y.items()]} \
+        if isinstance(y, dict) else _nd_to_wire(y)
+    lanes = []
+    for spec in plan.lanes:
+        lanes.append({
+            "id": _to_wire(spec.id), "source": _to_wire(spec.source),
+            "train_mask": None if spec.train_mask is None
+            else _nd_to_wire(spec.train_mask),
+            "C": None if spec.C is None else float(spec.C),
+            "alpha0": None if spec.alpha0 is None
+            else _nd_to_wire(spec.alpha0),
+            "f0": None if spec.f0 is None else _nd_to_wire(spec.f0),
+            "n_iter0": int(spec.n_iter0), "max_iter": int(spec.max_iter),
+            "dep": _to_wire(spec.dep), "transform": spec.transform,
+            "params": _to_wire(dict(spec.params)),
+            "after": _to_wire(spec.after),
+            "result": None if spec.result is None
+            else result_to_dict(spec.result)})
+    return {"__plan__": 1,
+            "sources": [[_to_wire(k), _source_to_wire(k, v)]
+                        for k, v in plan.sources.items()],
+            "y": y_wire,
+            "lanes": lanes,
+            "evals": [[_to_wire(ev.lane), _nd_to_wire(ev.test_idx)]
+                      for ev in plan.evals],
+            "tol": float(plan.tol), "wss": plan.wss,
+            "chunk_iters": int(plan.chunk_iters),
+            "lane_quantum": int(plan.lane_quantum),
+            "max_width": None if plan.max_width is None
+            else int(plan.max_width),
+            "max_resident": int(plan.max_resident),
+            "cache_bytes": int(plan.cache_bytes),
+            "source_backend": plan.source_backend,
+            "shrink_every": plan.shrink_every,
+            "shrink_quantum": int(plan.shrink_quantum),
+            "shrink_caps": _to_wire(plan.shrink_caps),
+            "shrink_on_seed": bool(plan.shrink_on_seed),
+            "sv_eval": bool(plan.sv_eval)}
+
+
+def plan_from_dict(d: dict) -> Plan:
+    """Parse a wire plan, rejecting hostile content at PARSE time: unknown
+    transform names and source kinds, and non-finite hyperparameters (C,
+    gamma, tol) raise the same by-name errors ``_validate_plan`` uses —
+    before any object that could reach a pool exists. Structural rules
+    (edge targets, cycles, duplicate ids) remain ``_validate_plan``'s
+    job; admission calls it via ``check_plan``."""
+    if not isinstance(d, dict) or d.get("__plan__") != 1:
+        raise ValueError("not a wire plan (missing '__plan__': 1)")
+    sources = {}
+    for key_w, entry_w in d.get("sources", ()):
+        key = _from_wire(key_w)
+        if key in sources:
+            raise ValueError(f"duplicate source key {key!r}")
+        sources[key] = _source_from_wire(key, entry_w)
+    y_w = d.get("y")
+    if isinstance(y_w, dict) and y_w.get("__ymap__") == 1:
+        y = {_from_wire(k): jnp.asarray(_nd_from_wire(v))
+             for k, v in y_w["items"]}
+    else:
+        y = jnp.asarray(_nd_from_wire(y_w))
+    tol = _check_finite(d.get("tol", 1e-3), "tol")
+    if tol <= 0:
+        raise ValueError(f"tol: non-positive value {tol!r}")
+    lanes = []
+    for lw in d.get("lanes", ()):
+        lid = _from_wire(lw.get("id"))
+        transform = lw.get("transform")
+        if transform is not None and transform not in seeding.TRANSFORMS:
+            raise ValueError(f"lane {lid!r}: unknown transform "
+                             f"{transform!r} (have "
+                             f"{sorted(seeding.TRANSFORMS)})")
+        C = _check_finite(lw.get("C"), f"lane {lid!r}: C")
+        params = _from_wire(lw.get("params") or {})
+        for pk, pv in params.items():
+            if isinstance(pv, float):
+                _check_finite(pv, f"lane {lid!r}: params[{pk!r}]")
+        lanes.append(LaneSpec(
+            id=lid, source=_from_wire(lw.get("source")),
+            train_mask=None if lw.get("train_mask") is None
+            else jnp.asarray(_nd_from_wire(lw["train_mask"])),
+            C=C,
+            alpha0=None if lw.get("alpha0") is None
+            else jnp.asarray(_nd_from_wire(lw["alpha0"])),
+            f0=None if lw.get("f0") is None
+            else jnp.asarray(_nd_from_wire(lw["f0"])),
+            n_iter0=int(lw.get("n_iter0", 0)),
+            max_iter=int(lw.get("max_iter", 10_000_000)),
+            dep=_from_wire(lw.get("dep")), transform=transform,
+            params=params, after=_from_wire(lw.get("after")),
+            result=None if lw.get("result") is None
+            else result_from_dict(lw["result"])))
+    evals = [EvalSpec(_from_wire(lane_w),
+                      jnp.asarray(_nd_from_wire(idx_w)))
+             for lane_w, idx_w in d.get("evals", ())]
+    shrink_every = d.get("shrink_every", 0)
+    if shrink_every != "auto":
+        shrink_every = int(shrink_every)
+    caps = _from_wire(d.get("shrink_caps"))
+    return Plan(sources=sources, y=y, lanes=lanes, evals=evals,
+                tol=tol, wss=str(d.get("wss", "2")),
+                chunk_iters=int(d.get("chunk_iters", 4096)),
+                lane_quantum=int(d.get("lane_quantum", 4)),
+                max_width=None if d.get("max_width") is None
+                else int(d["max_width"]),
+                max_resident=int(d.get("max_resident", 0)),
+                cache_bytes=int(d.get("cache_bytes", 0)),
+                source_backend=str(d.get("source_backend", "dense")),
+                shrink_every=shrink_every,
+                shrink_quantum=int(d.get("shrink_quantum", 128)),
+                shrink_caps=caps,
+                shrink_on_seed=bool(d.get("shrink_on_seed", True)),
+                sv_eval=bool(d.get("sv_eval", False)))
 
 
 def _make_seed_fn(plan: Plan, spec: LaneSpec, resolve):
@@ -398,115 +647,68 @@ def resolve_source_backend(plan: Plan) -> Plan:
     return plan
 
 
-def run_plan(plan: Plan, *, checkpoint: StudyCheckpoint | None = None,
-             on_result=None, on_lane_chunk=None,
-             analysis: str = "advisory") -> StudyResult:
-    """Execute a ``Plan`` on one multi-source ``LanePool``.
-
-    ``on_result(lane_id, result)`` streams each lane's ``SMOResult`` the
-    moment it retires (long studies consume results without waiting for
-    the pool to drain); ``on_lane_chunk(lane_id, state)`` observes every
-    live lane between its chunks (the per-lane checkpoint hook legacy
-    drivers use for their own record formats).
-
-    With ``checkpoint``, the newest committed study record is restored
-    first (identity verified against ``checkpoint.meta``): lanes found
-    ``done`` re-enter as results, live lanes resume their exact iterate
-    sequence, and pending lanes re-derive their seeds from the restored
-    results — bit-identical to the uninterrupted run, under ANY schedule
-    shape on either side of the crash.
-
-    ``analysis`` wires the static plan analyzer
-    (``repro.analysis.plan_check``): ``"advisory"`` (default) attaches
-    the pre-execution report to ``StudyResult.analysis``; ``"strict"``
-    raises on error-severity findings (budget-infeasible sources,
-    checkpoint key collisions) BEFORE anything dispatches — the same
-    gate a plan-admitting daemon calls; ``"off"`` skips it.
-    """
-    if analysis not in ("advisory", "strict", "off"):
-        raise ValueError(f"unknown analysis mode {analysis!r} "
-                         "(have 'advisory', 'strict', 'off')")
-    plan = resolve_source_backend(plan)
-
+def plan_specs(plan: Plan) -> dict:
+    """``{lane_id: LaneSpec}`` with the duplicate-id check — the one
+    spec index ``run_plan`` and the study daemon both build."""
     specs: dict[Any, LaneSpec] = {}
     for spec in plan.lanes:
         if spec.id in specs:
             raise ValueError(f"duplicate lane id {spec.id!r}")
         specs[spec.id] = spec
-    _validate_plan(plan, specs)
+    return specs
 
-    plan_analysis = None
-    if analysis != "off":
-        # deferred import: plan_check imports this module for the
-        # validation surface and STUDY_BASE
-        from repro.analysis import plan_check
-        if analysis == "strict":
-            plan_analysis = plan_check.check_plan(plan,
-                                                  checkpoint=checkpoint)
-        else:
-            plan_analysis = plan_check.analyze_plan(plan,
-                                                    checkpoint=checkpoint)
 
+def restore_study_lanes(checkpoint: StudyCheckpoint | None):
+    """Load the newest committed study record (identity verified against
+    ``checkpoint.meta``): returns ``(step0, {lane_id: (alpha, f, n_iter,
+    done, shrink0)})`` — empty when there is nothing to resume. Factored
+    out of ``run_plan`` so the daemon resumes a killed study through the
+    exact code path the in-process API uses."""
     restored: dict[Any, tuple] = {}
     step0 = 0
-    if checkpoint is not None:
-        snap = checkpoint.manager.restore_latest_of_class(
-            checkpoint.retain_class)
-        if snap is not None:
-            step0, tree, extra = snap
-            want = {"phase": checkpoint.phase, **checkpoint.meta}
-            got = {key: extra.get(key) for key in want}
-            if got != want:
-                raise ValueError(
-                    f"checkpoint at step {step0} belongs to run {got}, "
-                    f"cannot resume it as {want}; point the manager at a "
-                    "fresh directory or delete the stale checkpoints")
-            for i, lid in enumerate(extra["lane_ids"]):
-                # the shrink ledger rides along when the snapshotting pool
-                # had shrinking on (absent in legacy/shrink-off snapshots):
-                # a mid-shrink lane re-enters its exact compact bucket
-                shrink0 = None
-                if "active" in tree:
-                    shrink0 = (
-                        jnp.asarray(tree["active"][i])
-                        if bool(tree["shrunk"][i]) else None,
-                        bool(tree["no_shrink"][i]),
-                        int(tree["unshrinks"][i]))
-                restored[_freeze(lid)] = (
-                    jnp.asarray(tree["alpha"][i]), jnp.asarray(tree["f"][i]),
-                    int(tree["n_iter"][i]), bool(tree["done"][i]), shrink0)
+    if checkpoint is None:
+        return step0, restored
+    snap = checkpoint.manager.restore_latest_of_class(
+        checkpoint.retain_class)
+    if snap is None:
+        return step0, restored
+    step0, tree, extra = snap
+    want = {"phase": checkpoint.phase, **checkpoint.meta}
+    got = {key: extra.get(key) for key in want}
+    if got != want:
+        raise ValueError(
+            f"checkpoint at step {step0} belongs to run {got}, "
+            f"cannot resume it as {want}; point the manager at a "
+            "fresh directory or delete the stale checkpoints")
+    for i, lid in enumerate(extra["lane_ids"]):
+        # the shrink ledger rides along when the snapshotting pool
+        # had shrinking on (absent in legacy/shrink-off snapshots):
+        # a mid-shrink lane re-enters its exact compact bucket
+        shrink0 = None
+        if "active" in tree:
+            shrink0 = (
+                jnp.asarray(tree["active"][i])
+                if bool(tree["shrunk"][i]) else None,
+                bool(tree["no_shrink"][i]),
+                int(tree["unshrinks"][i]))
+        restored[_freeze(lid)] = (
+            jnp.asarray(tree["alpha"][i]), jnp.asarray(tree["f"][i]),
+            int(tree["n_iter"][i]), bool(tree["done"][i]), shrink0)
+    return step0, restored
 
-    on_snapshot = None
-    if checkpoint is not None:
-        counter = {"c": max(step0, checkpoint.base_step)}
 
-        def on_snapshot(pool):
-            counter["c"] += 1
-            lane_ids, tree = pool.snapshot_lanes()
-            checkpoint.manager.save(
-                counter["c"], tree,
-                extra_meta={"phase": checkpoint.phase, "lane_ids": lane_ids,
-                            **checkpoint.meta},
-                blocking=False, retain_class=checkpoint.retain_class)
-
-    pool = LanePool(plan.sources, plan.y, tol=plan.tol, wss=plan.wss,
-                    chunk_iters=plan.chunk_iters,
-                    lane_quantum=plan.lane_quantum, max_width=plan.max_width,
-                    max_resident=plan.max_resident,
-                    cache_bytes=plan.cache_bytes,
-                    on_snapshot=on_snapshot,
-                    snapshot_every=checkpoint.every if checkpoint else 1,
-                    on_result=on_result, on_lane_chunk=on_lane_chunk,
-                    shrink_every=plan.shrink_every,
-                    shrink_quantum=plan.shrink_quantum,
-                    shrink_caps=plan.shrink_caps,
-                    shrink_on_seed=plan.shrink_on_seed)
-
+def enroll_plan_lanes(pool: LanePool, plan: Plan, specs: dict,
+                      restored: dict, *, tenant=None) -> set:
+    """Register every plan lane with ``pool`` — given results directly,
+    restored lanes from their snapshot state, dependent lanes with their
+    lazy seed closure. Returns the ids that entered pre-solved. The plan
+    must already be validated and its sources present in the pool (the
+    daemon admits sources separately, under dedup)."""
     pre_done: set = set()
     for spec in plan.lanes:
         key = plan.source_key_of(spec) if spec.result is None else None
         if spec.result is not None:
-            pool.add_result(spec.id, spec.result)
+            pool.add_result(spec.id, spec.result, tenant=tenant)
             pre_done.add(spec.id)
         elif spec.id in restored:
             alpha, f, n_it, done, shrink0 = restored[spec.id]
@@ -517,52 +719,40 @@ def run_plan(plan: Plan, *, checkpoint: StudyCheckpoint | None = None,
                 state = EngineState(alpha, f, jnp.asarray(n_it, jnp.int64),
                                     jnp.ones((), bool))
                 pool.add_result(spec.id, finalize(
-                    state, plan.y_of(key), spec.train_mask, spec.C, plan.tol))
+                    state, plan.y_of(key), spec.train_mask, spec.C,
+                    plan.tol), tenant=tenant)
                 pre_done.add(spec.id)
             else:
                 # mid-flight at the crash: it was already admitted, so its
                 # plan-declared edges are history — resume the state as-is
                 pool.add(spec.id, spec.train_mask, spec.C, alpha, f,
                          source=key, n_iter0=n_it, max_iter=spec.max_iter,
-                         shrink0=shrink0)
+                         shrink0=shrink0, tenant=tenant)
         elif spec.dep is not None:
             pool.add(spec.id, spec.train_mask, spec.C, source=key,
                      dep=spec.dep,
                      seed_fn=_make_seed_fn(plan, spec, pool.resolve_source),
-                     max_iter=spec.max_iter, after=spec.after)
+                     max_iter=spec.max_iter, after=spec.after, tenant=tenant)
         else:
             pool.add(spec.id, spec.train_mask, spec.C, spec.alpha0, spec.f0,
                      source=key, n_iter0=spec.n_iter0,
-                     max_iter=spec.max_iter, after=spec.after)
+                     max_iter=spec.max_iter, after=spec.after, tenant=tenant)
+    return pre_done
 
-    t0 = time.perf_counter()
-    kt0 = pool.cache.kernel_time
-    results = pool.run()
-    jax.block_until_ready([results[s.id].alpha for s in plan.lanes])
-    # kernel materializations during the run are attributed to the cache's
-    # kernel_time (source_stats), not to seed or solve time
-    wall = (time.perf_counter() - t0) - (pool.cache.kernel_time - kt0)
-    if checkpoint is not None:
-        checkpoint.manager.wait()
 
-    stats = {}
-    for spec in plan.lanes:
-        res = results[spec.id]
-        seed_s, solve_s = pool.lane_times(spec.id)
-        stats[spec.id] = LaneStat(
-            n_iter=int(res.n_iter), converged=bool(res.converged),
-            seed_s=seed_s, solve_s=solve_s, restored=spec.id in pre_done)
-
-    # ---- evaluations: one jitted program per (source, test-size) group ----
+def run_plan_evals(pool: LanePool, plan: Plan, specs: dict,
+                   results: dict) -> dict:
+    """The plan's held-out evaluations: one jitted program per
+    (source, test-size) group. Same-source groups run back-to-back,
+    resident sources first, so a budgeted cache re-materializes each
+    remaining source at most once (the residency snapshot is taken
+    before any eval materializes)."""
     evals: dict[Any, tuple[int, int]] = {}
     groups: dict[tuple, list[EvalSpec]] = {}
     for ev in plan.evals:
         spec = specs[ev.lane]
         t_sz = int(np.asarray(ev.test_idx).shape[0])
         groups.setdefault((plan.source_key_of(spec), t_sz), []).append(ev)
-    # same-source groups run back-to-back, resident sources first, so a
-    # budgeted cache re-materializes each remaining source at most once
-    # here (the residency snapshot is taken before any eval materializes)
     order0 = {}
     for key, _ in groups:
         order0.setdefault(key, len(order0))
@@ -610,10 +800,107 @@ def run_plan(plan: Plan, *, checkpoint: StudyCheckpoint | None = None,
                     _eval_lanes_jit(K, y, test_idx, masks, Cs, res))
         for ev, c in zip(evs, correct):
             evals[ev.lane] = (int(c), t_sz)
+    return evals
+
+
+def run_plan(plan: Plan, *, checkpoint: StudyCheckpoint | None = None,
+             on_result=None, on_lane_chunk=None,
+             analysis: str = "advisory", tenant=None) -> StudyResult:
+    """Execute a ``Plan`` on one multi-source ``LanePool``.
+
+    ``on_result(lane_id, result)`` streams each lane's ``SMOResult`` the
+    moment it retires (long studies consume results without waiting for
+    the pool to drain); ``on_lane_chunk(lane_id, state)`` observes every
+    live lane between its chunks (the per-lane checkpoint hook legacy
+    drivers use for their own record formats).
+
+    With ``checkpoint``, the newest committed study record is restored
+    first (identity verified against ``checkpoint.meta``): lanes found
+    ``done`` re-enter as results, live lanes resume their exact iterate
+    sequence, and pending lanes re-derive their seeds from the restored
+    results — bit-identical to the uninterrupted run, under ANY schedule
+    shape on either side of the crash.
+
+    ``analysis`` wires the static plan analyzer
+    (``repro.analysis.plan_check``): ``"advisory"`` (default) attaches
+    the pre-execution report to ``StudyResult.analysis``; ``"strict"``
+    raises on error-severity findings (budget-infeasible sources,
+    checkpoint key collisions) BEFORE anything dispatches — the same
+    gate a plan-admitting daemon calls; ``"off"`` skips it.
+    """
+    if analysis not in ("advisory", "strict", "off"):
+        raise ValueError(f"unknown analysis mode {analysis!r} "
+                         "(have 'advisory', 'strict', 'off')")
+    plan = resolve_source_backend(plan)
+
+    specs = plan_specs(plan)
+    _validate_plan(plan, specs)
+
+    plan_analysis = None
+    if analysis != "off":
+        # deferred import: plan_check imports this module for the
+        # validation surface and STUDY_BASE
+        from repro.analysis import plan_check
+        if analysis == "strict":
+            plan_analysis = plan_check.check_plan(plan,
+                                                  checkpoint=checkpoint)
+        else:
+            plan_analysis = plan_check.analyze_plan(plan,
+                                                    checkpoint=checkpoint)
+
+    step0, restored = restore_study_lanes(checkpoint)
+
+    on_snapshot = None
+    if checkpoint is not None:
+        counter = {"c": max(step0, checkpoint.base_step)}
+
+        def on_snapshot(pool):
+            counter["c"] += 1
+            lane_ids, tree = pool.snapshot_lanes()
+            checkpoint.manager.save(
+                counter["c"], tree,
+                extra_meta={"phase": checkpoint.phase, "lane_ids": lane_ids,
+                            **checkpoint.meta},
+                blocking=False, retain_class=checkpoint.retain_class)
+
+    pool = LanePool(plan.sources, plan.y, tol=plan.tol, wss=plan.wss,
+                    chunk_iters=plan.chunk_iters,
+                    lane_quantum=plan.lane_quantum, max_width=plan.max_width,
+                    max_resident=plan.max_resident,
+                    cache_bytes=plan.cache_bytes,
+                    on_snapshot=on_snapshot,
+                    snapshot_every=checkpoint.every if checkpoint else 1,
+                    on_result=on_result, on_lane_chunk=on_lane_chunk,
+                    shrink_every=plan.shrink_every,
+                    shrink_quantum=plan.shrink_quantum,
+                    shrink_caps=plan.shrink_caps,
+                    shrink_on_seed=plan.shrink_on_seed)
+
+    pre_done = enroll_plan_lanes(pool, plan, specs, restored, tenant=tenant)
+
+    t0 = time.perf_counter()
+    kt0 = pool.cache.kernel_time
+    results = pool.run()
+    jax.block_until_ready([results[s.id].alpha for s in plan.lanes])
+    # kernel materializations during the run are attributed to the cache's
+    # kernel_time (source_stats), not to seed or solve time
+    wall = (time.perf_counter() - t0) - (pool.cache.kernel_time - kt0)
+    if checkpoint is not None:
+        checkpoint.manager.wait()
+
+    stats = {}
+    for spec in plan.lanes:
+        res = results[spec.id]
+        seed_s, solve_s = pool.lane_times(spec.id)
+        stats[spec.id] = LaneStat(
+            n_iter=int(res.n_iter), converged=bool(res.converged),
+            seed_s=seed_s, solve_s=solve_s, restored=spec.id in pre_done)
+
+    evals = run_plan_evals(pool, plan, specs, results)
 
     return StudyResult(results=results, stats=stats, evals=evals,
                        occupancy=pool.occupancy, seed_time=pool.seed_time,
                        solve_time=wall - pool.seed_time,
                        restored=frozenset(pre_done),
                        source_stats=pool.cache.stats,
-                       analysis=plan_analysis)
+                       analysis=plan_analysis, tenant=tenant)

@@ -1,0 +1,9 @@
+"""The study service: a long-lived multi-tenant ``LanePool`` daemon.
+
+``server`` is the daemon (``StudyService`` core + ``StudyServer`` socket
+front end), ``client`` the tenant-side API, ``protocol`` the JSON-lines
+wire format. See DESIGN.md §Study service.
+"""
+from repro.service.client import (PlanRejectedByServer,  # noqa: F401
+                                  ServedStudy, StudyClient)
+from repro.service.server import StudyServer, StudyService  # noqa: F401

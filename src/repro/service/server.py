@@ -1,0 +1,582 @@
+"""The study daemon: one shared ``LanePool`` serving many tenants.
+
+Two layers, so the scheduling core is testable without sockets:
+
+* :class:`StudyService` — the transport-agnostic daemon core. It owns ONE
+  ``LanePool`` + ``SourceCache`` for its whole lifetime and a single
+  **service thread** that does ALL jax work: plan parsing, admission,
+  lane enrollment, chunk dispatch (``pool.step()``), evaluations,
+  snapshots. Callers hand it closures via :meth:`enqueue`; transport
+  threads never touch the pool. Per submission the service:
+
+  1. parses the wire plan (``plan_from_dict`` — hostile content dies at
+     parse), holds it to the pool's **result-affecting contract** (tol,
+     wss, shrink settings must match; schedule-only knobs — chunk size,
+     quantum, width, budgets — are normalized to the pool's, which the
+     bit-parity invariant makes safe), and runs
+     ``repro.analysis.plan_check.check_plan`` VERBATIM — budget
+     feasibility against the pool's declared budget, checkpoint-range
+     audit, compile-shape enumeration — before any kernel materializes.
+     Daemon policy additionally hardens the ``recompile-storm`` warning
+     into a rejection: one tenant must not inject an unbounded program
+     set into the shared jit cache. Rejections carry the structured
+     findings on the wire (``PlanRejected.analysis``).
+  2. **namespaces** the admitted plan: lane ids become
+     ``("tenant/plan_id", original_id)`` and source keys are replaced by
+     content-identity keys (below), so many tenants' graphs coexist in
+     one pool without collisions and the whole in-process enrollment
+     path (``enroll_plan_lanes``) is reused unchanged.
+  3. **dedups kernel sources across tenants**: ``sources.source_identity``
+     digests (kind, gamma, backend, n, dtype, X bytes, y bytes) — equal
+     identity means the same kernel values AND the same labels, so both
+     tenants' lanes read one resident kernel. The pool key IS a digest of
+     the identity, so it is deterministic across daemon restarts.
+     Refcounted per study; a drained study's sources leave the pool when
+     the last reference drops.
+  4. streams ``result`` events as lanes retire (the pool's ``on_result``
+     routed by namespace), snapshots each study's lanes every
+     ``snapshot_every`` chunks into a per-(tenant, plan) namespaced
+     checkpoint directory (``CheckpointManager.namespaced``), and on
+     completion runs the plan's evals, emits ``done``, and removes the
+     study's lanes/sources from the pool.
+
+  Fairness is the pool's: lanes are tagged with their tenant and the
+  width-capped selection round-robins tenants (``LanePool._cap_select``),
+  least-served first.
+
+* :class:`StudyServer` — the AF_UNIX JSON-lines front end
+  (``protocol.py``). One handler thread per connection does framing only;
+  every reply and event a submission produces is emitted from the service
+  thread through the connection's write lock. ``shutdown`` drains
+  gracefully: in-flight studies flush a final snapshot and the daemon
+  exits — a client resubmitting the same (tenant, plan_id) against a
+  restarted daemon resumes bit-identically, under ANY schedule shape
+  (test_service.py's kill/restart test changes the width).
+
+A submission that dies mid-flight on a daemon KILLED without drain is
+covered by the periodic snapshots: restart + resubmit restores every
+retired lane and resumes live ones from their last chunk boundary.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+import queue
+import socket
+import threading
+import traceback
+from typing import Any
+
+from repro.analysis import plan_check
+from repro.service import protocol
+from repro.checkpoint import CheckpointManager
+from repro.core import study as study_mod
+from repro.svm.scheduler import LanePool
+from repro.svm.sources import source_identity
+
+#: result-affecting plan fields that must MATCH the pool (a lane's
+#: iterate sequence depends on them — serving a mismatched plan would
+#: silently return different bits than the client's own run_plan)
+CONTRACT_FIELDS = ("tol", "wss", "shrink_every", "shrink_quantum",
+                   "shrink_caps", "shrink_on_seed")
+
+
+@dataclasses.dataclass
+class _Study:
+    """One admitted submission: the namespaced plan plus routing state."""
+    tenant: str
+    plan_id: str
+    ns: str
+    plan: Any                       # namespaced Plan
+    specs: dict                     # namespaced {lane_id: LaneSpec}
+    emit: Any                       # callable(dict) -> None (wire events)
+    lane_ids: set                   # namespaced ids, all lanes
+    remaining: set                  # not yet retired
+    source_keys: tuple              # distinct pool keys this study refs
+    checkpoint: Any                 # StudyCheckpoint | None
+    step: int                       # next snapshot step number
+    dedup_hits: int
+    restored: frozenset = frozenset()
+
+
+class StudyService:
+    """Transport-agnostic daemon core; see the module docstring."""
+
+    def __init__(self, *, tol: float = 1e-3, wss: str = "2",
+                 chunk_iters: int = 4096, lane_quantum: int = 4,
+                 max_width: int | None = None, max_resident: int = 0,
+                 cache_bytes: int = 0, shrink_every: int = 0,
+                 shrink_quantum: int = 128, shrink_caps=None,
+                 shrink_on_seed: bool = True,
+                 checkpoint_root: str | None = None,
+                 snapshot_every: int = 1, max_to_keep: int = 3):
+        self.pool = LanePool(
+            {}, {}, tol=tol, wss=wss, chunk_iters=chunk_iters,
+            lane_quantum=lane_quantum, max_width=max_width,
+            max_resident=max_resident, cache_bytes=cache_bytes,
+            shrink_every=shrink_every, shrink_quantum=shrink_quantum,
+            shrink_caps=shrink_caps, shrink_on_seed=shrink_on_seed,
+            on_result=self._route_result)
+        self.checkpoint_root = checkpoint_root
+        self.snapshot_every = max(int(snapshot_every), 1)
+        self.max_to_keep = int(max_to_keep)
+        self._studies: dict[str, _Study] = {}
+        self._ident_to_key: dict = {}     # source identity -> pool key
+        self._key_ident: dict = {}        # pool key -> identity
+        self._key_refs: dict = {}         # pool key -> study refcount
+        self._cmds: queue.Queue = queue.Queue()
+        self._wake = threading.Event()
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------ lifecycle
+
+    def start(self) -> None:
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def enqueue(self, fn) -> None:
+        """Hand a closure to the service thread (the ONLY thread that may
+        touch the pool)."""
+        self._cmds.put(fn)
+        self._wake.set()
+
+    def request_stop(self) -> None:
+        self._stop.set()
+        self._wake.set()
+
+    def join(self, timeout: float | None = None) -> None:
+        if self._thread is not None:
+            self._thread.join(timeout)
+
+    def _loop(self) -> None:
+        while True:
+            while True:
+                try:
+                    fn = self._cmds.get_nowait()
+                except queue.Empty:
+                    break
+                try:
+                    fn()
+                except Exception:       # a command must not kill the daemon
+                    traceback.print_exc()
+            if self._stop.is_set():
+                break
+            try:
+                progressed = self.pool.step()
+            except Exception:
+                # a dispatch failure poisons the shared pool — fail the
+                # in-flight studies on the wire and stop (their periodic
+                # snapshots resume them on the next daemon start)
+                traceback.print_exc()
+                self._fail_active("pool dispatch error:\n"
+                                  + traceback.format_exc(limit=3))
+                self._stop.set()
+                progressed = False
+            if progressed:
+                self._snapshot_tick()
+            self._finish_ready()
+            if not progressed and self._cmds.empty():
+                self._wake.wait(0.02)
+                self._wake.clear()
+        # graceful drain: every in-flight study flushes a snapshot so a
+        # restarted daemon resumes it bit-identically
+        for st in list(self._studies.values()):
+            if st.checkpoint is not None:
+                self._snapshot(st)
+                st.checkpoint.manager.wait()
+
+    # ------------------------------------------------------------ admission
+
+    def pool_contract(self) -> dict:
+        """The result-affecting contract + schedule shape, for ``hello``."""
+        return {"tol": float(self.pool.tol), "wss": self.pool.wss,
+                "shrink_every": self.pool.shrink_every,
+                "shrink_quantum": self.pool.shrink_quantum,
+                "shrink_caps": list(self.pool.shrink_caps or ()) or None,
+                "shrink_on_seed": self.pool.shrink_on_seed,
+                "chunk_iters": self.pool.chunk_iters,
+                "lane_quantum": self.pool.lane_quantum,
+                "max_width": self.pool.max_width,
+                "max_resident": self.pool.cache.max_resident,
+                "cache_bytes": self.pool.cache.cache_bytes}
+
+    def _check_contract(self, plan) -> None:
+        if plan.shrink_every == "auto":
+            raise ValueError(
+                "shrink_every='auto' resolves against the CLIENT's cost "
+                "model; a served plan must pin the pool's value "
+                f"(shrink_every={self.pool.shrink_every})")
+        pool_vals = {"tol": float(self.pool.tol), "wss": self.pool.wss,
+                     "shrink_every": self.pool.shrink_every,
+                     "shrink_quantum": self.pool.shrink_quantum,
+                     "shrink_caps": self.pool.shrink_caps,
+                     "shrink_on_seed": self.pool.shrink_on_seed}
+        plan_vals = {"tol": float(plan.tol), "wss": plan.wss,
+                     "shrink_every": int(plan.shrink_every),
+                     "shrink_quantum": int(plan.shrink_quantum),
+                     "shrink_caps": tuple(int(c) for c in plan.shrink_caps)
+                     if plan.shrink_caps else None,
+                     "shrink_on_seed": bool(plan.shrink_on_seed)}
+        if not pool_vals["shrink_every"] and not plan_vals["shrink_every"]:
+            # shrink sub-knobs are inert when shrinking is off on both
+            for k in ("shrink_quantum", "shrink_caps", "shrink_on_seed"):
+                plan_vals[k] = pool_vals[k]
+        bad = [f"{k}: plan {plan_vals[k]!r} != pool {pool_vals[k]!r}"
+               for k in CONTRACT_FIELDS if plan_vals[k] != pool_vals[k]]
+        if bad:
+            raise ValueError(
+                "plan/pool contract mismatch (these change the iterate "
+                "sequence — a served run must be bit-identical to the "
+                "client's own): " + "; ".join(bad))
+
+    def _checkpoint_for(self, tenant: str, plan_id: str, plan):
+        if not self.checkpoint_root:
+            return None
+        mgr = CheckpointManager.namespaced(
+            self.checkpoint_root, tenant, plan_id,
+            max_to_keep=self.max_to_keep)
+        return study_mod.StudyCheckpoint(
+            manager=mgr, every=self.snapshot_every,
+            meta={"study": f"{tenant}/{plan_id}", "tol": float(plan.tol),
+                  "wss": plan.wss})
+
+    def submit(self, tenant: str, plan_id: str, plan_dict, emit) -> None:
+        """Admission gate + enrollment; SERVICE THREAD ONLY. Emits exactly
+        one of: ``rejected`` (nothing entered the pool), or ``admitted``
+        followed by the study's event stream."""
+        ns = f"{tenant}/{plan_id}"
+        try:
+            if ns in self._studies:
+                raise ValueError(f"study {ns!r} is already in flight")
+            plan = study_mod.plan_from_dict(plan_dict)
+            plan = study_mod.resolve_source_backend(plan)
+            self._check_contract(plan)
+            # schedule-only knobs are the POOL's (bit-parity makes the
+            # schedule shape free); the budget the analyzer audits is the
+            # pool's real budget, not the client's wish
+            plan = dataclasses.replace(
+                plan, chunk_iters=self.pool.chunk_iters,
+                lane_quantum=self.pool.lane_quantum,
+                max_width=self.pool.max_width,
+                max_resident=self.pool.cache.max_resident,
+                cache_bytes=self.pool.cache.cache_bytes)
+            ckpt = self._checkpoint_for(tenant, plan_id, plan)
+            # THE admission gate (ROADMAP: "call it verbatim"): rejects
+            # invalid graphs, budget-infeasible sources, colliding
+            # checkpoint ranges — before any kernel materializes
+            pa = plan_check.check_plan(plan, checkpoint=ckpt, context=ns)
+            storms = [f for f in pa.report if f.rule == "recompile-storm"]
+            if storms:
+                # daemon policy: the warning becomes a rejection — the jit
+                # cache is shared, a storm taxes every tenant
+                raise plan_check.PlanRejected(
+                    "daemon policy rejects compile-storm plans:\n"
+                    + "\n".join(f.render() for f in storms), pa)
+        except plan_check.PlanRejected as e:
+            emit({"type": "rejected", "plan_id": plan_id, "error": str(e),
+                  "findings": e.analysis.report.to_json()["findings"]})
+            return
+        except (ValueError, TypeError, KeyError) as e:
+            emit({"type": "rejected", "plan_id": plan_id, "error": str(e),
+                  "findings": []})
+            return
+
+        ns_plan, key_map, dedup_hits, new_keys = self._namespace(ns, plan)
+        specs = study_mod.plan_specs(ns_plan)
+        step0, restored = study_mod.restore_study_lanes(ckpt)
+        pre_done = study_mod.enroll_plan_lanes(
+            self.pool, ns_plan, specs, restored, tenant=tenant)
+        lane_ids = set(specs)
+        st = _Study(
+            tenant=tenant, plan_id=plan_id, ns=ns, plan=ns_plan,
+            specs=specs, emit=emit, lane_ids=lane_ids,
+            remaining=lane_ids - pre_done,
+            source_keys=tuple(dict.fromkeys(key_map.values())),
+            checkpoint=ckpt,
+            step=max(step0, study_mod.STUDY_BASE),
+            dedup_hits=dedup_hits, restored=frozenset(pre_done))
+        self._studies[ns] = st
+        emit({"type": "admitted", "plan_id": plan_id,
+              "lanes": len(lane_ids), "restored": len(pre_done),
+              "dedup_hits": dedup_hits,
+              "sources_admitted": len(new_keys),
+              "analysis": {"program_count": pa.program_count,
+                           "max_width": pa.max_width}})
+        for spec in ns_plan.lanes:       # restored-done results, in order
+            if spec.id in pre_done:
+                self._emit_result(st, spec.id, self.pool.results[spec.id])
+        self._wake.set()
+
+    def _namespace(self, ns: str, plan):
+        """Rewrite a validated plan for the shared pool: lane ids become
+        ``(ns, orig)``, source keys become content-identity digests
+        (dedup'd against every resident study), y becomes per-key."""
+        key_map: dict = {}
+        ys: dict = {}
+        sources: dict = {}
+        dedup_hits, new_keys = 0, []
+        for okey, entry in plan.sources.items():
+            y = plan.y_of(okey)
+            ident = source_identity(entry, y)
+            pkey = self._ident_to_key.get(ident) if ident is not None \
+                else None
+            if pkey is not None:
+                if pkey not in key_map.values():
+                    dedup_hits += 1
+            else:
+                digest = hashlib.sha1(repr(ident).encode()).hexdigest() \
+                    if ident is not None else hashlib.sha1(
+                        f"{ns}:{okey!r}".encode()).hexdigest()
+                pkey = ("src", digest[:16])
+                self.pool.add_source(pkey, entry, y)
+                if ident is not None:
+                    self._ident_to_key[ident] = pkey
+                    self._key_ident[pkey] = ident
+                new_keys.append(pkey)
+            key_map[okey] = pkey
+            sources[pkey] = self.pool.sources[pkey]
+            ys[pkey] = self.pool.y_of(pkey)
+        for pkey in dict.fromkeys(key_map.values()):
+            self._key_refs[pkey] = self._key_refs.get(pkey, 0) + 1
+        lanes = [dataclasses.replace(
+            spec, id=(ns, spec.id),
+            source=None if spec.result is not None
+            else key_map[plan.source_key_of(spec)],
+            dep=None if spec.dep is None else (ns, spec.dep),
+            after=None if spec.after is None else (ns, spec.after))
+            for spec in plan.lanes]
+        evals = [study_mod.EvalSpec((ns, ev.lane), ev.test_idx)
+                 for ev in plan.evals]
+        ns_plan = dataclasses.replace(plan, sources=sources, y=ys,
+                                      lanes=lanes, evals=evals)
+        return ns_plan, key_map, dedup_hits, new_keys
+
+    # ------------------------------------------------------------- events
+
+    def _emit_result(self, st: _Study, lane_id, result) -> None:
+        st.remaining.discard(lane_id)
+        _, orig = lane_id
+        st.emit({"type": "result", "plan_id": st.plan_id,
+                 "lane": study_mod._to_wire(orig),
+                 "result": study_mod.result_to_dict(result)})
+
+    def _route_result(self, lane_id, result) -> None:
+        """Pool ``on_result`` hook: fan a retirement out to its study."""
+        st = self._studies.get(lane_id[0] if isinstance(lane_id, tuple)
+                               else None)
+        if st is not None and lane_id in st.lane_ids:
+            self._emit_result(st, lane_id, result)
+
+    def _finish_ready(self) -> None:
+        for ns in list(self._studies):
+            st = self._studies[ns]
+            if st.remaining:
+                continue
+            results = {lid: self.pool.results[lid] for lid in st.lane_ids}
+            try:
+                evals = study_mod.run_plan_evals(
+                    self.pool, st.plan, st.specs, results)
+            except Exception as e:
+                st.emit({"type": "error", "plan_id": st.plan_id,
+                         "error": f"evaluation failed: {e}"})
+                evals = {}
+            if st.checkpoint is not None:
+                # final flush: resubmitting this (tenant, plan_id) later
+                # restores every lane pre-solved
+                self._snapshot(st)
+                st.checkpoint.manager.wait()
+            tstats = self.pool.tenant_stats().get(st.tenant, {})
+            st.emit({"type": "done", "plan_id": st.plan_id,
+                     "evals": [[study_mod._to_wire(lid[1]),
+                                [int(c), int(t)]]
+                               for lid, (c, t) in evals.items()],
+                     "restored": [study_mod._to_wire(lid[1])
+                                  for lid in sorted_wire(st.restored)],
+                     "study_source_stats": {
+                         "dedup_hits": st.dedup_hits,
+                         "sources_admitted": len(st.source_keys)
+                         - st.dedup_hits},
+                     "source_stats": dict(self.pool.cache.stats),
+                     "tenant_stats": tstats})
+            self._cleanup(st)
+
+    def _cleanup(self, st: _Study) -> None:
+        self.pool.remove_lanes(st.lane_ids)
+        for pkey in st.source_keys:
+            self._key_refs[pkey] -= 1
+            if self._key_refs[pkey] <= 0:
+                del self._key_refs[pkey]
+                ident = self._key_ident.pop(pkey, None)
+                if ident is not None:
+                    self._ident_to_key.pop(ident, None)
+                self.pool.remove_source(pkey)
+        del self._studies[st.ns]
+
+    def _fail_active(self, message: str) -> None:
+        for st in list(self._studies.values()):
+            st.emit({"type": "error", "plan_id": st.plan_id,
+                     "error": message})
+
+    # ----------------------------------------------------------- snapshots
+
+    def _snapshot_tick(self) -> None:
+        if self.pool.chunk_count % self.snapshot_every:
+            return
+        for st in self._studies.values():
+            if st.checkpoint is not None and st.remaining:
+                self._snapshot(st)
+
+    def _snapshot(self, st: _Study) -> None:
+        ids, tree = self.pool.snapshot_lanes(only=st.lane_ids)
+        if not ids:
+            return
+        st.step += 1
+        st.checkpoint.manager.save(
+            st.step, tree,
+            extra_meta={"phase": st.checkpoint.phase, "lane_ids": ids,
+                        **st.checkpoint.meta},
+            blocking=True, retain_class=st.checkpoint.retain_class)
+
+    # -------------------------------------------------------------- status
+
+    def status(self) -> dict:
+        """SERVICE THREAD ONLY (route through ``enqueue``)."""
+        return {"type": "status",
+                "studies": [{"study": ns, "lanes": len(st.lane_ids),
+                             "remaining": len(st.remaining)}
+                            for ns, st in self._studies.items()],
+                "tenants": {str(t): dict(rec) for t, rec in
+                            self.pool.tenant_stats().items()},
+                "occupancy": self.pool.occupancy,
+                "source_stats": dict(self.pool.cache.stats),
+                "resident_sources": len(self._key_refs)}
+
+
+def sorted_wire(ids):
+    """Deterministic ordering for mixed-type lane ids on the wire."""
+    return sorted(ids, key=repr)
+
+
+class StudyServer:
+    """AF_UNIX front end: accept loop + one framing-only handler thread
+    per connection. NO jax work happens on these threads — every op is
+    forwarded to the service thread via ``enqueue``, and every event the
+    service emits for a connection goes through that connection's write
+    lock (the service thread and the handler thread share the socket)."""
+
+    def __init__(self, socket_path: str, service: StudyService):
+        self.socket_path = socket_path
+        self.service = service
+        self._listener: socket.socket | None = None
+        self._accepting = threading.Event()
+
+    def serve_forever(self) -> None:
+        """Bind, start the service thread, accept until ``shutdown``.
+        Returns after the graceful drain completes."""
+        if os.path.exists(self.socket_path):
+            os.unlink(self.socket_path)        # stale socket from a kill
+        self._listener = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        self._listener.bind(self.socket_path)
+        self._listener.listen()
+        self.service.start()
+        self._accepting.set()
+        try:
+            while self._accepting.is_set():
+                try:
+                    conn, _ = self._listener.accept()
+                except OSError:                # listener closed by shutdown
+                    break
+                threading.Thread(target=self._handle, args=(conn,),
+                                 daemon=True).start()
+        finally:
+            self.service.request_stop()
+            self.service.join()
+            self._listener.close()
+            if os.path.exists(self.socket_path):
+                os.unlink(self.socket_path)
+
+    def stop_accepting(self) -> None:
+        self._accepting.clear()
+        if self._listener is not None:
+            try:
+                self._listener.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            self._listener.close()
+
+    @staticmethod
+    def _make_emit(wfile, lock):
+        """An emit closure that survives a vanished client: once a write
+        fails, further events are dropped — the study itself keeps
+        running (results land in the pool, snapshots flush), it just has
+        no listener."""
+        dead = [False]
+
+        def emit(msg) -> None:
+            if dead[0]:
+                return
+            try:
+                protocol.send_msg(wfile, msg, lock)
+            except (OSError, ValueError):
+                dead[0] = True
+        return emit
+
+    def _handle(self, conn: socket.socket) -> None:
+        rfile = conn.makefile("rb")
+        wfile = conn.makefile("wb")
+        lock = threading.Lock()
+        emit = self._make_emit(wfile, lock)
+        tenant = None
+        try:
+            while True:
+                try:
+                    msg = protocol.recv_msg(rfile)
+                except ValueError as e:        # framing error: drop conn
+                    emit({"type": "error", "error": str(e)})
+                    return
+                if msg is None:
+                    return
+                op = msg.get("op") if isinstance(msg, dict) else None
+                if op == "hello":
+                    tenant = str(msg.get("tenant", ""))
+                    if not tenant:
+                        emit({"type": "error",
+                              "error": "hello needs a tenant name"})
+                        continue
+                    emit({"type": "hello",
+                          "pool": self.service.pool_contract()})
+                elif op == "submit":
+                    if tenant is None:
+                        emit({"type": "error",
+                              "error": "submit before hello"})
+                        continue
+                    plan_id = str(msg.get("plan_id", ""))
+                    if not plan_id:
+                        emit({"type": "error",
+                              "error": "submit needs a plan_id"})
+                        continue
+                    plan_dict = msg.get("plan")
+                    self.service.enqueue(
+                        lambda t=tenant, p=plan_id, d=plan_dict:
+                        self.service.submit(t, p, d, emit))
+                elif op == "status":
+                    self.service.enqueue(
+                        lambda: emit(self.service.status()))
+                elif op == "shutdown":
+                    self.stop_accepting()
+                    self.service.request_stop()
+                    self.service.join()
+                    emit({"type": "bye"})
+                    return
+                else:
+                    emit({"type": "error",
+                          "error": f"unknown op {op!r}"})
+        finally:
+            try:
+                rfile.close()
+                wfile.close()
+            except OSError:
+                pass
+            conn.close()

@@ -135,6 +135,7 @@ class _Lane:
     n_iter0: int = 0
     result: SMOResult | None = None       # set at retirement
     served: int = 0                       # chunks dispatched (park fairness)
+    tenant: Any = None                    # fair-share accounting group
     seed_s: float = 0.0                   # admission-transform wall time
     solve_s: float = 0.0                  # dispatch wall time attributed here
     shrink: Any = None                    # shrink.LaneShrink when enabled
@@ -169,8 +170,10 @@ class LanePool:
                  on_result=None, on_lane_chunk=None,
                  shrink_every: int | str = 0, shrink_quantum: int = 128,
                  shrink_caps=None, shrink_on_seed: bool = True):
-        if not isinstance(sources, dict) or not sources:
-            raise ValueError("sources must be a non-empty {key: source} dict")
+        if not isinstance(sources, dict):
+            raise ValueError("sources must be a {key: source} dict")
+        # an EMPTY pool is legal: a long-lived daemon constructs the pool
+        # once and admits sources/lanes as plans arrive (add_source)
         kinds = {cost_model.source_kind(s) for s in sources.values()}
         if max_width is None:
             # measured cost model (results/cost_model.json, written by
@@ -216,6 +219,7 @@ class LanePool:
         self._lanes: dict[Any, _Lane] = {}
         self._order: list[Any] = []       # insertion order = packing order
         self.results: dict[Any, SMOResult] = {}
+        self._tenant_served: dict[Any, int] = {}   # fair-share accounting
         self.seed_time = 0.0              # admission transforms (paper "init.")
         self.chunk_count = 0
         self._width_log: list[tuple[int, int]] = []   # (live, dispatched)
@@ -304,11 +308,57 @@ class LanePool:
         raise ValueError("a multi-source pool needs an explicit source key "
                          "per lane")
 
+    # ------------------------------------------------------- source lifecycle
+
+    def add_source(self, key, entry, y) -> None:
+        """Admit a source into a LIVE pool (the daemon's per-plan intake —
+        the constructor path for pools whose workload arrives over time).
+        Same rules as construction: the fused/WSS check runs now, factory
+        entries stay unmaterialized until a dispatch needs them."""
+        if key in self.sources:
+            raise ValueError(f"duplicate source key {key!r}")
+        self.cache.check_fused(key, entry)
+        self.sources[key] = entry
+        self._ys[key] = y
+        self.cache.add_entry(key, entry)
+
+    def remove_source(self, key) -> None:
+        """Drop a source whose lanes have all retired (a drained study's
+        kernels leave residency so other tenants' budgets recover the
+        bytes). Refuses while any unretired lane still reads it."""
+        live = [ln.id for ln in self._lanes.values()
+                if ln.source == key and ln.result is None]
+        if live:
+            raise ValueError(
+                f"source {key!r} still has unretired lanes {live!r}")
+        self._packed.pop(key, None)
+        if self._sticky == key:
+            self._sticky = None
+        self.sources.pop(key, None)
+        self._ys.pop(key, None)
+        self._src_live.pop(key, None)
+        self.cache.remove_entry(key)
+
+    def remove_lanes(self, lane_ids) -> None:
+        """Forget RETIRED lanes (a drained study leaves the pool so its
+        ids never collide with a later admission). Live/pending lanes
+        refuse — cancellation is not yet a pool primitive (ROADMAP)."""
+        ids = set(lane_ids)
+        for lane_id in ids:
+            lane = self._lanes.get(lane_id)
+            if lane is not None and lane.result is None:
+                raise ValueError(f"lane {lane_id!r} is not retired")
+        for lane_id in ids:
+            self._lanes.pop(lane_id, None)
+            self.results.pop(lane_id, None)
+        self._order = [i for i in self._order if i not in ids]
+
     # ---------------------------------------------------------- lane intake
 
     def add(self, lane_id, train_mask, C, alpha0=None, f0=None, *,
             source=None, n_iter0: int = 0, max_iter: int = 10_000_000,
-            dep=None, seed_fn=None, after=None, shrink0=None) -> None:
+            dep=None, seed_fn=None, after=None, shrink0=None,
+            tenant=None) -> None:
         """Register a lane. Either give its start point (``alpha0``/``f0``,
         optionally ``n_iter0`` when resuming a snapshot) or a dependency
         (``dep`` = another lane id, ``seed_fn`` mapping that lane's
@@ -335,7 +385,7 @@ class LanePool:
         key = self._source_key(source)
         lane = _Lane(id=lane_id, source=key, train_mask=train_mask, C=C,
                      max_iter=int(max_iter), dep=dep, seed_fn=seed_fn,
-                     after=after, shrink0=shrink0)
+                     after=after, shrink0=shrink0, tenant=tenant)
         if alpha0 is not None:
             if after is None:
                 # cache.meta answers dtype without materializing a factory
@@ -377,13 +427,14 @@ class LanePool:
             shrink_mod.seed_shrink(ls, y, lane.train_mask, lane.C,
                                    lane.state, tol=self.tol)
 
-    def add_result(self, lane_id, result: SMOResult) -> None:
+    def add_result(self, lane_id, result: SMOResult, *,
+                   tenant=None) -> None:
         """Register an already-solved lane (a restored ``done`` snapshot):
         it participates as a seed dependency but is never dispatched."""
         if lane_id in self._lanes:
             raise ValueError(f"duplicate lane id {lane_id!r}")
         lane = _Lane(id=lane_id, source=None, train_mask=None, C=None,
-                     max_iter=0, result=result)
+                     max_iter=0, result=result, tenant=tenant)
         self._lanes[lane_id] = lane
         self._order.append(lane_id)
         self.results[lane_id] = result
@@ -472,119 +523,154 @@ class LanePool:
         for i, lane_id in enumerate(ids):
             self._lanes[lane_id].state = states.lane(i)
 
+    def _cap_order(self, selected: list[_Lane]) -> list[_Lane]:
+        """Width-capped dispatch priority within one fair-share group.
+        Selection is SOURCE-STICKY: the most recently dispatched source
+        keeps the width budget while it has live lanes — its kernel
+        operands stay cache-hot, where a per-chunk rotation across
+        sources was measured ~5% slower on CPU (each chunk restreamed a
+        cold ~n^2 kernel matrix). Within the sticky source (and for any
+        leftover width), least-served lanes go first (stable sort:
+        insertion order breaks ties), so every lane of the serving source
+        keeps advancing at chunk granularity; other sources advance when
+        the sticky one drains or leaves width to spare. Leftover width is
+        RESIDENCY-AWARE: lanes whose kernel is already materialized beat
+        lanes that would force a materialization (and, under a budget, an
+        eviction) — a budgeted pool drains each resident source before
+        paying for the next kernel, so materialization count tracks the
+        source count, not the chunk count. Dense (pinned) sources are
+        always resident, so single-matrix pools keep the exact pre-cache
+        ordering."""
+        sticky = [ln for ln in selected if ln.source == self._sticky]
+        near = [ln for ln in selected if ln.source != self._sticky
+                and self.cache.resident(ln.source)]
+        far = [ln for ln in selected if ln.source != self._sticky
+               and not self.cache.resident(ln.source)]
+        return sorted(sticky, key=lambda ln: ln.served) + \
+            sorted(near, key=lambda ln: ln.served) + \
+            sorted(far, key=lambda ln: ln.served)
+
+    def _cap_select(self, selected: list[_Lane]) -> list[_Lane]:
+        """Park the overflow for one chunk. Single-tenant pools (every
+        lane untagged, or one tag — all pre-daemon callers) take the
+        historical path verbatim. Multi-tenant pools FAIR-SHARE the width
+        budget: each tenant's lanes are ordered by the same sticky/
+        resident/served policy, then tenants are interleaved round-robin
+        — least-served tenant first — so one tenant's wide grid cannot
+        starve another's two folds, while each tenant's own lanes still
+        drain source-sticky."""
+        tenants = list(dict.fromkeys(ln.tenant for ln in selected))
+        if len(tenants) <= 1:
+            return self._cap_order(selected)[:self.max_width]
+        per = {t: self._cap_order([ln for ln in selected if ln.tenant is t
+                                   or ln.tenant == t])
+               for t in tenants}
+        tenants.sort(key=lambda t: self._tenant_served.get(t, 0))
+        out: list[_Lane] = []
+        while len(out) < self.max_width and any(per.values()):
+            for t in tenants:
+                if per[t] and len(out) < self.max_width:
+                    out.append(per[t].pop(0))
+        return out
+
     def run(self) -> dict[Any, SMOResult]:
         """Drive every lane to retirement; returns {lane_id: SMOResult}."""
-        while True:
-            self._admit()
-            live = self._live()
-            if not live:
-                pending = [i for i in self._order
-                           if self._lanes[i].result is None]
-                if pending:
-                    raise RuntimeError(
-                        f"lanes {pending} wait on dependencies that never "
-                        "retire (missing or cyclic dep)")
-                break
-            selected = live
-            if len(self.sources) > 1 and self.cache.budgeted:
-                # residency budget first: only budget-many managed sources
-                # dispatch per chunk (sticky/resident preferred), so even
-                # an unbounded-width schedule drains kernels instead of
-                # thrashing the cache
-                allowed = self._budget_sources(live)
-                if len(allowed) < len({ln.source for ln in live}):
-                    selected = [ln for ln in live if ln.source in allowed]
-            if self.max_width and len(selected) > self.max_width:
-                # park the overflow for one chunk. Selection is
-                # SOURCE-STICKY: the most recently dispatched source keeps
-                # the width budget while it has live lanes — its kernel
-                # operands stay cache-hot, where a per-chunk rotation
-                # across sources was measured ~5% slower on CPU (each
-                # chunk restreamed a cold ~n^2 kernel matrix). Within the
-                # sticky source (and for any leftover width), least-served
-                # lanes go first (stable sort: insertion order breaks
-                # ties), so every lane of the serving source keeps
-                # advancing at chunk granularity; other sources advance
-                # when the sticky one drains or leaves width to spare.
-                # Leftover width is RESIDENCY-AWARE: lanes whose kernel is
-                # already materialized beat lanes that would force a
-                # materialization (and, under a budget, an eviction) — a
-                # budgeted pool drains each resident source before paying
-                # for the next kernel, so materialization count tracks the
-                # source count, not the chunk count. Dense (pinned)
-                # sources are always resident, so single-matrix pools keep
-                # the exact pre-cache ordering.
-                sticky = [ln for ln in selected if ln.source == self._sticky]
-                near = [ln for ln in selected if ln.source != self._sticky
-                        and self.cache.resident(ln.source)]
-                far = [ln for ln in selected if ln.source != self._sticky
-                       and not self.cache.resident(ln.source)]
-                ordered = sorted(sticky, key=lambda ln: ln.served) + \
-                    sorted(near, key=lambda ln: ln.served) + \
-                    sorted(far, key=lambda ln: ln.served)
-                selected = ordered[:self.max_width]
-            for lane in selected:
-                lane.served += 1
-            groups: dict[Any, list[_Lane]] = {}
-            for lane in selected:
-                # under shrinking, lanes bucket by (source, cap): a shrunk
-                # lane migrates to the smaller-shape compact program of its
-                # cap bucket, and only same-cap lanes can share a stacked
-                # dispatch (their operand shapes match)
-                gkey = (lane.source, lane.shrink.cap) if self.shrink_every \
-                    else lane.source
-                groups.setdefault(gkey, []).append(lane)
-            if len(self.sources) > 1:
-                counts: dict[Any, int] = {}
-                for lane in live:
-                    counts[lane.source] = counts.get(lane.source, 0) + 1
-                for key, c in counts.items():
-                    rec = self._src_live.setdefault(key, [0, 0, 0])
-                    rec[0] += c
-                    rec[1] += 1
-                    rec[2] = max(rec[2], c)
-            # affinity follows the chunk's PRIMARY group (selected[0]'s
-            # source) — not the last group dispatched, which under a split
-            # selection would hand stickiness to the overflow source
-            self._sticky = selected[0].source
-            dispatched = 0
-            for gkey, lanes in groups.items():
-                width = (1 if len(lanes) == 1
-                         else bucket_width(len(lanes), self.lane_quantum))
-                dispatched += width
-                if self.shrink_every:
-                    key, cap = gkey
-                    n = int(np.shape(self._ys[key])[0])
-                    self._programs.add((key, width, cap or n))
-                    for lane in lanes:
-                        self._frac_log.append((cap or n) / n)
-                else:
-                    key, cap = gkey, 0
-                    self._programs.add((key, width))
-                # dispatch may materialize the group's kernel through the
-                # cache; that delta is kernel time, not solve time
-                t0 = time.perf_counter()
-                k0 = self.cache.kernel_time
-                if self.shrink_every:
-                    self._step_shrink(key, cap, lanes)
-                elif len(lanes) == 1:
-                    self._step_single(lanes[0])
-                else:
-                    self._step_batched(key, lanes)
-                dt = (time.perf_counter() - t0) \
-                    - (self.cache.kernel_time - k0)
-                for lane in lanes:
-                    lane.solve_s += dt / len(lanes)
-            self._width_log.append((len(live), dispatched))
-            self.chunk_count += 1
-            if self.on_lane_chunk is not None:
-                for lane in selected:
-                    if lane.result is None:
-                        self.on_lane_chunk(lane.id, self._lane_state(lane))
-            if self.on_snapshot is not None and \
-                    self.chunk_count % self.snapshot_every == 0:
-                self.on_snapshot(self)
+        while self.step():
+            pass
+        pending = [i for i in self._order
+                   if self._lanes[i].result is None]
+        if pending:
+            raise RuntimeError(
+                f"lanes {pending} wait on dependencies that never "
+                "retire (missing or cyclic dep)")
         return dict(self.results)
+
+    def step(self) -> bool:
+        """One scheduling round: admit ready lanes, select under the
+        budget/width policy, dispatch one chunk per (source, width)
+        group. Returns False when nothing is runnable — every lane
+        retired, or the rest wait on edges that have not retired (the
+        daemon's idle condition; ``run`` turns pending-forever into the
+        missing/cyclic-dep error)."""
+        self._admit()
+        live = self._live()
+        if not live:
+            return False
+        selected = live
+        if len(self.sources) > 1 and self.cache.budgeted:
+            # residency budget first: only budget-many managed sources
+            # dispatch per chunk (sticky/resident preferred), so even
+            # an unbounded-width schedule drains kernels instead of
+            # thrashing the cache
+            allowed = self._budget_sources(live)
+            if len(allowed) < len({ln.source for ln in live}):
+                selected = [ln for ln in live if ln.source in allowed]
+        if self.max_width and len(selected) > self.max_width:
+            selected = self._cap_select(selected)
+        for lane in selected:
+            lane.served += 1
+            self._tenant_served[lane.tenant] = \
+                self._tenant_served.get(lane.tenant, 0) + 1
+        groups: dict[Any, list[_Lane]] = {}
+        for lane in selected:
+            # under shrinking, lanes bucket by (source, cap): a shrunk
+            # lane migrates to the smaller-shape compact program of its
+            # cap bucket, and only same-cap lanes can share a stacked
+            # dispatch (their operand shapes match)
+            gkey = (lane.source, lane.shrink.cap) if self.shrink_every \
+                else lane.source
+            groups.setdefault(gkey, []).append(lane)
+        if len(self.sources) > 1:
+            counts: dict[Any, int] = {}
+            for lane in live:
+                counts[lane.source] = counts.get(lane.source, 0) + 1
+            for key, c in counts.items():
+                rec = self._src_live.setdefault(key, [0, 0, 0])
+                rec[0] += c
+                rec[1] += 1
+                rec[2] = max(rec[2], c)
+        # affinity follows the chunk's PRIMARY group (selected[0]'s
+        # source) — not the last group dispatched, which under a split
+        # selection would hand stickiness to the overflow source
+        self._sticky = selected[0].source
+        dispatched = 0
+        for gkey, lanes in groups.items():
+            width = (1 if len(lanes) == 1
+                     else bucket_width(len(lanes), self.lane_quantum))
+            dispatched += width
+            if self.shrink_every:
+                key, cap = gkey
+                n = int(np.shape(self._ys[key])[0])
+                self._programs.add((key, width, cap or n))
+                for lane in lanes:
+                    self._frac_log.append((cap or n) / n)
+            else:
+                key, cap = gkey, 0
+                self._programs.add((key, width))
+            # dispatch may materialize the group's kernel through the
+            # cache; that delta is kernel time, not solve time
+            t0 = time.perf_counter()
+            k0 = self.cache.kernel_time
+            if self.shrink_every:
+                self._step_shrink(key, cap, lanes)
+            elif len(lanes) == 1:
+                self._step_single(lanes[0])
+            else:
+                self._step_batched(key, lanes)
+            dt = (time.perf_counter() - t0) \
+                - (self.cache.kernel_time - k0)
+            for lane in lanes:
+                lane.solve_s += dt / len(lanes)
+        self._width_log.append((len(live), dispatched))
+        self.chunk_count += 1
+        if self.on_lane_chunk is not None:
+            for lane in selected:
+                if lane.result is None:
+                    self.on_lane_chunk(lane.id, self._lane_state(lane))
+        if self.on_snapshot is not None and \
+                self.chunk_count % self.snapshot_every == 0:
+            self.on_snapshot(self)
+        return True
 
     def _step_single(self, lane: _Lane) -> None:
         """Dispatch width 1: the sequential single-lane program
@@ -721,13 +807,40 @@ class LanePool:
             return cached[1][3].lane(cached[0].index(lane.id))
         return lane.state
 
-    def snapshot_lanes(self):
+    def tenant_stats(self) -> dict:
+        """Per-tenant accounting: lane counts by lifecycle stage plus the
+        fair-share ``served`` counter (lane-chunks dispatched). The
+        daemon's ``status`` answer and the fairness tests read this."""
+        stats: dict[Any, dict] = {}
+
+        def rec(t):
+            return stats.setdefault(
+                t, {"lanes": 0, "live": 0, "pending": 0, "retired": 0,
+                    "served": 0})
+
+        for lane in self._lanes.values():
+            r = rec(lane.tenant)
+            r["lanes"] += 1
+            if lane.result is not None:
+                r["retired"] += 1
+            elif lane.state is not None:
+                r["live"] += 1
+            else:
+                r["pending"] += 1
+        for t, n in self._tenant_served.items():
+            rec(t)["served"] = n
+        return stats
+
+    def snapshot_lanes(self, *, only=None):
         """(lane_ids, tree) of every admitted-or-retired lane, stacked in
         lane-id (insertion) order — NOT packed position — so a mid-batch
         checkpoint restores by original lane id across any repack/resume
         boundary. ``tree`` = {alpha (L, n), f (L, n), n_iter (L,),
         done (L,)}; pending (unadmitted) lanes are omitted — their seeds
-        re-derive from the retired results in the snapshot.
+        re-derive from the retired results in the snapshot. ``only``
+        restricts the snapshot to a membership test over lane ids (the
+        daemon checkpoints each study's lanes separately: one tenant's
+        instance set need not be shape-homogeneous with another's).
 
         Shrink-enabled pools additionally persist the per-lane shrink
         ledger — ``active`` (L, n) masks, ``shrunk``/``no_shrink`` (L,)
@@ -740,6 +853,8 @@ class LanePool:
         ids, alphas, fs, iters, dones = [], [], [], [], []
         actives, shrunks, noshrinks, unshrinks = [], [], [], []
         for lane_id in self._order:
+            if only is not None and lane_id not in only:
+                continue
             lane = self._lanes[lane_id]
             if lane.result is not None:
                 src, done = lane.result, True
@@ -761,6 +876,8 @@ class LanePool:
                 shrunks.append(bool(ls is not None and ls.shrunk))
                 noshrinks.append(bool(ls is not None and ls.no_shrink))
                 unshrinks.append(0 if ls is None else int(ls.unshrinks))
+        if not ids:       # nothing admitted yet (daemon pre-first-chunk)
+            return [], {}
         tree = {"alpha": jnp.stack(alphas), "f": jnp.stack(fs),
                 "n_iter": jnp.stack(iters), "done": jnp.asarray(dones)}
         if self.shrink_every:

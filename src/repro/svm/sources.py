@@ -116,6 +116,42 @@ class KernelSpec:
         return DenseKernel(K)
 
 
+def source_identity(entry, y=None) -> tuple | None:
+    """Content identity of a sources-dict entry: equal identities declare
+    the SAME kernel values, so a multi-tenant pool may serve both tenants
+    from one resident kernel. ``None`` means "not identifiable — never
+    dedup" (opaque custom sources).
+
+    Labels are part of the identity when given: the pool stores one ``y``
+    per source key, so two tenants may share a kernel only when they also
+    share the label vector that kernel's lanes train against.
+
+    Arrays enter as sha1 digests of their raw bytes (after the spec's own
+    ``[:n]`` truncation — a truncated and an untruncated view of the same
+    ``X`` are different kernels), keeping the identity hashable and cheap
+    to compare without holding the data."""
+    import hashlib
+
+    import numpy as np
+
+    def digest(a) -> str:
+        a = np.ascontiguousarray(np.asarray(a))
+        return hashlib.sha1(a.tobytes()).hexdigest()
+
+    if isinstance(entry, KernelSpec):
+        ident = ("spec", entry.kind, float(entry.gamma), entry.backend,
+                 entry.n_rows, str(entry.dtype),
+                 digest(entry.X[: entry.n_rows]))
+    elif isinstance(entry, DenseKernel):
+        K = entry.K
+        ident = ("dense", str(K.dtype), int(K.shape[0]), digest(K))
+    else:
+        return None
+    if y is not None:
+        ident = ident + (digest(y),)
+    return ident
+
+
 def _source_nbytes(src) -> int:
     nb = getattr(src, "nbytes", None)
     if nb is not None:
@@ -219,6 +255,28 @@ class SourceCache:
                 "kernel_time": round(self.kernel_time, 4),
                 "peak_resident": self.peak_resident,
                 "peak_resident_bytes": self.peak_resident_bytes}
+
+    # ----------------------------------------------------- entry lifecycle
+
+    def add_entry(self, key, entry) -> None:
+        """Admit a new entry after construction (the daemon admits plans
+        into a live pool). Same pinning rule as the constructor: an
+        already-usable source is pinned, a factory is managed."""
+        if key in self._entries:
+            raise ValueError(f"source {key!r} already present")
+        self._entries[key] = entry
+        if not is_factory(entry):
+            self._pinned[key] = entry
+            self.peak_resident = max(
+                self.peak_resident, len(self._pinned) + len(self._resident))
+
+    def remove_entry(self, key) -> None:
+        """Drop an entry and any residency it holds (a drained study's
+        sources leave the pool). Not an eviction: no ``on_evict`` — the
+        caller has already retired every lane reading ``key``."""
+        self._entries.pop(key, None)
+        self._pinned.pop(key, None)
+        self._resident.pop(key, None)
 
     # ------------------------------------------------------ materialization
 

@@ -130,6 +130,27 @@ def test_rejects_plan_exceeding_cache_bytes():
         run_plan(_small_plan(cache_bytes=1000), analysis="strict")
 
 
+def test_findings_context_tags_without_changing_identity(tmp_path):
+    """``analyze_plan(..., context=...)`` stamps every finding with the
+    caller's attribution (the daemon passes ``tenant/plan_id``): rendered
+    output names it, but the baseline identity key is untouched — a
+    context-tagged finding is still accepted by a context-free baseline,
+    and the line-free key semantics survive."""
+    plan = _small_plan(cache_bytes=1000)
+    plain = analyze_plan(plan)
+    tagged = analyze_plan(plan, context="alice/p1")
+    assert all(f.context == "alice/p1" for f in tagged.report)
+    assert all(f.context == "" for f in plain.report)
+    assert all(" [alice/p1]: " in f.render() for f in tagged.report)
+    # identity excludes context: the same findings, to a baseline
+    assert {f.key for f in tagged.report} == {f.key for f in plain.report}
+    base = findings.write_baseline(plain.report, tmp_path / "base.json")
+    assert tagged.report.new_against(base) == []
+    with pytest.raises(ValueError) as ei:
+        check_plan(plan, context="alice/p1")
+    assert "alice/p1" in str(ei.value)
+
+
 def test_admits_plan_within_cache_bytes():
     pa = analyze_plan(_small_plan(cache_bytes=1 << 20))
     assert pa.ok

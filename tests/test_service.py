@@ -1,0 +1,340 @@
+"""Study service: multi-tenant daemon over one shared LanePool.
+
+The core invariants: a served plan's results are BIT-identical to an
+in-process ``run_plan`` (the pool's schedule-shape parity is what makes
+daemon interleaving legal at all); overlapping submissions dedup their
+kernel sources (fewer materializations than the sum of solo runs); the
+admission gate rejects invalid/infeasible/storm plans with structured
+findings before anything materializes; and a killed daemon's studies
+resume from their snapshots on restart — under a different width.
+
+Most tests drive :class:`StudyService` directly on the calling thread
+(no service thread started — the tests ARE the service thread), which
+makes admission order and interleaving deterministic. One end-to-end
+test runs the real socket server.
+"""
+import dataclasses
+import json
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cv import _fold_masks, _transition_idx
+from repro.core.study import Plan, plan_to_dict, run_plan
+from repro.data.svm_suite import kfold_chunks, make_dataset
+from repro.service import (PlanRejectedByServer, StudyClient, StudyServer,
+                           StudyService)
+from repro.svm import DenseKernel, kernel_matrix
+from repro.svm.sources import KernelSpec
+
+
+def _setup(name="heart", n=120, k=4):
+    ds = make_dataset(name, n_override=n)
+    X = jnp.asarray(ds.X)
+    y = jnp.asarray(ds.y, jnp.float64)
+    chunks = kfold_chunks(n, k, seed=0)
+    nn = chunks.size
+    return ds, X[:nn], y[:nn], chunks, jnp.asarray(_fold_masks(chunks))
+
+
+def _fold_chain_plan(sources, y, masks, chunks, C, *, folds=3, **knobs):
+    """Per-source fold chains with tuple lane ids + per-fold evals — the
+    grid driver's shape, exercised over arbitrary source dicts."""
+    plan = Plan(sources=dict(sources), y=y, chunk_iters=64,
+                lane_quantum=2, **knobs)
+    n = y.shape[0]
+    for key in sources:
+        plan.lane((key, 0), source=key, train_mask=masks[0], C=C,
+                  alpha0=jnp.zeros(n), f0=-y)
+        for h in range(1, folds):
+            S, R, T = _transition_idx(chunks, h - 1, h)
+            plan.lane((key, h), source=key, train_mask=masks[h], C=C,
+                      dep=(key, h - 1), transform="fold",
+                      params=dict(method="sir", S_idx=S, R_idx=R, T_idx=T))
+        for h in range(folds):
+            plan.evaluate((key, h), chunks[h])
+    return plan
+
+
+def _wire(plan) -> dict:
+    """Through real JSON, as the socket would carry it."""
+    return json.loads(json.dumps(plan_to_dict(plan)))
+
+
+def _drain(service) -> None:
+    """Run the service's scheduling loop inline until every study
+    finishes (the calling thread acts as the service thread)."""
+    while service._studies:
+        service.pool.step()
+        service._snapshot_tick()
+        service._finish_ready()
+
+
+def _events_of(emitted, kind):
+    return [m for m in emitted if m["type"] == kind]
+
+
+def _served_results(emitted):
+    from repro.core.study import _from_wire, result_from_dict
+    return {_from_wire(m["lane"]): result_from_dict(m["result"])
+            for m in _events_of(emitted, "result")}
+
+
+def _assert_bit_identical(solo_results, served):
+    assert set(solo_results) == set(served)
+    for lid, ref in solo_results.items():
+        got = served[lid]
+        np.testing.assert_array_equal(np.asarray(ref.alpha),
+                                      np.asarray(got.alpha))
+        np.testing.assert_array_equal(np.asarray(ref.f),
+                                      np.asarray(got.f))
+        assert int(ref.n_iter) == int(got.n_iter)
+        assert bool(ref.converged) == bool(got.converged)
+
+
+# ------------------------------------------------- concurrent multi-tenant
+
+def test_two_tenants_dedup_and_bit_parity():
+    """Two tenants' overlapping-gamma studies in flight simultaneously:
+    each is bit-identical to its solo ``run_plan``, the overlapping
+    kernel source is admitted ONCE (dedup hit for the second study), and
+    the pool materializes fewer kernels than the two solo runs did
+    combined."""
+    ds, X, y, chunks, masks = _setup()
+    gam = {s: KernelSpec(X=X, gamma=s * ds.gamma, n=y.shape[0])
+           for s in (0.5, 1.0, 2.0)}
+    plan_a = _fold_chain_plan({0.5: gam[0.5], 1.0: gam[1.0]}, y, masks,
+                              chunks, ds.C, max_resident=2)
+    plan_b = _fold_chain_plan({1.0: gam[1.0], 2.0: gam[2.0]}, y, masks,
+                              chunks, ds.C, max_resident=2)
+    solo_a = run_plan(plan_a)
+    solo_b = run_plan(plan_b)
+    solo_mats = (solo_a.source_stats["materializations"]
+                 + solo_b.source_stats["materializations"])
+    assert solo_mats >= 4                 # each solo built its own two
+
+    service = StudyService(chunk_iters=64, lane_quantum=2, max_width=0,
+                           max_resident=3)
+    ev_a, ev_b = [], []
+    # both admitted before any chunk runs -> the shared gamma deduped
+    service.submit("alice", "study", _wire(plan_a), ev_a.append)
+    service.submit("bob", "study", _wire(plan_b), ev_b.append)
+    assert len(service._studies) == 2
+    assert service.pool.cache.stats["materializations"] == 0  # gate only
+    _drain(service)
+
+    (adm_a,) = _events_of(ev_a, "admitted")
+    (adm_b,) = _events_of(ev_b, "admitted")
+    assert adm_a["dedup_hits"] == 0 and adm_a["sources_admitted"] == 2
+    assert adm_b["dedup_hits"] == 1 and adm_b["sources_admitted"] == 1
+    _assert_bit_identical(solo_a.results, _served_results(ev_a))
+    _assert_bit_identical(solo_b.results, _served_results(ev_b))
+    (done_a,) = _events_of(ev_a, "done")
+    (done_b,) = _events_of(ev_b, "done")
+    assert {tuple(l): tuple(ct) for l, ct in done_a["evals"]} == \
+        {k: v for k, v in solo_a.evals.items()}
+    assert {tuple(l): tuple(ct) for l, ct in done_b["evals"]} == \
+        {k: v for k, v in solo_b.evals.items()}
+    # THE dedup claim: 3 distinct kernels served both studies
+    assert service.pool.cache.stats["materializations"] == 3 < solo_mats
+    # both tenants did real work under fair-share accounting
+    assert done_a["tenant_stats"]["served"] > 0
+    assert done_b["tenant_stats"]["served"] > 0
+    # drained studies freed their lanes and sources
+    assert not service.pool.sources and not service.pool._lanes
+    assert service._key_refs == {} and service._ident_to_key == {}
+
+
+def test_fair_share_interleaves_tenants_under_width_cap():
+    """Width-1 pool, two single-source studies: the round-robin must not
+    starve either tenant — served chunk counts stay balanced."""
+    ds, X, y, chunks, masks = _setup()
+    K = kernel_matrix(X, X, gamma=ds.gamma)
+    plan = _fold_chain_plan({"k": DenseKernel(K)}, y, masks, chunks, ds.C)
+    service = StudyService(chunk_iters=64, lane_quantum=2, max_width=1)
+    ev_a, ev_b = [], []
+    service.submit("alice", "s", _wire(plan), ev_a.append)
+    service.submit("bob", "s", _wire(plan), ev_b.append)
+    _drain(service)
+    stats = service.pool.tenant_stats()
+    served = {t: r["served"] for t, r in stats.items()}
+    assert served["alice"] > 0 and served["bob"] > 0
+    # identical workloads under strict alternation: equal within one chunk
+    assert abs(served["alice"] - served["bob"]) <= 1
+    _assert_bit_identical(run_plan(plan).results, _served_results(ev_a))
+
+
+# ------------------------------------------------------------- admission
+
+def test_rejects_invalid_plan_with_findings():
+    ds, X, y, chunks, masks = _setup()
+    K = kernel_matrix(X, X, gamma=ds.gamma)
+    plan = _fold_chain_plan({"k": DenseKernel(K)}, y, masks, chunks, ds.C)
+    plan.lane(("k", 0), source="k", train_mask=masks[0], C=ds.C,
+              alpha0=jnp.zeros(y.shape[0]), f0=-y)       # duplicate id
+    service = StudyService(chunk_iters=64, lane_quantum=2)
+    events = []
+    service.submit("alice", "dup", _wire(plan), events.append)
+    (rej,) = events
+    assert rej["type"] == "rejected"
+    assert any(f["rule"] == "invalid-plan" for f in rej["findings"])
+    assert "duplicate" in rej["error"]
+    assert not service._studies and not service.pool.sources
+
+
+def test_rejects_budget_infeasible_plan():
+    """A factory source bigger than the POOL's cache budget (the daemon
+    normalizes budgets to its own) is refused statically."""
+    ds, X, y, chunks, masks = _setup()
+    spec = KernelSpec(X=X, gamma=ds.gamma, n=y.shape[0])
+    plan = _fold_chain_plan({"k": spec}, y, masks, chunks, ds.C)
+    service = StudyService(chunk_iters=64, lane_quantum=2,
+                           cache_bytes=1000)    # K needs n*n*8 >> 1000
+    events = []
+    service.submit("alice", "big", _wire(plan), events.append)
+    (rej,) = events
+    assert rej["type"] == "rejected"
+    assert any(f["rule"] == "cache-infeasible" for f in rej["findings"])
+    assert service.pool.cache.stats["materializations"] == 0
+
+
+def test_rejects_compile_storm_by_daemon_policy():
+    """In-process the storm finding is a warning; the daemon hardens it
+    into a rejection (the jit cache is shared across tenants)."""
+    ds, X, y, chunks, masks = _setup()
+    K = kernel_matrix(X, X, gamma=ds.gamma)
+    plan = Plan(sources={"k": DenseKernel(K)}, y=y, chunk_iters=64)
+    n = y.shape[0]
+    for i in range(9):                    # quantum-1 widths 1..9 > 8
+        plan.lane(i, source="k", train_mask=masks[i % 3], C=ds.C,
+                  alpha0=jnp.zeros(n), f0=-y)
+        plan.evaluate(i, chunks[i % 3])
+    service = StudyService(chunk_iters=64, lane_quantum=1, max_width=0)
+    events = []
+    service.submit("alice", "storm", _wire(plan), events.append)
+    (rej,) = events
+    assert rej["type"] == "rejected"
+    assert "compile-storm" in rej["error"]
+    assert any(f["rule"] == "recompile-storm" for f in rej["findings"])
+
+
+def test_rejects_contract_mismatch_and_duplicate_study():
+    ds, X, y, chunks, masks = _setup()
+    K = kernel_matrix(X, X, gamma=ds.gamma)
+    plan = _fold_chain_plan({"k": DenseKernel(K)}, y, masks, chunks, ds.C)
+    service = StudyService(chunk_iters=64, lane_quantum=2)
+    events = []
+    service.submit("alice", "t", _wire(dataclasses.replace(plan, tol=1e-5)),
+                   events.append)
+    (rej,) = events
+    assert rej["type"] == "rejected" and "tol" in rej["error"]
+    # admit for real, then the same (tenant, plan_id) again while in flight
+    ok_events, dup_events = [], []
+    service.submit("alice", "t", _wire(plan), ok_events.append)
+    assert _events_of(ok_events, "admitted")
+    service.submit("alice", "t", _wire(plan), dup_events.append)
+    (rej2,) = dup_events
+    assert rej2["type"] == "rejected" and "in flight" in rej2["error"]
+    _drain(service)
+
+
+def test_findings_carry_study_context():
+    """Admission findings name the (tenant, plan) they belong to — the
+    wire payload a multi-tenant operator can attribute."""
+    ds, X, y, chunks, masks = _setup()
+    spec = KernelSpec(X=X, gamma=ds.gamma, n=y.shape[0])
+    plan = _fold_chain_plan({"k": spec}, y, masks, chunks, ds.C)
+    service = StudyService(chunk_iters=64, lane_quantum=2, cache_bytes=1000)
+    events = []
+    service.submit("alice", "big", _wire(plan), events.append)
+    (rej,) = events
+    ctx = [f for f in rej["findings"] if f["rule"] == "cache-infeasible"]
+    assert ctx and all(f["context"] == "alice/big" for f in ctx)
+
+
+# ------------------------------------------------------- kill and resume
+
+def test_kill_daemon_restart_resumes_under_different_width(tmp_path):
+    """Snapshot mid-flight, abandon the service (the SIGKILL case: no
+    drain), restart with a DIFFERENT width cap, resubmit the same
+    (tenant, plan_id): restored lanes enter pre-solved, live lanes resume
+    mid-chunk, and every lane lands on the solo run's exact bits."""
+    ds, X, y, chunks, masks = _setup()
+    gam = {s: DenseKernel(kernel_matrix(X, X, gamma=s * ds.gamma))
+           for s in (0.5, 2.0)}
+    plan = _fold_chain_plan(gam, y, masks, chunks, ds.C)
+    solo = run_plan(plan)
+    root = str(tmp_path / "ckpt")
+
+    s1 = StudyService(chunk_iters=64, lane_quantum=2, max_width=0,
+                      checkpoint_root=root)
+    ev1 = []
+    s1.submit("alice", "grid", _wire(plan), ev1.append)
+    for _ in range(6):                    # partial progress, then "kill"
+        s1.pool.step()
+        s1._snapshot_tick()
+    assert s1._studies                    # must still be mid-flight
+    done_before = len(_events_of(ev1, "result"))
+
+    s2 = StudyService(chunk_iters=64, lane_quantum=2, max_width=1,
+                      checkpoint_root=root)
+    ev2 = []
+    s2.submit("alice", "grid", _wire(plan), ev2.append)
+    (adm,) = _events_of(ev2, "admitted")
+    assert adm["restored"] == done_before  # retired lanes came back solved
+    _drain(s2)
+    _assert_bit_identical(solo.results, _served_results(ev2))
+    (done,) = _events_of(ev2, "done")
+    assert {tuple(l): tuple(ct) for l, ct in done["evals"]} == \
+        {k: v for k, v in solo.evals.items()}
+    assert set(map(tuple, done["restored"])) == \
+        {tuple(l) for l, _ in
+         [(m["lane"], m) for m in _events_of(ev1, "result")]}
+
+
+# ------------------------------------------------------ socket end-to-end
+
+def test_socket_server_end_to_end(tmp_path):
+    """The real daemon: AF_UNIX server thread, two StudyClient tenants,
+    bit parity, status, rejection over the wire, graceful shutdown."""
+    import uuid
+    sock = f"/tmp/study-{uuid.uuid4().hex[:8]}.sock"   # AF_UNIX 108-byte cap
+    ds, X, y, chunks, masks = _setup()
+    K = kernel_matrix(X, X, gamma=ds.gamma)
+    plan = _fold_chain_plan({"k": DenseKernel(K)}, y, masks, chunks, ds.C)
+    solo = run_plan(plan)
+
+    service = StudyService(chunk_iters=64, lane_quantum=2, max_width=0)
+    server = StudyServer(sock, service)
+    t = threading.Thread(target=server.serve_forever, daemon=True)
+    t.start()
+    import os
+    import time
+    for _ in range(200):
+        if os.path.exists(sock):
+            break
+        time.sleep(0.05)
+    try:
+        with StudyClient(sock, "alice") as cli:
+            assert cli.pool_contract["tol"] == 1e-3
+            streamed = []
+            served = cli.submit("p", plan,
+                                on_result=lambda lid, r: streamed.append(lid))
+            _assert_bit_identical(solo.results, served.results)
+            assert served.evals == solo.evals
+            assert set(streamed) == set(solo.results)
+            assert served.tenant_stats["served"] > 0
+            with pytest.raises(PlanRejectedByServer, match="tol"):
+                cli.submit("q", dataclasses.replace(plan, tol=1e-5))
+            status = cli.status()
+            assert status["studies"] == []
+            assert "alice" in status["tenants"]
+            cli.shutdown()
+        t.join(timeout=30)
+        assert not t.is_alive()
+    finally:
+        server.stop_accepting()
+        if os.path.exists(sock):
+            os.unlink(sock)

@@ -177,6 +177,82 @@ def test_run_plan_streams_results():
         assert res is sres.results[lid]
 
 
+def test_plan_wire_roundtrip_zoo():
+    """``plan_to_dict`` -> real JSON -> ``plan_from_dict`` over this
+    file's plan shapes: the round-tripped grid plan must EXECUTE
+    bit-identically, every zoo member must be a serialization fixed
+    point, and hostile wire images die at parse time with named errors
+    (the daemon's first line of defense — before the analyzer runs)."""
+    import copy
+    import json
+
+    from repro.core.study import plan_from_dict, plan_to_dict
+    from repro.svm.sources import KernelSpec
+
+    ds, Ks, y, chunks, masks = _setup("heart")
+    n = y.shape[0]
+    X = jnp.asarray(ds.X)[:n]
+    zoo = [_grid_style_plan(Ks, y, masks, chunks, ds.C),
+           _grid_style_plan(Ks, y, masks, chunks, ds.C, max_width=1)]
+    spec_plan = Plan(sources={"s": KernelSpec(X=X, gamma=ds.gamma, n=n)},
+                     y=y, chunk_iters=64, max_resident=1, cache_bytes=1 << 30)
+    spec_plan.lane("a", train_mask=masks[0], C=ds.C,
+                   alpha0=jnp.zeros(n), f0=-y)
+    spec_plan.lane("b", train_mask=masks[0], C=2 * ds.C, dep="a",
+                   transform="scale_C",
+                   params=dict(C_old=ds.C, train_mask=masks[0]),
+                   after="a")
+    spec_plan.evaluate("a", chunks[0])
+    zoo.append(spec_plan)
+    pallas_plan = Plan(sources={0: KernelSpec(X=X, gamma=ds.gamma, n=n)},
+                       y=y, wss="1", source_backend="pallas_rbf")
+    pallas_plan.lane(0, train_mask=masks[0], C=ds.C,
+                     alpha0=jnp.zeros(n), f0=-y)
+    zoo.append(pallas_plan)
+
+    for plan in zoo:
+        d = json.loads(json.dumps(plan_to_dict(plan)))
+        back = plan_from_dict(d)
+        # fixed point: re-serializing the parsed plan is byte-stable
+        assert json.loads(json.dumps(plan_to_dict(back))) == d
+
+    solo = run_plan(zoo[0])
+    wired = run_plan(plan_from_dict(
+        json.loads(json.dumps(plan_to_dict(zoo[0])))))
+    assert set(solo.results) == set(wired.results)
+    for lid, res in solo.results.items():
+        np.testing.assert_array_equal(np.asarray(res.alpha),
+                                      np.asarray(wired.results[lid].alpha))
+        np.testing.assert_array_equal(np.asarray(res.f),
+                                      np.asarray(wired.results[lid].f))
+        assert int(res.n_iter) == int(wired.results[lid].n_iter)
+    assert solo.evals == wired.evals
+
+    # parse-time hardening: hostile images name their defect
+    good = plan_to_dict(zoo[0])
+    bad = copy.deepcopy(good)
+    bad["lanes"][1]["transform"] = "exfiltrate"
+    with pytest.raises(ValueError, match="unknown transform 'exfiltrate'"):
+        plan_from_dict(bad)
+    good_spec = plan_to_dict(spec_plan)
+    bad = copy.deepcopy(good_spec)
+    bad["sources"][0][1]["kind"] = "poly"
+    with pytest.raises(ValueError, match="unknown source kind 'poly'"):
+        plan_from_dict(bad)
+    bad = copy.deepcopy(good)
+    bad["lanes"][0]["C"] = float("inf")
+    with pytest.raises(ValueError, match="non-finite"):
+        plan_from_dict(bad)
+    bad = copy.deepcopy(good)
+    bad["tol"] = float("nan")
+    with pytest.raises(ValueError, match="non-finite"):
+        plan_from_dict(bad)
+    bad = copy.deepcopy(good)
+    del bad["__plan__"]
+    with pytest.raises(ValueError, match="not a wire plan"):
+        plan_from_dict(bad)
+
+
 def test_transform_registry_matches_seeders():
     """The named transforms reproduce their underlying seeders exactly."""
     ds, (K, _), y, chunks, masks = _setup("heart")
