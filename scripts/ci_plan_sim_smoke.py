@@ -1,0 +1,153 @@
+#!/usr/bin/env python
+"""CI smoke for the static schedule simulator (DESIGN.md §Schedule
+simulator).
+
+Two scenarios, both gated on EVENT-FOR-EVENT trace equality between the
+simulator's replay (exact iteration oracle) and the instrumented live
+pool — the contract that keeps admission-time predictions honest:
+
+* **budgeted 3x3 grid** — ``grid_plans`` cross-gamma pool on the
+  truncated heart dataset under a 2-kernel byte budget, checkpoints on:
+  eviction churn, pack/writeback lifecycle, checkpoint events;
+* **two-tenant service** — two overlapping studies admitted through
+  ``StudyService`` (namespaced lanes, dedup'd sources, tenant
+  round-robin): ``simulate_plans`` must replay the merged multi-tenant
+  schedule, shares events included.
+
+On a mismatch the full trace diff is written to
+``plan_sim_trace_diff.txt`` (uploaded as a CI artifact) and the step
+fails. Exit code 0 on success.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+import jax.numpy as jnp
+
+DIFF_PATH = "plan_sim_trace_diff.txt"
+
+
+def _diff(tag: str, sim_events: list, live_events: list) -> bool:
+    from repro.analysis.plan_sim import render_events
+    if sim_events == live_events:
+        print(f"{tag}: {len(live_events)} events, simulated == live")
+        return True
+    divergence = next(
+        (i for i, (a, b) in enumerate(zip(sim_events, live_events))
+         if a != b), min(len(sim_events), len(live_events)))
+    with open(DIFF_PATH, "a") as fh:
+        fh.write(f"=== {tag}: first divergence at event {divergence} "
+                 f"(sim {len(sim_events)} / live {len(live_events)} "
+                 "events)\n")
+        fh.write("--- simulated\n")
+        fh.write(render_events(sim_events) + "\n")
+        fh.write("--- live\n")
+        fh.write(render_events(live_events) + "\n")
+    print(f"{tag}: TRACE MISMATCH at event {divergence} "
+          f"(sim {sim_events[divergence:divergence + 1]!r} vs live "
+          f"{live_events[divergence:divergence + 1]!r}); "
+          f"diff written to {DIFF_PATH}")
+    return False
+
+
+def budgeted_grid() -> bool:
+    from repro.analysis import plan_sim
+    from repro.core.grid import grid_plans
+    from repro.data.svm_suite import make_dataset
+
+    ds = make_dataset("heart", n_override=120)
+    n = 120
+    (plan,) = grid_plans(
+        ds, Cs=[ds.C, 2 * ds.C, 4 * ds.C],
+        gammas=[0.5 * ds.gamma, ds.gamma, 2 * ds.gamma], k=3,
+        method="sir", chunk_iters=64, lane_quantum=2, max_width=4,
+        cache_bytes=2 * n * n * 8)
+    events, pool = plan_sim.dry_run(plan, snapshot_every=4)
+    oracle = plan_sim.oracle_from_trace(events)
+    sa = plan_sim.simulate_plan(plan, oracle=oracle, snapshot_every=4)
+    ok = _diff("budgeted-grid", sa.events, events)
+    if ok:
+        assert sa.chunks == pool.chunk_count
+        assert sa.evictions > 0, "budget never churned — weak scenario"
+        print(f"  chunks={sa.chunks} peak_resident="
+              f"{sa.peak_resident_bytes}B materializations="
+              f"{sa.materializations} evictions={sa.evictions} "
+              f"checkpoints={sa.checkpoints}")
+    return ok
+
+
+def two_tenant_service() -> bool:
+    from repro.analysis import plan_sim
+    from repro.core.cv import _fold_masks, _transition_idx
+    from repro.core.study import Plan, plan_to_dict
+    from repro.data.svm_suite import kfold_chunks, make_dataset
+    from repro.service import StudyService
+    from repro.svm.sources import KernelSpec
+
+    ds = make_dataset("heart", n_override=120)
+    X = jnp.asarray(ds.X)
+    y = jnp.asarray(ds.y, jnp.float64)
+    chunks = kfold_chunks(120, 4, seed=0)
+    nn = chunks.size
+    X, y = X[:nn], y[:nn]
+    masks = jnp.asarray(_fold_masks(chunks))
+    gam = {s: KernelSpec(X=X, gamma=s * ds.gamma, n=int(y.shape[0]))
+           for s in (0.5, 1.0, 2.0)}
+
+    def fold_chain(sources):
+        plan = Plan(sources=dict(sources), y=y, chunk_iters=64,
+                    lane_quantum=2, max_resident=3)
+        n = y.shape[0]
+        for key in sources:
+            plan.lane((key, 0), source=key, train_mask=masks[0], C=ds.C,
+                      alpha0=jnp.zeros(n), f0=-y)
+            for h in range(1, 3):
+                S, R, T = _transition_idx(chunks, h - 1, h)
+                plan.lane((key, h), source=key, train_mask=masks[h],
+                          C=ds.C, dep=(key, h - 1), transform="fold",
+                          params=dict(method="sir", S_idx=S, R_idx=R,
+                                      T_idx=T))
+            for h in range(3):
+                plan.evaluate((key, h), chunks[h])
+        return plan
+
+    plan_a = fold_chain({0.5: gam[0.5], 1.0: gam[1.0]})
+    plan_b = fold_chain({1.0: gam[1.0], 2.0: gam[2.0]})
+    service = StudyService(chunk_iters=64, lane_quantum=2, max_width=4,
+                           max_resident=3)
+    events: list = []
+    service.pool.on_trace = events.append
+    for tenant, pid, plan in (("alice", "a", plan_a), ("bob", "b", plan_b)):
+        emitted: list = []
+        service.submit(tenant, pid, json.loads(json.dumps(
+            plan_to_dict(plan))), emitted.append)
+        assert emitted[0]["type"] == "admitted", emitted[0]
+    entries = [(st.tenant, st.plan) for st in service._studies.values()]
+    while service.pool.step():
+        pass
+    oracle = plan_sim.oracle_from_trace(events)
+    sa = plan_sim.simulate_plans(entries, oracle=oracle)
+    ok = _diff("two-tenant-service", sa.events, events)
+    if ok:
+        assert set(sa.tenant_lane_chunks) == {"'alice'", "'bob'"}, \
+            sa.tenant_lane_chunks
+        assert any(e[0] == "shares" for e in events), \
+            "no shares events — tenant tagging broke"
+        print(f"  chunks={sa.chunks} tenant_lane_chunks="
+              f"{sa.tenant_lane_chunks} materializations="
+              f"{sa.materializations}")
+    return ok
+
+
+def main() -> int:
+    ok = budgeted_grid()
+    ok = two_tenant_service() and ok
+    if not ok:
+        return 1
+    print("plan-sim smoke OK: simulated schedule == live schedule")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

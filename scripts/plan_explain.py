@@ -1,0 +1,177 @@
+#!/usr/bin/env python
+"""Explain what a Study ``Plan`` will make the machine do — statically.
+
+Loads a wire-serialized plan (``--plan file.json``, a ``plan_to_dict``
+image) or builds one from the synthetic suite via ``grid_plans``
+(``--dataset/--gammas/--Cs``), then runs the static schedule simulator
+(``repro.analysis.plan_sim``) and pretty-prints the analyzer findings,
+projected peak resident bytes, dispatch/chunk totals, and (with
+``--trace``) the event trace itself. ``--exact`` additionally runs the
+instrumented live pool and asserts the simulated trace matches it
+event-for-event.
+
+Against a live daemon, ``--connect <socket>`` performs the ``hello``
+handshake, normalizes the plan to the daemon's pool contract (exactly
+as admission would), and predicts the admission verdict — including the
+daemon's per-plan tenant budgets — without submitting anything.
+
+    PYTHONPATH=src python scripts/plan_explain.py --dataset heart \\
+        --gammas 0.5,1,2 --folds 4 --cache-bytes 500000 --trace 40
+"""
+import argparse
+import dataclasses
+import json
+import sys
+
+
+def build_plan(args):
+    if args.plan:
+        from repro.core.study import plan_from_dict
+        with open(args.plan) as fh:
+            return plan_from_dict(json.load(fh))
+    from repro.core.grid import grid_plans
+    from repro.data.svm_suite import make_dataset
+    ds = make_dataset(args.dataset, n_override=args.n)
+    gammas = [float(g) * ds.gamma for g in args.gammas.split(",")]
+    Cs = [float(c) for c in args.Cs.split(",")] if args.Cs else [ds.C]
+    plans = grid_plans(
+        ds, Cs, gammas, k=args.folds, chunk_iters=args.chunk_iters,
+        lane_quantum=args.lane_quantum, max_width=args.max_width,
+        max_resident=args.max_resident, cache_bytes=args.cache_bytes,
+        shrink_every=args.shrink_every)
+    return plans[0]
+
+
+def normalize_to_daemon(plan, socket_path):
+    """The ``hello`` handshake + the daemon's own knob normalization, so
+    the prediction is about the schedule the daemon would actually run."""
+    from repro.service import protocol
+    sock = protocol.connect(socket_path)
+    try:
+        rfile, wfile = sock.makefile("rb"), sock.makefile("wb")
+        protocol.send_msg(wfile, {"op": "hello", "tenant": "plan-explain"})
+        reply = protocol.recv_msg(rfile)
+    finally:
+        sock.close()
+    if not reply or reply.get("type") != "hello":
+        raise RuntimeError(f"bad handshake reply: {reply!r}")
+    c = reply["pool"]
+    plan = dataclasses.replace(
+        plan, chunk_iters=c["chunk_iters"], lane_quantum=c["lane_quantum"],
+        max_width=c["max_width"], max_resident=c["max_resident"],
+        cache_bytes=c["cache_bytes"])
+    return plan, c
+
+
+def show_summary(tag, s) -> None:
+    print(f"  [{tag}] chunks={s['chunks']} lane_chunks={s['lane_chunks']} "
+          f"peak_resident={s['peak_resident_bytes']}B "
+          f"materializations={s['materializations']} "
+          f"evictions={s['evictions']} checkpoints={s['checkpoints']} "
+          f"est_dispatch={s['est_dispatch_s']}s"
+          + (" TRUNCATED" if s["truncated"] else ""))
+    for row in s["dispatches"]:
+        *bucket, count = row
+        print(f"      {count:6d} x {tuple(bucket)}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    src = ap.add_argument_group("plan source")
+    src.add_argument("--plan", default=None,
+                     help="wire plan JSON (plan_to_dict image)")
+    src.add_argument("--dataset", default="heart",
+                     help="suite dataset for grid_plans mode")
+    src.add_argument("--n", type=int, default=None,
+                     help="dataset size override")
+    src.add_argument("--gammas", default="0.5,1.0,2.0",
+                     help="gamma multipliers (x dataset gamma)")
+    src.add_argument("--Cs", default=None,
+                     help="C values (default: the dataset's)")
+    src.add_argument("--folds", type=int, default=4)
+    sched = ap.add_argument_group("schedule knobs (grid_plans mode)")
+    sched.add_argument("--chunk-iters", type=int, default=4096)
+    sched.add_argument("--lane-quantum", type=int, default=4)
+    sched.add_argument("--max-width", type=int, default=None)
+    sched.add_argument("--max-resident", type=int, default=0)
+    sched.add_argument("--cache-bytes", type=int, default=0)
+    sched.add_argument("--shrink-every", type=int, default=0)
+    ap.add_argument("--connect", default=None, metavar="SOCKET",
+                    help="predict admission against this live daemon "
+                    "(hello handshake only; nothing is submitted)")
+    ap.add_argument("--horizon", type=int, default=None,
+                    help="max-bound oracle horizon in iterations "
+                    "(default: plan_check's)")
+    ap.add_argument("--exact", action="store_true",
+                    help="also run the instrumented live pool and assert "
+                    "trace parity (solves the plan!)")
+    ap.add_argument("--trace", type=int, default=0, metavar="N",
+                    help="print the first N trace events (max-bound sim, "
+                    "or the exact sim with --exact)")
+    args = ap.parse_args(argv)
+
+    from repro.analysis import plan_check, plan_sim
+
+    plan = build_plan(args)
+    contract = None
+    if args.connect:
+        plan, contract = normalize_to_daemon(plan, args.connect)
+        print(f"daemon contract: {contract}")
+
+    pa = plan_check.analyze_plan(plan, simulate="bounds",
+                                 sim_horizon=args.horizon)
+    print(f"plan: {len(plan.lanes)} lanes over {len(plan.sources)} "
+          f"sources; {pa.program_count} distinct jit programs "
+          f"(max_width={pa.max_width})")
+    print(f"budget: cache_bytes={plan.cache_bytes} "
+          f"max_resident={plan.max_resident} pinned={pa.pinned_bytes}B "
+          f"largest_managed={pa.peak_managed_bytes}B")
+    if pa.sim:
+        print("schedule simulation:")
+        show_summary("min", pa.sim["min"])
+        show_summary("max", pa.sim["max"])
+    for f in pa.report:
+        print(f"  {f.render()}")
+
+    verdict = "admit" if pa.ok else "REJECT"
+    if contract is not None and pa.ok and pa.sim:
+        hi = pa.sim["max"]
+        if contract.get("plan_chunk_budget") and \
+                hi["lane_chunks"] > contract["plan_chunk_budget"]:
+            verdict = "REJECT (tenant-budget: lane_chunks " \
+                f"{hi['lane_chunks']} > {contract['plan_chunk_budget']})"
+        if contract.get("plan_bytes_budget") and \
+                hi["peak_resident_bytes"] > contract["plan_bytes_budget"]:
+            verdict = "REJECT (tenant-budget: resident bytes " \
+                f"{hi['peak_resident_bytes']} > " \
+                f"{contract['plan_bytes_budget']})"
+    print(f"predicted admission: {verdict}")
+
+    trace_events = None
+    if args.exact:
+        print("running instrumented live pool for the exact oracle ...")
+        events, pool = plan_sim.dry_run(plan)
+        oracle = plan_sim.oracle_from_trace(
+            events, shrink=bool(pool.shrink_every))
+        sa = plan_sim.simulate_plan(plan, oracle=oracle)
+        same = sa.events == events
+        print(f"exact replay: {len(sa.events)} simulated vs "
+              f"{len(events)} live events — "
+              f"{'IDENTICAL' if same else 'MISMATCH'}")
+        show_summary("exact", sa.summary_json())
+        trace_events = sa.events
+        if not same:
+            return 1
+    elif args.trace:
+        horizon = args.horizon or plan_check.SIM_HORIZON_CHUNKS \
+            * int(plan.chunk_iters)
+        sa = plan_sim.simulate_plan(
+            plan, oracle=plan_sim.BoundOracle("max", horizon=horizon))
+        trace_events = sa.events
+    if args.trace and trace_events:
+        print(plan_sim.render_events(trace_events, limit=args.trace))
+    return 0 if verdict == "admit" else 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

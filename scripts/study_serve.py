@@ -37,6 +37,12 @@ def main(argv=None) -> int:
     ap.add_argument("--shrink-quantum", type=int, default=128)
     ap.add_argument("--snapshot-every", type=int, default=1,
                     help="study snapshot period in pool chunks")
+    ap.add_argument("--plan-chunk-budget", type=int, default=0,
+                    help="per-plan admission budget: max-bound simulated "
+                    "lane-chunks (0=unbounded)")
+    ap.add_argument("--plan-bytes-budget", type=int, default=0,
+                    help="per-plan admission budget: max-bound simulated "
+                    "peak resident bytes (0=unbounded)")
     args = ap.parse_args(argv)
 
     from repro.service import StudyServer, StudyService
@@ -47,7 +53,9 @@ def main(argv=None) -> int:
         max_resident=args.max_resident, cache_bytes=args.cache_bytes,
         shrink_every=args.shrink_every, shrink_quantum=args.shrink_quantum,
         checkpoint_root=args.checkpoint_root,
-        snapshot_every=args.snapshot_every)
+        snapshot_every=args.snapshot_every,
+        plan_chunk_budget=args.plan_chunk_budget,
+        plan_bytes_budget=args.plan_bytes_budget)
     server = StudyServer(args.socket, service)
 
     def _drain(signum, frame):

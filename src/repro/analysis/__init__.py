@@ -8,7 +8,13 @@ the source tree that executes it) before anything runs:
   distinct jitted program shapes the schedule can produce (recompile-storm
   warning), SourceCache budget feasibility, checkpoint step-key ranges,
   dead lanes. ``run_plan`` runs it in advisory mode by default; the study
-  daemon's admission path is the strict-mode consumer (ROADMAP).
+  daemon's admission path is the strict-mode consumer, which also replays
+  the schedule through the simulator (time-resolved budget findings).
+* :mod:`repro.analysis.plan_sim` — the static schedule simulator: an
+  abstract interpreter of the ``LanePool`` loop that replays a plan (or a
+  merged multi-tenant pool) without kernels or solves, emitting the same
+  typed event trace as the instrumented live pool — trace-validated in CI
+  (``scripts/ci_plan_sim_smoke.py``; DESIGN.md §Schedule simulator).
 * :mod:`repro.analysis.jit_lint` — AST lint for trace-purity and timer
   hazards over ``src/repro/{svm,core,kernels}``.
 * :mod:`repro.analysis.kernel_lint` — static checks on Pallas launch

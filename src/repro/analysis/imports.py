@@ -15,13 +15,14 @@ import ast
 import pathlib
 
 #: packages whose modules are the lint roots — the SVM reproduction
-#: proper plus the two subsystems it consumes through injection rather
+#: proper plus the subsystems it consumes through injection rather
 #: than imports (checkpoint managers are passed into run_plan/run_grid,
-#: the analyzers run the lint itself), so the import graph alone would
-#: misfile them as scaffolding; everything transitively imported from
-#: here is "adopted" code
+#: the analyzers run the lint itself, the study daemon is an entry point
+#: nothing imports), so the import graph alone would misfile them as
+#: scaffolding; everything transitively imported from here is "adopted"
+#: code
 ROOT_PACKAGES = ("repro.svm", "repro.core", "repro.kernels",
-                 "repro.checkpoint", "repro.analysis")
+                 "repro.checkpoint", "repro.analysis", "repro.service")
 
 
 def src_root(start=__file__) -> pathlib.Path:

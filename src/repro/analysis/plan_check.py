@@ -66,6 +66,15 @@ STORM_THRESHOLD = 8
 #: falls back to the lane count (an upper bound) — noted in the analysis
 ANTICHAIN_LIMIT = 512
 
+#: max-bound simulation horizon, in chunks per lane: admission must stay
+#: cheap, and residency/eviction behaviour is periodic well before this
+SIM_HORIZON_CHUNKS = 8
+
+#: eviction-thrash warning: more than this many evictions per managed
+#: source over the max-bound schedule means kernels re-materialize
+#: repeatedly instead of draining
+THRASH_FACTOR = 2
+
 
 class PlanRejected(ValueError):
     """``check_plan``'s strict rejection. A ``ValueError`` (existing
@@ -82,7 +91,8 @@ class PlanRejected(ValueError):
 @dataclasses.dataclass
 class PlanAnalysis:
     """The analyzer's answer: distinct program shapes, per-source width
-    profile, budget accounting, and the findings report."""
+    profile, budget accounting, schedule-simulation summaries (when the
+    simulator ran), and the findings report."""
     programs: list[tuple]      # sorted distinct (program, kind, w, cap, n, dtype, wss)
     program_count: int
     per_source: dict           # key -> {kind, n, dtype, peak_width, widths, caps}
@@ -90,6 +100,9 @@ class PlanAnalysis:
     pinned_bytes: int
     peak_managed_bytes: int    # largest single managed source
     report: Report
+    #: ``{"min": ..., "max": ...}`` ScheduleAnalysis.summary_json() dicts
+    #: from the bounding simulations (None when ``simulate="off"``)
+    sim: dict | None = None
 
     @property
     def ok(self) -> bool:
@@ -103,6 +116,7 @@ class PlanAnalysis:
                 "max_width": self.max_width,
                 "pinned_bytes": self.pinned_bytes,
                 "peak_managed_bytes": self.peak_managed_bytes,
+                "sim": self.sim,
                 "findings": self.report.to_json()["findings"]}
 
 
@@ -175,7 +189,8 @@ def _topo(prereqs: dict) -> list:
 
 def analyze_plan(plan, *, checkpoint=None, backend=None,
                  storm_threshold: int = STORM_THRESHOLD,
-                 context: str = "") -> PlanAnalysis:
+                 context: str = "", simulate: str = "off",
+                 sim_horizon: int | None = None) -> PlanAnalysis:
     """Build the pre-execution report for ``plan``. Never raises on plan
     content — structural problems (the ``_validate_plan`` surface) come
     back as ``invalid-plan`` error findings, so a daemon can report them
@@ -184,7 +199,21 @@ def analyze_plan(plan, *, checkpoint=None, backend=None,
 
     ``context`` names the submission the findings belong to (the daemon
     threads ``tenant/plan_id`` here), so multi-tenant rejection logs name
-    the offending plan; it never enters finding identity."""
+    the offending plan; it never enters finding identity.
+
+    ``simulate="bounds"`` additionally replays the schedule through the
+    static simulator (``repro.analysis.plan_sim``) under the min/max
+    bounding oracles — ``sim_horizon`` iterations per lane for the max
+    bound (default ``SIM_HORIZON_CHUNKS * chunk_iters``) — attaching the
+    summaries as ``PlanAnalysis.sim`` and the TIME-RESOLVED findings:
+    ``cache-infeasible-time`` when the peak co-resident bytes (pinned +
+    managed, over the simulated schedule) exceed ``cache_bytes`` (an
+    error when even the min schedule exceeds — no convergence pattern
+    stays within the declared budget — a warning when only the max
+    does), and ``eviction-thrash`` when the max schedule re-materializes
+    kernels far beyond the source count. This is what catches the plan
+    the worst-single-source rule admits: each source fits alone, but the
+    schedule holds several at once."""
     from repro.core import study   # deferred: study imports this lazily
 
     report = Report()
@@ -275,6 +304,49 @@ def analyze_plan(plan, *, checkpoint=None, backend=None,
         report.add("cache-infeasible", "<plan>", "budget",
                    "negative residency budget", context=context)
 
+    # ---- schedule simulation (time-resolved budget findings) -------------
+    sim = None
+    if simulate not in ("off", "bounds"):
+        raise ValueError(f"unknown simulate mode {simulate!r} "
+                         "(have 'off', 'bounds')")
+    if simulate == "bounds" and not report.errors:
+        from repro.analysis import plan_sim
+        horizon = int(sim_horizon) if sim_horizon \
+            else SIM_HORIZON_CHUNKS * int(plan.chunk_iters)
+        try:
+            lo = plan_sim.simulate_plan(
+                plan, oracle=plan_sim.BoundOracle("min"), backend=backend)
+            hi = plan_sim.simulate_plan(
+                plan, oracle=plan_sim.BoundOracle("max", horizon=horizon),
+                backend=backend)
+        except Exception as e:   # admission must degrade, not crash
+            report.add("sim-error", "<plan>", "schedule",
+                       f"schedule simulation failed: {e}", severity="warn",
+                       context=context)
+        else:
+            sim = {"min": lo.summary_json(), "max": hi.summary_json()}
+            if plan.cache_bytes:
+                for sa, severity in ((lo, "error"), (hi, "warn")):
+                    if sa.peak_resident_bytes > plan.cache_bytes:
+                        report.add(
+                            "cache-infeasible-time", "<plan>", "schedule",
+                            f"simulated schedule ({sa.oracle} oracle) "
+                            f"co-holds {sa.peak_resident_bytes} resident "
+                            f"bytes (pinned + managed), exceeding the "
+                            f"declared cache_bytes={plan.cache_bytes} "
+                            "budget — every source fits alone, but the "
+                            "schedule the pool will execute does not",
+                            severity=severity, context=context)
+                        break
+            if managed and hi.evictions > THRASH_FACTOR * len(managed):
+                report.add(
+                    "eviction-thrash", "<plan>", "schedule",
+                    f"max-bound schedule evicts {hi.evictions} times for "
+                    f"{len(managed)} managed sources — kernels "
+                    "re-materialize instead of draining; raise the "
+                    "residency budget or narrow max_width",
+                    severity="warn", context=context)
+
     # ---- checkpoint step-key ranges -------------------------------------
     if checkpoint is not None:
         base = int(getattr(checkpoint, "base_step", study.STUDY_BASE))
@@ -306,17 +378,21 @@ def analyze_plan(plan, *, checkpoint=None, backend=None,
                         per_source=per_source, max_width=max_width,
                         pinned_bytes=int(pinned_bytes),
                         peak_managed_bytes=int(peak_managed),
-                        report=report)
+                        report=report, sim=sim)
 
 
 def check_plan(plan, *, checkpoint=None, backend=None,
-               context: str = "") -> PlanAnalysis:
+               context: str = "", simulate: str = "bounds",
+               sim_horizon: int | None = None) -> PlanAnalysis:
     """Strict-mode analysis: raise :class:`PlanRejected` (a
     ``ValueError`` carrying the analysis) on any error-severity finding —
     the admission gate the study daemon calls verbatim; returns the
-    analysis otherwise."""
+    analysis otherwise. Strict mode runs the schedule simulator by
+    default (``simulate="bounds"``): admission holds the plan to the
+    TIME-RESOLVED budget, not just the worst single source."""
     pa = analyze_plan(plan, checkpoint=checkpoint, backend=backend,
-                      context=context)
+                      context=context, simulate=simulate,
+                      sim_horizon=sim_horizon)
     if pa.report.errors:
         raise PlanRejected(
             "plan rejected by static analysis:\n"

@@ -21,11 +21,16 @@ from repro.service import protocol
 class PlanRejectedByServer(ValueError):
     """The daemon's admission gate refused the plan; ``findings`` is the
     structured ``check_plan`` payload (rule/severity/message dicts) —
-    empty for parse/contract rejections, whose story is in ``str(e)``."""
+    empty for parse/contract rejections, whose story is in ``str(e)``.
+    ``analysis`` is the full ``PlanAnalysis.to_json()`` dict (programs,
+    budgets, min/max schedule-simulation summaries) when the analyzer
+    ran, else None."""
 
-    def __init__(self, message: str, findings: list):
+    def __init__(self, message: str, findings: list,
+                 analysis: dict | None = None):
         super().__init__(message)
         self.findings = findings
+        self.analysis = analysis
 
 
 @dataclasses.dataclass
@@ -100,7 +105,8 @@ class StudyClient:
                     tenant_stats=msg["tenant_stats"])
             elif kind == "rejected":
                 raise PlanRejectedByServer(msg["error"],
-                                           msg.get("findings", []))
+                                           msg.get("findings", []),
+                                           msg.get("analysis"))
             elif kind == "error":
                 raise RuntimeError(f"study {plan_id!r} failed on the "
                                    f"daemon: {msg['error']}")

@@ -11,14 +11,20 @@ Client -> server ops:
 * ``{"op": "hello", "tenant": <str>}`` — names the connection's tenant
   (the fair-share accounting group). Reply: ``{"type": "hello",
   "pool": {...}}`` with the daemon's result-affecting pool contract
-  (tol, wss, shrink settings) — what ``submit`` will hold plans to.
+  (tol, wss, shrink settings) — what ``submit`` will hold plans to —
+  plus the per-plan admission budgets ``plan_chunk_budget`` /
+  ``plan_bytes_budget`` (0 = unbounded), enforced against the max-bound
+  simulated schedule.
 * ``{"op": "submit", "plan_id": <str>, "plan": <plan_to_dict image>}`` —
   admission + execution. Streamed replies, in order: ``admitted`` (with
   per-source dedup accounting), zero or more ``result`` events (one per
   lane, the moment it retires, bit-exact ``SMOResult`` image), then
   ``done`` (evals, per-lane stats, tenant/source accounting). A plan
   that fails admission gets a single ``rejected`` reply carrying the
-  ``check_plan`` findings as structured payload — nothing materialized.
+  ``check_plan`` findings as structured payload AND the full
+  ``PlanAnalysis.to_json()`` image under ``analysis`` (programs,
+  budgets, min/max schedule-simulation summaries) — nothing
+  materialized.
 * ``{"op": "status"}`` — pool occupancy + per-tenant accounting.
 * ``{"op": "shutdown"}`` — graceful drain: in-flight studies flush their
   checkpoint snapshots (they resume on the next daemon start), the

@@ -15,12 +15,18 @@ Two layers, so the scheduling core is testable without sockets:
      quantum, width, budgets — are normalized to the pool's, which the
      bit-parity invariant makes safe), and runs
      ``repro.analysis.plan_check.check_plan`` VERBATIM — budget
-     feasibility against the pool's declared budget, checkpoint-range
-     audit, compile-shape enumeration — before any kernel materializes.
+     feasibility against the pool's declared budget (TIME-RESOLVED: the
+     static schedule simulator replays the plan under bounding oracles,
+     so a plan whose schedule co-holds sources beyond ``cache_bytes`` is
+     refused even when each source fits alone), checkpoint-range audit,
+     compile-shape enumeration — before any kernel materializes.
      Daemon policy additionally hardens the ``recompile-storm`` warning
      into a rejection: one tenant must not inject an unbounded program
-     set into the shared jit cache. Rejections carry the structured
-     findings on the wire (``PlanRejected.analysis``).
+     set into the shared jit cache. Per-plan tenant budgets
+     (``plan_chunk_budget`` lane-chunks, ``plan_bytes_budget`` peak
+     resident bytes — advertised in the ``hello`` contract) are held
+     against the max-bound simulated schedule. Rejections carry the
+     full structured analysis on the wire (``PlanRejected.analysis``).
   2. **namespaces** the admitted plan: lane ids become
      ``("tenant/plan_id", original_id)`` and source keys are replaced by
      content-identity keys (below), so many tenants' graphs coexist in
@@ -110,7 +116,8 @@ class StudyService:
                  shrink_quantum: int = 128, shrink_caps=None,
                  shrink_on_seed: bool = True,
                  checkpoint_root: str | None = None,
-                 snapshot_every: int = 1, max_to_keep: int = 3):
+                 snapshot_every: int = 1, max_to_keep: int = 3,
+                 plan_chunk_budget: int = 0, plan_bytes_budget: int = 0):
         self.pool = LanePool(
             {}, {}, tol=tol, wss=wss, chunk_iters=chunk_iters,
             lane_quantum=lane_quantum, max_width=max_width,
@@ -121,6 +128,10 @@ class StudyService:
         self.checkpoint_root = checkpoint_root
         self.snapshot_every = max(int(snapshot_every), 1)
         self.max_to_keep = int(max_to_keep)
+        #: per-plan admission budgets, 0 = unbounded: held against the
+        #: MAX-BOUND simulated schedule at submit time
+        self.plan_chunk_budget = int(plan_chunk_budget)
+        self.plan_bytes_budget = int(plan_bytes_budget)
         self._studies: dict[str, _Study] = {}
         self._ident_to_key: dict = {}     # source identity -> pool key
         self._key_ident: dict = {}        # pool key -> identity
@@ -200,7 +211,9 @@ class StudyService:
                 "lane_quantum": self.pool.lane_quantum,
                 "max_width": self.pool.max_width,
                 "max_resident": self.pool.cache.max_resident,
-                "cache_bytes": self.pool.cache.cache_bytes}
+                "cache_bytes": self.pool.cache.cache_bytes,
+                "plan_chunk_budget": self.plan_chunk_budget,
+                "plan_bytes_budget": self.plan_bytes_budget}
 
     def _check_contract(self, plan) -> None:
         if plan.shrink_every == "auto":
@@ -230,6 +243,45 @@ class StudyService:
                 "plan/pool contract mismatch (these change the iterate "
                 "sequence — a served run must be bit-identical to the "
                 "client's own): " + "; ".join(bad))
+
+    def _check_tenant_budget(self, pa, context: str) -> None:
+        """Hold the daemon's per-plan budgets against the MAX-BOUND
+        simulated schedule (``pa.sim["max"]``): worst-case lane-chunk
+        and peak-resident-byte cost, known before any kernel
+        materializes. Budget breaches become ``tenant-budget`` error
+        findings and a structured :class:`PlanRejected`."""
+        if not (self.plan_chunk_budget or self.plan_bytes_budget):
+            return
+        hi = (pa.sim or {}).get("max")
+        if hi is None:
+            # the simulator degraded (a sim-error warning is already on
+            # the report) — a budget that cannot be checked cannot be
+            # held, so the plan is refused
+            pa.report.add(
+                "tenant-budget", "<plan>", "schedule",
+                "daemon enforces per-plan budgets but the schedule "
+                "simulation produced no max bound", context=context)
+        else:
+            if self.plan_chunk_budget and \
+                    hi["lane_chunks"] > self.plan_chunk_budget:
+                pa.report.add(
+                    "tenant-budget", "<plan>", "lane_chunks",
+                    f"max-bound schedule costs {hi['lane_chunks']} "
+                    f"lane-chunks, over the daemon's per-plan budget of "
+                    f"{self.plan_chunk_budget}", context=context)
+            if self.plan_bytes_budget and \
+                    hi["peak_resident_bytes"] > self.plan_bytes_budget:
+                pa.report.add(
+                    "tenant-budget", "<plan>", "resident_bytes",
+                    f"max-bound schedule co-holds "
+                    f"{hi['peak_resident_bytes']} resident bytes, over "
+                    f"the daemon's per-plan budget of "
+                    f"{self.plan_bytes_budget}", context=context)
+        bad = [f for f in pa.report.errors if f.rule == "tenant-budget"]
+        if bad:
+            raise plan_check.PlanRejected(
+                "daemon per-plan budget exceeded:\n"
+                + "\n".join(f.render() for f in bad), pa)
 
     def _checkpoint_for(self, tenant: str, plan_id: str, plan):
         if not self.checkpoint_root:
@@ -274,9 +326,11 @@ class StudyService:
                 raise plan_check.PlanRejected(
                     "daemon policy rejects compile-storm plans:\n"
                     + "\n".join(f.render() for f in storms), pa)
+            self._check_tenant_budget(pa, ns)
         except plan_check.PlanRejected as e:
             emit({"type": "rejected", "plan_id": plan_id, "error": str(e),
-                  "findings": e.analysis.report.to_json()["findings"]})
+                  "findings": e.analysis.report.to_json()["findings"],
+                  "analysis": e.analysis.to_json()})
             return
         except (ValueError, TypeError, KeyError) as e:
             emit({"type": "rejected", "plan_id": plan_id, "error": str(e),

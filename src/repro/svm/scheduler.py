@@ -119,6 +119,88 @@ def possible_widths(peak: int, quantum: int = 4,
                          for w in range(1, max(cap, 1) + 1)}))
 
 
+def order_capped(lanes, *, sticky, resident, served, source) -> list:
+    """Width-capped dispatch priority — the PURE form of the pool's
+    sticky > resident > cold ordering, shared with the schedule simulator
+    (``repro.analysis.plan_sim``) so prediction and execution cannot
+    drift. ``lanes`` is any sequence; ``source(lane)`` names its source
+    key, ``resident(key)``/``served(lane)`` supply the pool-or-simulated
+    residency and fairness state. Each tier is stable-sorted by
+    ``served`` (ties keep input order — the pool's insertion order)."""
+    stick = [ln for ln in lanes if source(ln) == sticky]
+    near = [ln for ln in lanes
+            if source(ln) != sticky and resident(source(ln))]
+    far = [ln for ln in lanes
+           if source(ln) != sticky and not resident(source(ln))]
+    return (sorted(stick, key=served) + sorted(near, key=served)
+            + sorted(far, key=served))
+
+
+def select_capped(lanes, *, max_width, sticky, resident, served, source,
+                  tenant, tenant_served) -> list:
+    """Pure form of ``LanePool._cap_select``: single-tenant inputs take
+    the historical sticky/resident/served order truncated to the width
+    budget; multi-tenant inputs fair-share it — per-tenant ordering by
+    the same policy, tenants interleaved round-robin least-served first.
+    ``tenant(lane)`` tags a lane, ``tenant_served`` maps tag -> lane-chunk
+    count. Shared with the schedule simulator."""
+    tenants = list(dict.fromkeys(tenant(ln) for ln in lanes))
+    order = dict(sticky=sticky, resident=resident, served=served,
+                 source=source)
+    if len(tenants) <= 1:
+        return order_capped(lanes, **order)[:max_width]
+    per = {t: order_capped([ln for ln in lanes
+                            if tenant(ln) is t or tenant(ln) == t], **order)
+           for t in tenants}
+    tenants.sort(key=lambda t: tenant_served.get(t, 0))
+    out: list = []
+    while len(out) < max_width and any(per.values()):
+        for t in tenants:
+            if per[t] and len(out) < max_width:
+                out.append(per[t].pop(0))
+    return out
+
+
+def budget_sources(srcs, *, budgeted, pinned, resident, sticky, nbytes,
+                   fits) -> set:
+    """Pure form of ``LanePool._budget_sources``: which of the candidate
+    source keys may dispatch this chunk under the residency budget.
+    Pinned sources always; managed sources greedily in sticky > resident
+    > cold priority (stable: input order breaks ties) while the budget
+    rule (``fits(count, bytes)``) admits the next one. Shared with the
+    schedule simulator."""
+    srcs = list(dict.fromkeys(srcs))
+    if not budgeted or len(srcs) <= 1:
+        return set(srcs)
+    allowed = {s for s in srcs if pinned(s)}
+    managed = sorted((s for s in srcs if s not in allowed),
+                     key=lambda s: (s != sticky, not resident(s)))
+    taken: list = []
+    used = 0
+    for s in managed:
+        nb = nbytes(s)
+        if taken and not fits(len(taken) + 1, used + nb):
+            break
+        taken.append(s)
+        used += nb
+    return allowed | set(taken)
+
+
+def snapshot_nbytes(n: int, itemsize: int, lane_count: int,
+                    shrink: bool = False) -> int:
+    """Estimated serialized bytes of one pool snapshot record
+    (``snapshot_lanes``): per lane, stacked ``alpha`` + ``f`` rows
+    (``2 * n * itemsize``), an ``n_iter`` scalar (8) and a ``done`` flag
+    (1); shrink-enabled pools add the ``active`` mask (n), the
+    ``shrunk``/``no_shrink`` flags and the int32 ``unshrinks`` counter.
+    The simulator prices checkpoint write volume with this — an estimate
+    of array payload, not serialization framing."""
+    per = 2 * int(n) * int(itemsize) + 8 + 1
+    if shrink:
+        per += int(n) + 1 + 1 + 4
+    return int(lane_count) * per
+
+
 @dataclasses.dataclass
 class _Lane:
     id: Any
@@ -169,7 +251,8 @@ class LanePool:
                  on_snapshot=None, snapshot_every: int = 1,
                  on_result=None, on_lane_chunk=None,
                  shrink_every: int | str = 0, shrink_quantum: int = 128,
-                 shrink_caps=None, shrink_on_seed: bool = True):
+                 shrink_caps=None, shrink_on_seed: bool = True,
+                 on_trace=None):
         if not isinstance(sources, dict):
             raise ValueError("sources must be a {key: source} dict")
         # an EMPTY pool is legal: a long-lived daemon constructs the pool
@@ -216,6 +299,12 @@ class LanePool:
         self.snapshot_every = max(int(snapshot_every), 1)
         self.on_result = on_result
         self.on_lane_chunk = on_lane_chunk
+        # schedule trace hook: when set, the pool (and its cache) emit the
+        # typed event grammar of DESIGN.md §Schedule simulator — the
+        # instrumented dry-run the simulator's output is asserted against.
+        # Assignable after construction (the daemon's pool outlives any
+        # one trace consumer).
+        self.on_trace = on_trace
         self._lanes: dict[Any, _Lane] = {}
         self._order: list[Any] = []       # insertion order = packing order
         self.results: dict[Any, SMOResult] = {}
@@ -239,7 +328,8 @@ class LanePool:
         self.cache = SourceCache(
             self.sources, max_resident=max_resident, cache_bytes=cache_bytes,
             wss=wss, distance=self._source_distance,
-            sticky=lambda: self._sticky, on_evict=self._on_source_evict)
+            sticky=lambda: self._sticky, on_evict=self._on_source_evict,
+            on_trace=self._trace)
         for key, entry in self.sources.items():
             # every entry answers ``fused`` cheaply now (pinned sources
             # directly, specs by declaration — a pallas_rbf spec is fused
@@ -247,6 +337,14 @@ class LanePool:
             # all of them; factory *products* are re-checked at
             # materialization anyway (the same rule, deferred)
             self.cache.check_fused(key, entry)
+
+    def _trace(self, *event) -> None:
+        """Emit one schedule trace event (a plain tuple) to ``on_trace``.
+        The cache funnels its materialize/evict events through here too,
+        so assigning ``pool.on_trace`` after construction captures the
+        full grammar."""
+        if self.on_trace is not None:
+            self.on_trace(tuple(event))
 
     def y_of(self, source_key) -> jnp.ndarray:
         return self._ys[source_key]
@@ -281,22 +379,13 @@ class LanePool:
         below the live source count would re-materialize kernels every
         chunk — with it, the pool drains resident kernels first and
         materialization count tracks the source count, not the chunk
-        count, under every width policy."""
-        srcs = list(dict.fromkeys(ln.source for ln in lanes))
-        if not self.cache.budgeted or len(srcs) <= 1:
-            return set(srcs)
-        allowed = {s for s in srcs if self.cache.pinned(s)}
-        managed = sorted((s for s in srcs if s not in allowed),
-                         key=lambda s: (s != self._sticky,
-                                        not self.cache.resident(s)))
-        taken, used = [], 0
-        for s in managed:
-            nb = self.cache.nbytes_of(s)
-            if taken and not self.cache.fits(len(taken) + 1, used + nb):
-                break
-            taken.append(s)
-            used += nb
-        return allowed | set(taken)
+        count, under every width policy. Defers to the pure
+        :func:`budget_sources` the simulator replays."""
+        return budget_sources(
+            [ln.source for ln in lanes], budgeted=self.cache.budgeted,
+            pinned=self.cache.pinned, resident=self.cache.resident,
+            sticky=self._sticky, nbytes=self.cache.nbytes_of,
+            fits=self.cache.fits)
 
     def _source_key(self, source) -> Any:
         if source is not None:
@@ -398,6 +487,8 @@ class LanePool:
                 lane.alpha0, lane.f0, lane.n_iter0 = alpha0, f0, int(n_iter0)
         self._lanes[lane_id] = lane
         self._order.append(lane_id)
+        if lane.state is not None:
+            self._trace("admit", lane_id, key)
 
     def _attach_shrink(self, lane: _Lane) -> None:
         """Build a lane's shrink ledger the moment its state exists (the
@@ -438,6 +529,7 @@ class LanePool:
         self._lanes[lane_id] = lane
         self._order.append(lane_id)
         self.results[lane_id] = result
+        self._trace("given", lane_id)
 
     def lane_times(self, lane_id) -> tuple[float, float]:
         """(seed_s, solve_s) wall time attributed to one lane: its admission
@@ -462,6 +554,7 @@ class LanePool:
                                         lane.f0, n_iter0=lane.n_iter0)
                 lane.alpha0 = lane.f0 = None
                 self._attach_shrink(lane)
+                self._trace("admit", lane_id, lane.source)
                 continue
             if lane.dep not in self.results:
                 continue
@@ -478,6 +571,7 @@ class LanePool:
             self.seed_time += dt
             lane.state = init_state(meta, y, lane.train_mask, alpha0, f0)
             self._attach_shrink(lane)
+            self._trace("admit", lane_id, lane.source)
 
     def _live(self) -> list[_Lane]:
         return [self._lanes[i] for i in self._order
@@ -488,6 +582,8 @@ class LanePool:
         lane.result = finalize(lane.state, self._ys[lane.source],
                                lane.train_mask, lane.C, self.tol)
         self.results[lane.id] = lane.result
+        if self.on_trace is not None:     # int() syncs — only when tracing
+            self._trace("retire", lane.id, int(lane.result.n_iter))
         if self.on_result is not None:
             self.on_result(lane.id, lane.result)
 
@@ -512,6 +608,7 @@ class LanePool:
                    jnp.asarray(caps, jnp.int64),
                    EngineState.stack(states))
         self._packed[key] = (tuple(ln.id for ln in live), payload)
+        self._trace("pack", key, tuple(ln.id for ln in live))
 
     def _writeback(self, key) -> None:
         """Write a source's packed states back into its lanes and drop the
@@ -540,15 +637,12 @@ class LanePool:
         paying for the next kernel, so materialization count tracks the
         source count, not the chunk count. Dense (pinned) sources are
         always resident, so single-matrix pools keep the exact pre-cache
-        ordering."""
-        sticky = [ln for ln in selected if ln.source == self._sticky]
-        near = [ln for ln in selected if ln.source != self._sticky
-                and self.cache.resident(ln.source)]
-        far = [ln for ln in selected if ln.source != self._sticky
-               and not self.cache.resident(ln.source)]
-        return sorted(sticky, key=lambda ln: ln.served) + \
-            sorted(near, key=lambda ln: ln.served) + \
-            sorted(far, key=lambda ln: ln.served)
+        ordering. Defers to the pure :func:`order_capped` the simulator
+        replays."""
+        return order_capped(selected, sticky=self._sticky,
+                            resident=self.cache.resident,
+                            served=lambda ln: ln.served,
+                            source=lambda ln: ln.source)
 
     def _cap_select(self, selected: list[_Lane]) -> list[_Lane]:
         """Park the overflow for one chunk. Single-tenant pools (every
@@ -558,20 +652,15 @@ class LanePool:
         resident/served policy, then tenants are interleaved round-robin
         — least-served tenant first — so one tenant's wide grid cannot
         starve another's two folds, while each tenant's own lanes still
-        drain source-sticky."""
-        tenants = list(dict.fromkeys(ln.tenant for ln in selected))
-        if len(tenants) <= 1:
-            return self._cap_order(selected)[:self.max_width]
-        per = {t: self._cap_order([ln for ln in selected if ln.tenant is t
-                                   or ln.tenant == t])
-               for t in tenants}
-        tenants.sort(key=lambda t: self._tenant_served.get(t, 0))
-        out: list[_Lane] = []
-        while len(out) < self.max_width and any(per.values()):
-            for t in tenants:
-                if per[t] and len(out) < self.max_width:
-                    out.append(per[t].pop(0))
-        return out
+        drain source-sticky. Defers to the pure :func:`select_capped` the
+        simulator replays."""
+        return select_capped(selected, max_width=self.max_width,
+                             sticky=self._sticky,
+                             resident=self.cache.resident,
+                             served=lambda ln: ln.served,
+                             source=lambda ln: ln.source,
+                             tenant=lambda ln: ln.tenant,
+                             tenant_served=self._tenant_served)
 
     def run(self) -> dict[Any, SMOResult]:
         """Drive every lane to retirement; returns {lane_id: SMOResult}."""
@@ -633,6 +722,7 @@ class LanePool:
         # source) — not the last group dispatched, which under a split
         # selection would hand stickiness to the overflow source
         self._sticky = selected[0].source
+        chunk = self.chunk_count
         dispatched = 0
         for gkey, lanes in groups.items():
             width = (1 if len(lanes) == 1
@@ -647,6 +737,8 @@ class LanePool:
             else:
                 key, cap = gkey, 0
                 self._programs.add((key, width))
+            self._trace("dispatch", chunk, key, cap, width,
+                        tuple(ln.id for ln in lanes))
             # dispatch may materialize the group's kernel through the
             # cache; that delta is kernel time, not solve time
             t0 = time.perf_counter()
@@ -662,6 +754,15 @@ class LanePool:
             for lane in lanes:
                 lane.solve_s += dt / len(lanes)
         self._width_log.append((len(live), dispatched))
+        if self.on_trace is not None:
+            if any(ln.tenant is not None for ln in selected):
+                shares: dict[Any, int] = {}
+                for lane in selected:
+                    shares[lane.tenant] = shares.get(lane.tenant, 0) + 1
+                self._trace("shares", chunk, tuple(sorted(
+                    (repr(t), c) for t, c in shares.items())))
+            self._trace("resident", chunk,
+                        self.cache.pinned_bytes + self.cache.resident_bytes)
         self.chunk_count += 1
         if self.on_lane_chunk is not None:
             for lane in selected:
@@ -669,6 +770,17 @@ class LanePool:
                     self.on_lane_chunk(lane.id, self._lane_state(lane))
         if self.on_snapshot is not None and \
                 self.chunk_count % self.snapshot_every == 0:
+            if self.on_trace is not None:
+                ids = [i for i in self._order
+                       if self._lanes[i].state is not None
+                       or self._lanes[i].result is not None]
+                first = self._lanes[ids[0]]
+                ref = (first.result.alpha if first.result is not None
+                       else first.state.alpha)
+                self._trace("checkpoint", chunk, tuple(ids),
+                            snapshot_nbytes(int(ref.shape[0]),
+                                            ref.dtype.itemsize, len(ids),
+                                            bool(self.shrink_every)))
             self.on_snapshot(self)
         return True
 

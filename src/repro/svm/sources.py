@@ -160,6 +160,35 @@ def _source_nbytes(src) -> int:
     return int(K.nbytes) if K is not None else 0
 
 
+def source_nbytes(src) -> int:
+    """Resident bytes a source (or spec) will occupy — the figure the
+    cache budget accounts. Public alias the schedule simulator prices
+    plans with."""
+    return _source_nbytes(src)
+
+
+def budget_fits(count: int, nbytes: int, *, max_resident: int = 0,
+                cache_bytes: int = 0) -> bool:
+    """THE residency budget rule (0 = unbounded), in pure form: eviction,
+    the scheduler's per-chunk source selection and the schedule simulator
+    (``repro.analysis.plan_sim``) all defer here, so they cannot
+    desynchronize."""
+    if max_resident and count > max_resident:
+        return False
+    return not (cache_bytes and nbytes > cache_bytes)
+
+
+def pick_victim(resident, *, sticky, distance):
+    """THE eviction victim rule, in pure form: ``resident`` is the
+    managed keys in recency order (least-recently-used first). Non-sticky
+    before sticky, then ascending schedule distance (fewest remaining
+    lanes = needed least), then LRU. Shared by the live cache and the
+    schedule simulator."""
+    keys = list(resident)
+    return min(keys, key=lambda k: (k == sticky, distance(k),
+                                    keys.index(k)))
+
+
 class SourceCache:
     """Residency manager for a pool's ``{key: source-or-spec}`` dict.
 
@@ -189,7 +218,8 @@ class SourceCache:
                  cache_bytes: int = 0, wss: str = "2",
                  distance: Callable[[Any], int] | None = None,
                  sticky: Callable[[], Any] | None = None,
-                 on_evict: Callable[[Any], None] | None = None):
+                 on_evict: Callable[[Any], None] | None = None,
+                 on_trace: Callable | None = None):
         self._entries = dict(entries)
         self.max_resident = int(max_resident)
         self.cache_bytes = int(cache_bytes)
@@ -197,6 +227,9 @@ class SourceCache:
         self._distance = distance or (lambda key: 0)
         self._sticky = sticky or (lambda: None)
         self.on_evict = on_evict
+        # varargs event sink (the pool's ``_trace``): materialize/evict
+        # events join the scheduler's trace grammar through here
+        self.on_trace = on_trace
         self._resident: dict[Any, Any] = {}     # managed key -> source (LRU)
         self._pinned: dict[Any, Any] = {
             k: v for k, v in entries.items() if not is_factory(v)}
@@ -228,13 +261,12 @@ class SourceCache:
 
     def fits(self, count: int, nbytes: int) -> bool:
         """True when ``count`` managed sources totalling ``nbytes`` bytes
-        fit the budget (0 = unbounded). The ONE place the budget rule
-        lives: eviction (``_evict_for``) and the scheduler's per-chunk
-        source selection (``LanePool._budget_sources``) both defer here,
-        so they cannot desynchronize."""
-        if self.max_resident and count > self.max_resident:
-            return False
-        return not (self.cache_bytes and nbytes > self.cache_bytes)
+        fit the budget (0 = unbounded). Defers to the pure
+        :func:`budget_fits`: eviction (``_evict_for``), the scheduler's
+        per-chunk source selection (``LanePool._budget_sources``) and the
+        schedule simulator all share the one rule."""
+        return budget_fits(count, nbytes, max_resident=self.max_resident,
+                           cache_bytes=self.cache_bytes)
 
     def meta(self, key):
         """The entry for protocol questions that must not materialize
@@ -247,6 +279,10 @@ class SourceCache:
     @property
     def resident_bytes(self) -> int:
         return sum(_source_nbytes(s) for s in self._resident.values())
+
+    @property
+    def pinned_bytes(self) -> int:
+        return sum(_source_nbytes(s) for s in self._pinned.values())
 
     @property
     def stats(self) -> dict:
@@ -298,13 +334,15 @@ class SourceCache:
         while self._resident and not self.fits(
                 len(self._resident) + 1,
                 self.resident_bytes + incoming_bytes):
-            sticky = self._sticky()
-            keys = list(self._resident)   # dict order = recency (LRU first)
-            victim = min(keys, key=lambda k: (k == sticky,
-                                              self._distance(k),
-                                              keys.index(k)))
+            # dict order = recency (LRU first); the pure rule is shared
+            # with the schedule simulator
+            victim = pick_victim(self._resident, sticky=self._sticky(),
+                                 distance=self._distance)
             if self.on_evict is not None:
                 self.on_evict(victim)
+            if self.on_trace is not None:
+                self.on_trace("evict", victim,
+                              _source_nbytes(self._resident[victim]))
             del self._resident[victim]
             self.evictions += 1
 
@@ -328,6 +366,8 @@ class SourceCache:
         self.materializations += 1
         self.check_fused(key, src)
         self._resident[key] = src
+        if self.on_trace is not None:
+            self.on_trace("materialize", key, _source_nbytes(src))
         self.peak_resident = max(
             self.peak_resident, len(self._pinned) + len(self._resident))
         self.peak_resident_bytes = max(

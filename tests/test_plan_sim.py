@@ -1,0 +1,472 @@
+"""Static schedule simulator: trace-validated abstract interpretation.
+
+The load-bearing invariant is EVENT-FOR-EVENT trace equality: the
+simulator's replay of a plan under an exact iteration oracle must match
+the instrumented live pool on every suite dataset, across budgeted
+grids, shrink-enabled lanes, and a two-tenant service run — the
+scheduler's decisions all route through pure functions both sides
+share, so any drift is a bug, not an approximation. On top of that:
+bounding oracles must bracket the exact schedule, the time-resolved
+``cache-infeasible-time`` finding must catch the plan the
+worst-single-source rule admits, the daemon's per-plan tenant budgets
+must reject over-budget plans with structured findings that round-trip
+the wire, and the extracted pure functions must hold their contracts on
+randomized inputs (hypothesis when available, seeded random otherwise).
+"""
+import dataclasses
+import json
+import random
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import plan_check, plan_sim
+from repro.core.cv import _fold_masks, _transition_idx
+from repro.core.study import Plan, plan_to_dict, run_plan
+from repro.data.svm_suite import DATASETS, kfold_chunks, make_dataset
+from repro.service import (PlanRejectedByServer, StudyClient, StudyServer,
+                           StudyService)
+from repro.svm import DenseKernel, kernel_matrix
+from repro.svm.scheduler import (budget_sources, bucket_width, order_capped,
+                                 possible_widths, select_capped)
+from repro.svm.sources import KernelSpec, pick_victim
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def _setup(name, n=48, k=3):
+    ds = make_dataset(name, n_override=n)
+    X = jnp.asarray(ds.X)
+    y = jnp.asarray(ds.y, jnp.float64)
+    chunks = kfold_chunks(n, k, seed=0)
+    nn = chunks.size
+    return ds, X[:nn], y[:nn], chunks, jnp.asarray(_fold_masks(chunks))
+
+
+def _fold_chain_plan(sources, y, masks, chunks, C, *, folds=3, **knobs):
+    plan = Plan(sources=dict(sources), y=y, chunk_iters=64,
+                lane_quantum=2, **knobs)
+    n = y.shape[0]
+    for key in sources:
+        plan.lane((key, 0), source=key, train_mask=masks[0], C=C,
+                  alpha0=jnp.zeros(n), f0=-y)
+        for h in range(1, folds):
+            S, R, T = _transition_idx(chunks, h - 1, h)
+            plan.lane((key, h), source=key, train_mask=masks[h], C=C,
+                      dep=(key, h - 1), transform="fold",
+                      params=dict(method="sir", S_idx=S, R_idx=R, T_idx=T))
+        for h in range(folds):
+            plan.evaluate((key, h), chunks[h])
+    return plan
+
+
+def _assert_trace_equal(sim_events, live_events):
+    if sim_events == live_events:
+        return
+    for i, (a, b) in enumerate(zip(sim_events, live_events)):
+        assert a == b, f"first divergence at event {i}: sim {a!r} != " \
+                       f"live {b!r}"
+    raise AssertionError(f"trace length mismatch: sim {len(sim_events)} "
+                         f"!= live {len(live_events)}")
+
+
+# ------------------------------------------------ suite-wide trace parity
+
+@pytest.mark.parametrize("name", DATASETS)
+def test_trace_parity_budgeted_grid(name):
+    """Budgeted 3-source grid with dep chains and checkpoints: the
+    simulated trace equals the instrumented live trace event-for-event,
+    on every suite dataset."""
+    ds, X, y, chunks, masks = _setup(name)
+    n = int(y.shape[0])
+    sources = {s: KernelSpec(X=X, gamma=s * ds.gamma, n=n)
+               for s in (0.5, 1.0, 2.0)}
+    plan = _fold_chain_plan(sources, y, masks, chunks, ds.C,
+                            cache_bytes=2 * n * n * 8, max_width=4)
+    events, pool = plan_sim.dry_run(plan, snapshot_every=3)
+    oracle = plan_sim.oracle_from_trace(events)
+    sa = plan_sim.simulate_plan(plan, oracle=oracle, snapshot_every=3)
+    _assert_trace_equal(sa.events, events)
+    assert sa.chunks == pool.chunk_count
+    assert sa.checkpoints == sum(1 for e in events if e[0] == "checkpoint")
+    assert sa.peak_resident_bytes == max(
+        e[2] for e in events if e[0] == "resident")
+    assert sa.materializations == sum(
+        1 for e in events if e[0] == "materialize")
+
+
+@pytest.mark.parametrize("name", DATASETS)
+def test_trace_parity_shrink_enabled(name):
+    """Shrink-enabled lanes: the recorded per-dispatch cap sequences
+    replay exactly (shrink lifecycle is data-dependent, so the oracle
+    carries them)."""
+    ds, X, y, chunks, masks = _setup(name)
+    n = int(y.shape[0])
+    sources = {s: KernelSpec(X=X, gamma=s * ds.gamma, n=n)
+               for s in (1.0, 2.0)}
+    plan = _fold_chain_plan(sources, y, masks, chunks, ds.C,
+                            shrink_every=128, max_width=4)
+    events, pool = plan_sim.dry_run(plan, snapshot_every=5)
+    oracle = plan_sim.oracle_from_trace(events, shrink=True)
+    sa = plan_sim.simulate_plan(plan, oracle=oracle, snapshot_every=5)
+    _assert_trace_equal(sa.events, events)
+
+
+@pytest.mark.parametrize("name", DATASETS)
+def test_trace_parity_two_tenant_service(name):
+    """The daemon's shape: two tenants' namespaced plans (with a dedup'd
+    shared source) interleaved in one pool — ``simulate_plans`` replays
+    the merged schedule, tenant round-robin and shares events included."""
+    ds, X, y, chunks, masks = _setup(name)
+    n = int(y.shape[0])
+    gam = {s: KernelSpec(X=X, gamma=s * ds.gamma, n=n)
+           for s in (0.5, 1.0, 2.0)}
+    plan_a = _fold_chain_plan({0.5: gam[0.5], 1.0: gam[1.0]}, y, masks,
+                              chunks, ds.C, max_resident=3)
+    plan_b = _fold_chain_plan({1.0: gam[1.0], 2.0: gam[2.0]}, y, masks,
+                              chunks, ds.C, max_resident=3)
+    service = StudyService(chunk_iters=64, lane_quantum=2, max_width=4,
+                           max_resident=3)
+    events = []
+    service.pool.on_trace = events.append
+    service.submit("alice", "a", json.loads(json.dumps(
+        plan_to_dict(plan_a))), lambda m: None)
+    service.submit("bob", "b", json.loads(json.dumps(
+        plan_to_dict(plan_b))), lambda m: None)
+    entries = [(st.tenant, st.plan) for st in service._studies.values()]
+    while service.pool.step():
+        pass
+    oracle = plan_sim.oracle_from_trace(events)
+    sa = plan_sim.simulate_plans(entries, oracle=oracle)
+    _assert_trace_equal(sa.events, events)
+    assert set(sa.tenant_lane_chunks) == {"'alice'", "'bob'"}
+    assert any(e[0] == "shares" for e in events)
+
+
+def test_bound_oracles_bracket_exact():
+    """min/max bounding oracles bracket the exact schedule's chunk count
+    and resident peak."""
+    ds, X, y, chunks, masks = _setup("heart")
+    n = int(y.shape[0])
+    sources = {s: KernelSpec(X=X, gamma=s * ds.gamma, n=n)
+               for s in (0.5, 2.0)}
+    plan = _fold_chain_plan(sources, y, masks, chunks, ds.C,
+                            cache_bytes=2 * n * n * 8)
+    events, _ = plan_sim.dry_run(plan)
+    exact = plan_sim.simulate_plan(
+        plan, oracle=plan_sim.oracle_from_trace(events))
+    lo = plan_sim.simulate_plan(plan, oracle=plan_sim.BoundOracle("min"))
+    hi = plan_sim.simulate_plan(
+        plan, oracle=plan_sim.BoundOracle(
+            "max", horizon=max(exact.n_iters.values()) + plan.chunk_iters))
+    assert lo.chunks <= exact.chunks <= hi.chunks
+    assert lo.peak_resident_bytes <= exact.peak_resident_bytes \
+        <= hi.peak_resident_bytes
+    assert lo.lane_chunks <= exact.lane_chunks <= hi.lane_chunks
+
+
+def test_exact_oracle_missing_lane_raises():
+    with pytest.raises(KeyError, match="no n_iter"):
+        plan_sim.ExactOracle({}).target("lane", 100)
+    with pytest.raises(ValueError, match="horizon"):
+        plan_sim.BoundOracle("max")
+    with pytest.raises(ValueError, match="unknown bound"):
+        plan_sim.BoundOracle("median")
+
+
+# ------------------------------------- time-resolved admission findings
+
+def _pinned_plus_two_managed():
+    """The crafted case the shape-only gate admits: a pinned dense
+    kernel plus two managed specs, budgeted so the worst single managed
+    source fits on top of the pinned bytes but the schedule co-holds
+    both managed kernels."""
+    ds, X, y, chunks, masks = _setup("heart", n=60)
+    n = int(y.shape[0])
+    dense = DenseKernel(kernel_matrix(X, X, gamma=ds.gamma))
+    spec1 = KernelSpec(X=X, gamma=0.5 * ds.gamma, n=n)
+    spec2 = KernelSpec(X=X, gamma=2.0 * ds.gamma, n=n)
+    pinned_b = int(dense.K.size * dense.K.dtype.itemsize)
+    managed_b = n * n * np.dtype(spec1.dtype).itemsize
+    budget = pinned_b + managed_b + managed_b // 4
+    plan = Plan(sources={"pin": dense, "g1": spec1, "g2": spec2}, y=y,
+                chunk_iters=64, lane_quantum=2, cache_bytes=budget)
+    for key in ("pin", "g1", "g2"):
+        plan.lane((key, 0), source=key, train_mask=masks[0], C=ds.C,
+                  alpha0=jnp.zeros(n), f0=-y)
+        if key != "pin":            # raw-K sources cannot back an eval
+            plan.evaluate((key, 0), chunks[0])
+    return plan, budget
+
+
+def test_time_resolved_infeasibility_caught():
+    """The acceptance case: worst single source fits (the shape gate
+    admits), but the time-resolved peak exceeds cache_bytes — strict
+    mode rejects with ``cache-infeasible-time``."""
+    plan, budget = _pinned_plus_two_managed()
+    pa0 = plan_check.analyze_plan(plan, simulate="off")
+    assert not pa0.report.errors        # the old gate admits it
+    with pytest.raises(plan_check.PlanRejected) as exc:
+        plan_check.check_plan(plan)
+    rules = {f.rule for f in exc.value.analysis.report.errors}
+    assert "cache-infeasible-time" in rules
+    assert exc.value.analysis.sim["min"]["peak_resident_bytes"] > budget
+
+
+def test_daemon_rejects_time_infeasible_with_structured_analysis():
+    plan, budget = _pinned_plus_two_managed()
+    service = StudyService(chunk_iters=64, lane_quantum=2,
+                           cache_bytes=budget)
+    emitted = []
+    service.submit("alice", "bad", json.loads(json.dumps(
+        plan_to_dict(plan))), emitted.append)
+    [msg] = emitted
+    assert msg["type"] == "rejected"
+    assert "cache-infeasible-time" in {f["rule"] for f in msg["findings"]}
+    assert msg["analysis"]["sim"]["min"]["peak_resident_bytes"] > budget
+    assert not service._studies           # nothing entered the pool
+
+
+def test_sim_summaries_attached_on_admission():
+    """An admissible plan's analysis carries min/max schedule summaries
+    (the daemon's admitted path runs the simulator too)."""
+    ds, X, y, chunks, masks = _setup("heart")
+    n = int(y.shape[0])
+    plan = _fold_chain_plan(
+        {1.0: KernelSpec(X=X, gamma=ds.gamma, n=n)}, y, masks, chunks,
+        ds.C, cache_bytes=2 * n * n * 8)
+    pa = plan_check.check_plan(plan)
+    assert set(pa.sim) == {"min", "max"}
+    assert pa.sim["min"]["lane_chunks"] <= pa.sim["max"]["lane_chunks"]
+    assert pa.to_json()["sim"]["max"]["oracle"] == "bound:max"
+
+
+# -------------------------------------------------- per-tenant budgets
+
+def _single_lane_plan(**knobs):
+    ds, X, y, chunks, masks = _setup("heart", n=60)
+    n = int(y.shape[0])
+    plan = Plan(sources={"g": KernelSpec(X=X, gamma=ds.gamma, n=n)}, y=y,
+                chunk_iters=64, lane_quantum=2, **knobs)
+    plan.lane(("g", 0), source="g", train_mask=masks[0], C=ds.C,
+              alpha0=jnp.zeros(n), f0=-y)
+    plan.evaluate(("g", 0), chunks[0])
+    return plan
+
+
+def test_tenant_chunk_budget_rejects_and_admits():
+    plan = _single_lane_plan()
+    wire = json.loads(json.dumps(plan_to_dict(plan)))
+    tight = StudyService(chunk_iters=64, lane_quantum=2,
+                         plan_chunk_budget=2)
+    assert tight.pool_contract()["plan_chunk_budget"] == 2
+    emitted = []
+    tight.submit("bob", "big", wire, emitted.append)
+    [msg] = emitted
+    assert msg["type"] == "rejected"
+    assert "tenant-budget" in {f["rule"] for f in msg["findings"]}
+
+    roomy = StudyService(chunk_iters=64, lane_quantum=2,
+                         plan_chunk_budget=10_000,
+                         plan_bytes_budget=10 ** 9)
+    emitted = []
+    roomy.submit("bob", "ok", wire, emitted.append)
+    assert emitted[0]["type"] == "admitted"
+
+
+def test_tenant_bytes_budget_rejects():
+    plan = _single_lane_plan()
+    service = StudyService(chunk_iters=64, lane_quantum=2,
+                           plan_bytes_budget=100)   # < one kernel
+    emitted = []
+    service.submit("bob", "fat", json.loads(json.dumps(
+        plan_to_dict(plan))), emitted.append)
+    [msg] = emitted
+    assert msg["type"] == "rejected"
+    bad = [f for f in msg["findings"] if f["rule"] == "tenant-budget"]
+    assert bad and bad[0]["symbol"] == "resident_bytes"
+
+
+def test_rejection_round_trips_the_wire():
+    """Satellite: the full structured analysis crosses the real socket —
+    ``PlanRejectedByServer.analysis`` carries findings AND sim bounds."""
+    import os
+    import time
+    import uuid
+    sock = f"/tmp/plan-sim-{uuid.uuid4().hex[:8]}.sock"
+    plan, budget = _pinned_plus_two_managed()
+    service = StudyService(chunk_iters=64, lane_quantum=2,
+                           cache_bytes=budget)
+    server = StudyServer(sock, service)
+    t = threading.Thread(target=server.serve_forever, daemon=True)
+    t.start()
+    for _ in range(200):
+        if os.path.exists(sock):
+            break
+        time.sleep(0.05)
+    try:
+        with StudyClient(sock, "alice") as cli:
+            assert cli.pool_contract["plan_chunk_budget"] == 0
+            with pytest.raises(PlanRejectedByServer) as exc:
+                cli.submit("bad", plan)
+            err = exc.value
+            assert {f["rule"] for f in err.findings} >= \
+                {"cache-infeasible-time"}
+            assert err.analysis["sim"]["min"]["peak_resident_bytes"] \
+                > budget
+            assert err.analysis["findings"] == err.findings
+            cli.shutdown()
+        t.join(timeout=30)
+    finally:
+        server.stop_accepting()
+        if os.path.exists(sock):
+            os.unlink(sock)
+
+
+# ------------------------------------------- pure-function properties
+
+def _check_width_properties(peak, quantum, max_width):
+    # max_width caps the SELECTION (k), not the bucketed width — a group
+    # can never exceed the cap, so that's the live k range
+    widths = possible_widths(peak, quantum, max_width)
+    cap = min(peak, max_width) if max_width else peak
+    for k in range(1, cap + 1):
+        w = bucket_width(k, quantum)
+        assert w in widths, (k, peak, quantum, max_width, widths)
+
+
+def _check_packing_properties(rng):
+    class L:
+        def __init__(self, i, source, tenant, served):
+            self.i, self.source, self.tenant, self.served = \
+                i, source, tenant, served
+
+        def __repr__(self):
+            return f"L{self.i}"
+
+    n_src = rng.randint(1, 4)
+    srcs = [f"s{j}" for j in range(n_src)]
+    tenants = [None] if rng.random() < 0.4 else \
+        [f"t{j}" for j in range(rng.randint(1, 3))]
+    lanes = [L(i, rng.choice(srcs), rng.choice(tenants),
+               rng.randint(0, 5)) for i in range(rng.randint(1, 12))]
+    resident_set = {s for s in srcs if rng.random() < 0.5}
+    sticky = rng.choice(srcs + [None])
+    max_width = rng.randint(1, 8)
+    tenant_served = {t: rng.randint(0, 20) for t in tenants}
+    kw = dict(sticky=sticky, resident=lambda s: s in resident_set,
+              served=lambda ln: ln.served, source=lambda ln: ln.source)
+    sel = select_capped(lanes, max_width=max_width,
+                        tenant=lambda ln: ln.tenant,
+                        tenant_served=tenant_served, **kw)
+    assert len(sel) == min(max_width, len(lanes))
+    assert len(set(map(id, sel))) == len(sel)
+    assert all(ln in lanes for ln in sel)
+    order = order_capped(lanes, **kw)
+    assert sorted(map(id, order)) == sorted(map(id, lanes))
+    if len(set(ln.tenant for ln in lanes)) <= 1:
+        assert sel == order[:max_width]   # single-tenant = plain priority
+    # sticky-source lanes sort ahead of the rest
+    if sticky is not None:
+        head = [ln.source == sticky for ln in order]
+        assert head == sorted(head, reverse=True)
+
+    # budget_sources: pinned pass through, managed prefix honors fits
+    nbytes = {s: rng.randint(1, 100) for s in srcs}
+    pinned_set = {s for s in srcs if rng.random() < 0.3}
+    budget = rng.randint(50, 250)
+    out = budget_sources(
+        [ln.source for ln in lanes], budgeted=True,
+        pinned=lambda s: s in pinned_set,
+        resident=lambda s: s in resident_set, sticky=sticky,
+        nbytes=nbytes.__getitem__,
+        fits=lambda c, b: b <= budget)
+    used = {ln.source for ln in lanes}
+    assert out <= used
+    assert used & pinned_set <= out       # pinned never budgeted out
+    taken = [s for s in out if s not in pinned_set]
+    if len(used) > 1:
+        assert sum(nbytes[s] for s in taken) <= budget or len(taken) == 1
+
+    # pick_victim: a member; never the sticky key when another exists
+    if srcs:
+        keys = list(srcs)
+        victim = pick_victim(
+            keys, sticky=sticky,
+            distance=lambda k: rng.randint(0, 3))
+        assert victim in keys
+        if sticky in keys and len(keys) > 1:
+            assert victim != sticky
+
+
+if HAVE_HYPOTHESIS:                                   # pragma: no cover
+    @settings(max_examples=100, deadline=None)
+    @given(st.integers(1, 64), st.integers(1, 16),
+           st.integers(0, 32))
+    def test_width_bucketing_properties(peak, quantum, max_width):
+        _check_width_properties(peak, quantum, max_width)
+
+    @settings(max_examples=100, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_packing_pure_function_properties(seed):
+        _check_packing_properties(random.Random(seed))
+else:
+    def test_width_bucketing_properties():
+        rng = random.Random(0)
+        for _ in range(300):
+            _check_width_properties(rng.randint(1, 64), rng.randint(1, 16),
+                                    rng.randint(0, 32))
+
+    def test_packing_pure_function_properties():
+        for seed in range(300):
+            _check_packing_properties(random.Random(seed))
+
+
+def test_randomized_lane_graphs_trace_parity():
+    """Randomized graphs/budgets/widths: the live pool and the simulator
+    agree event-for-event — the pure functions ARE the scheduler."""
+    ds, X, y, chunks, masks = _setup("heart", n=36, k=3)
+    n = int(y.shape[0])
+    for seed in range(4):
+        rng = random.Random(seed)
+        n_src = rng.randint(1, 3)
+        sources = {f"s{j}": KernelSpec(X=X, gamma=(0.5 + j) * ds.gamma,
+                                       n=n) for j in range(n_src)}
+        knobs = dict(
+            chunk_iters=rng.choice([32, 64]),
+            lane_quantum=rng.choice([1, 2, 4]),
+            max_width=rng.choice([None, 2, 3]),
+            max_resident=rng.choice([0, 2]),
+            cache_bytes=rng.choice([0, 2 * n * n * 8]))
+        plan = Plan(sources=sources, y=y, **knobs)
+        prev = {}
+        for key in sources:
+            for h in range(rng.randint(1, 3)):
+                lid = (key, h)
+                if h == 0 or rng.random() < 0.5:
+                    # fresh or ``after``-held start
+                    after = prev.get(rng.choice(list(sources))) \
+                        if h > 0 else None
+                    plan.lane(lid, source=key, train_mask=masks[h],
+                              C=ds.C, alpha0=jnp.zeros(n), f0=-y,
+                              after=after)
+                else:
+                    S, R, T = _transition_idx(chunks, h - 1, h)
+                    plan.lane(lid, source=key, train_mask=masks[h],
+                              C=ds.C, dep=(key, h - 1), transform="fold",
+                              params=dict(method="sir", S_idx=S, R_idx=R,
+                                          T_idx=T))
+                plan.evaluate(lid, chunks[h])
+                prev[key] = lid
+        snap = rng.choice([0, 3])
+        events, _ = plan_sim.dry_run(plan, snapshot_every=snap)
+        oracle = plan_sim.oracle_from_trace(events)
+        sa = plan_sim.simulate_plan(plan, oracle=oracle,
+                                    snapshot_every=snap)
+        _assert_trace_equal(sa.events, events)
